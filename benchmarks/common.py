@@ -1,0 +1,55 @@
+"""Shared setup for the paper-reproduction benchmarks.
+
+All benchmarks emit CSV lines  ``name,us_per_call,derived``  where `derived`
+carries the figure-specific metric (final optimality, accuracy, bytes, ...).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def logreg_problem(n_clients=30, m=100, d=20, alpha=50.0, beta=50.0, seed=0,
+                   lam=0.003, x64=True):
+    """The paper's sparse-logistic-regression setup (Section 4.1), with
+    features normalized to unit max row norm (the paper's hand-tuned step
+    sizes imply a similarly tame smoothness constant; see EXPERIMENTS.md)."""
+    if x64:
+        jax.config.update("jax_enable_x64", True)
+    from repro.core.prox import L1
+    from repro.data.synthetic import logistic_heterogeneous
+    from repro.models import logreg
+
+    data = logistic_heterogeneous(n_clients=n_clients, m_per_client=m, d=d,
+                                  alpha=alpha, beta=beta, seed=seed)
+    scale = np.linalg.norm(data.features.reshape(-1, d), axis=1).max()
+    dt = np.float64 if x64 else np.float32
+    data.features = (data.features / scale).astype(dt)
+    data.labels = data.labels.astype(dt)
+    A = data.features.reshape(-1, d)
+    L = float(np.linalg.eigvalsh(A.T @ A / (4 * A.shape[0]))[-1])
+    reg = L1(lam=lam)
+    grad_fn = logreg.make_grad_fn()
+    full_g = logreg.full_gradient_fn(data.features, data.labels)
+    import jax.numpy as jnp
+
+    params0 = {"w": jnp.zeros(d, dt), "b": jnp.zeros((), dt)}
+    return data, reg, grad_fn, full_g, params0, L
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

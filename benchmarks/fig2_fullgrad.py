@@ -1,0 +1,56 @@
+"""Fig. 2 reproduction: sparse logistic regression, FULL gradients,
+tau in {1, 10}; ours vs FedDA vs FedMid vs Fast-FedDA.
+
+Paper claims reproduced:
+  * tau=1: ours == FedDA exactly (identical trajectories);
+  * tau=10: ours converges to machine precision despite heterogeneity +
+    local updates (no B_g residual observed, matching Remark 3.7), while
+    FedDA stalls at a drift floor and FedMid is worst;
+  * ours needs ~1/tau the communication rounds of tau=1 to reach a target.
+"""
+from __future__ import annotations
+
+from benchmarks.common import QUICK, Timer, emit, logreg_problem
+
+
+def rounds_to(hist_opt, evals_at, tol):
+    for r, v in zip(evals_at, hist_opt):
+        if v < tol:
+            return r
+    return -1
+
+
+def main():
+    from repro.core.algorithm import DProxConfig
+    from repro.core.baselines import FastFedDA, FedDA, FedMid
+    from repro.data.synthetic import make_round_batches
+    from repro.fed.simulator import DProxAlgorithm, run
+
+    data, reg, grad_fn, full_g, params0, L = logreg_problem()
+    R = 500 if QUICK else 4000
+    n_evals = 20
+    for tau in (1, 10):
+        eta_g = 15.0
+        eta_tilde = 0.5 / L
+        eta = eta_tilde / (eta_g * tau)
+        supplier = lambda r, rng: make_round_batches(data, tau, None, rng)
+        algs = [
+            DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g)),
+            FedDA(reg, tau, eta, eta_g),
+            FedMid(reg, tau, eta * eta_g, 1.0),
+            FastFedDA(reg, tau, eta0=eta * eta_g, eta_g=eta_g),
+        ]
+        for alg in algs:
+            with Timer() as t:
+                h = run(alg, params0, grad_fn, supplier, data.n_clients, R,
+                        reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
+                        eval_every=max(R // n_evals, 1))
+            us = t.seconds * 1e6 / R
+            final = h.optimality[-1]
+            r_hit = rounds_to(h.optimality, h.rounds, 1e-6)
+            emit(f"fig2/tau{tau}/{alg.name}/final_optimality", us, f"{final:.3e}")
+            emit(f"fig2/tau{tau}/{alg.name}/rounds_to_1e-6", us, r_hit)
+
+
+if __name__ == "__main__":
+    main()

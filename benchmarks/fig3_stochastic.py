@@ -1,0 +1,56 @@
+"""Fig. 3 reproduction: sparse logistic regression with STOCHASTIC gradients,
+batch size b in {1, 20}, tau=20; ours vs FedDA vs Fast-FedDA.
+
+Paper claims reproduced:
+  * ours converges to a noise-floor neighborhood whose size shrinks with b
+    (Theorem 3.5's sigma^2/(n tau b) term);
+  * FedDA adds a drift floor on top of the noise floor;
+  * Fast-FedDA converges slowly due to decaying steps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK, Timer, emit, logreg_problem
+
+
+def main():
+    from repro.core.algorithm import DProxConfig
+    from repro.core.baselines import FastFedDA, FedDA
+    from repro.data.synthetic import make_round_batches
+    from repro.fed.simulator import DProxAlgorithm, run
+
+    # paper: theta=0.0005, m_i=2000, tau=20 -- we keep m at 400 for CPU time
+    data, reg, grad_fn, full_g, params0, L = logreg_problem(
+        m=400, lam=0.0005)
+    tau, eta_g = 20, 8.0
+    eta_tilde = 0.5 / L   # large enough to actually REACH the noise floor
+    eta = eta_tilde / (eta_g * tau)
+    R = 100 if QUICK else 3000
+    tail = 10  # average the last evals to estimate the (noisy) floor
+    floors = {}
+    for b in (1, 20):
+        supplier = lambda r, rng: make_round_batches(data, tau, b, rng)
+        algs = [
+            DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g)),
+            FedDA(reg, tau, eta, eta_g),
+            FastFedDA(reg, tau, eta0=eta * eta_g, eta_g=eta_g),
+        ]
+        for alg in algs:
+            with Timer() as t:
+                h = run(alg, params0, grad_fn, supplier, data.n_clients, R,
+                        reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
+                        eval_every=max(R // 24, 1))
+            us = t.seconds * 1e6 / R
+            floor = float(np.mean(h.optimality[-tail:]))
+            floors[(alg.name, b)] = floor
+            emit(f"fig3/b{b}/{alg.name}/noise_floor", us, f"{floor:.3e}")
+    # derived claim (Thm 3.5): the ||G||^2 floor scales with sigma^2/b, so
+    # the ||G|| floor should shrink ~sqrt(20)=4.47x from b=1 to b=20
+    ratio = floors[("dprox", 1)] / max(floors[("dprox", 20)], 1e-30)
+    emit("fig3/derived/ours_floor_ratio_b1_over_b20", 0.0,
+         f"{ratio:.2f} (sqrt-b prediction: 4.47)")
+
+
+if __name__ == "__main__":
+    main()

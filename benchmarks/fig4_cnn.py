@@ -1,0 +1,58 @@
+"""Fig. 4 reproduction: federated CNN on (synthetic-)MNIST with label-skew
+heterogeneity; test accuracy vs communication rounds, tau in {5, 10},
+ours vs FedDA.  Non-convex + non-smooth (g = theta*||x||_1).
+
+Paper claim reproduced: ours reaches higher accuracy in fewer rounds than
+FedDA at both tau values.  (Dataset is the offline procedural MNIST
+substitute -- see repro/data/mnist_like.py and DESIGN.md.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, Timer, emit
+
+
+def main():
+    from repro.core.algorithm import DProxConfig
+    from repro.core.baselines import FedDA
+    from repro.core.prox import L1
+    from repro.data.mnist_like import (generate, heterogeneous_split,
+                                       sample_round_batches)
+    from repro.fed.simulator import DProxAlgorithm, run
+    from repro.models import cnn
+
+    n_train, n_test = (4000, 1000) if QUICK else (12000, 2500)
+    tx, ty, sx, sy = generate(n_train=n_train, n_test=n_test, seed=0)
+    data = heterogeneous_split(tx, ty, sx, sy, n_clients=10)
+    test_x, test_y = jnp.asarray(data.test_x), jnp.asarray(data.test_y)
+    reg = L1(lam=1e-4)
+    grad_fn = cnn.make_grad_fn()
+    p0 = cnn.init_params(jax.random.PRNGKey(0))
+    b = 10
+    R = 30 if QUICK else 150
+    eta, eta_g = 0.005, 1.0
+
+    def eval_fn(params):
+        return {"test_acc": cnn.accuracy(params, test_x, test_y)}
+
+    for tau in (5, 10):
+        supplier = lambda r, rng: sample_round_batches(data, tau, b, rng)
+        ours = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
+        fedda = FedDA(reg, tau, eta, eta_g)
+        for alg in (ours, fedda):
+            with Timer() as t:
+                h = run(alg, p0, grad_fn, supplier, 10, R,
+                        eval_fn=eval_fn, eval_every=max(R // 10, 1))
+            us = t.seconds * 1e6 / R
+            accs = h.extra["test_acc"]
+            emit(f"fig4/tau{tau}/{alg.name}/final_test_acc", us,
+                 f"{accs[-1]:.4f}")
+            emit(f"fig4/tau{tau}/{alg.name}/best_test_acc", us,
+                 f"{max(accs):.4f}")
+
+
+if __name__ == "__main__":
+    main()

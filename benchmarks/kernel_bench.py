@@ -1,0 +1,101 @@
+"""Kernel micro-benchmarks.
+
+On this CPU-only container the Pallas kernels run in interpret mode (validated
+for correctness in tests/test_kernels.py); wall-clock there is meaningless.
+What we CAN measure honestly on CPU is the fusion effect at the XLA level:
+the fused jnp expression (what the Pallas kernel computes in one pass) vs the
+naive four-pass formulation, plus the analytic HBM-traffic model for TPU:
+
+    unfused passes:  read zh,g,c, write tmp; read tmp, write zh'; read zh',
+                     write |.|-thresh; read, write z'   ->  ~9 tensor moves
+    fused kernel:    read zh,g,c; write zh', z'         ->   5 tensor moves
+
+We also time flash-vs-naive attention at a 4k sequence (fp32, CPU) where the
+O(S^2) logits materialization already dominates.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _bench(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    # --- fused prox update ---------------------------------------------------
+    n = 4_000_000
+    rng = np.random.default_rng(0)
+    zh = jnp.asarray(rng.normal(size=n), jnp.float32)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    c = jnp.asarray(rng.normal(size=n), jnp.float32)
+    eta, thresh = 0.01, 0.002
+
+    @jax.jit
+    def fused(zh, g, c):
+        upd = zh - eta * (g + c)
+        return upd, jnp.sign(upd) * jnp.maximum(jnp.abs(upd) - thresh, 0.0)
+
+    @jax.jit
+    def unfused(zh, g, c):
+        s = g + c
+        upd = zh - eta * s
+        mag = jnp.abs(upd) - thresh
+        clipped = jnp.maximum(mag, 0.0)
+        return upd, jnp.sign(upd) * clipped
+
+    us_f = _bench(fused, zh, g, c)
+    us_u = _bench(unfused, zh, g, c)
+    emit("kernel/fused_prox/fused_4M_f32", us_f, f"speedup={us_u/us_f:.2f}x")
+    emit("kernel/fused_prox/unfused_4M_f32", us_u, "")
+    emit("kernel/fused_prox/hbm_moves", 0.0, "fused=5,unfused=9")
+
+    # --- flash vs naive attention (CPU, fp32, S=2048) -----------------------
+    b, h, s, d = 1, 4, 2048, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.3, jnp.float32)
+    from repro.kernels import ref
+
+    naive = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, causal=True))
+
+    @jax.jit
+    def blocked(q, k, v):
+        # the flash recurrence expressed in jnp (the kernel's memory shape)
+        bq = 256
+        nq = s // bq
+
+        def one_block(i):
+            qs = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=2)
+            logits = jnp.einsum("bhsd,bhtd->bhst", qs, k) / (d ** 0.5)
+            qpos = i * bq + jnp.arange(bq)[:, None]
+            mask = jnp.arange(s)[None, :] <= qpos
+            logits = jnp.where(mask[None, None], logits, -1e30)
+            p = jax.nn.softmax(logits, axis=-1)
+            return jnp.einsum("bhst,bhtd->bhsd", p, v)
+
+        return jnp.concatenate([one_block(i) for i in range(nq)], axis=2)
+
+    us_n = _bench(naive, q, k, v, iters=5)
+    us_b = _bench(blocked, q, k, v, iters=5)
+    emit("kernel/attention/naive_s2048", us_n, "")
+    emit("kernel/attention/blocked_s2048", us_b, f"speedup={us_n/us_b:.2f}x")
+    emit("kernel/attention/pallas_status", 0.0,
+         "interpret-validated;see tests/test_kernels.py")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark entrypoint: one module per paper table/figure + infra tables.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run   # smoke
+
+Output: CSV lines ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation_schedule, comm_table, fig2_fullgrad,
+                            fig3_stochastic, fig4_cnn, kernel_bench,
+                            roofline_table)
+
+    modules = [
+        ("fig2", fig2_fullgrad),
+        ("fig3", fig3_stochastic),
+        ("fig4", fig4_cnn),
+        ("ablation", ablation_schedule),
+        ("comm", comm_table),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.main()
+        except Exception:
+            failed.append(name)
+            print(f"{name}/ERROR,0,{traceback.format_exc(limit=2)!r}",
+                  file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

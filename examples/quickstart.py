@@ -1,0 +1,51 @@
+"""Quickstart: the paper's algorithm on sparse logistic regression in ~30 lines.
+
+Reproduces the headline phenomenon of Fig. 2 (right): with heterogeneous data
+and tau=10 local steps, the decoupled-prox algorithm with drift correction
+converges to machine precision while FedDA stalls at a drift floor.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core.algorithm import DProxConfig
+from repro.core.baselines import FedDA
+from repro.core.prox import L1
+from repro.data.synthetic import logistic_heterogeneous, make_round_batches
+from repro.fed.simulator import DProxAlgorithm, run
+from repro.models import logreg
+
+# --- problem: 30 clients, heterogeneous (alpha=beta=50), g = 0.003*||x||_1
+data = logistic_heterogeneous(n_clients=30, m_per_client=100, d=20,
+                              alpha=50, beta=50, seed=0)
+scale = np.linalg.norm(data.features.reshape(-1, 20), axis=1).max()
+data.features = (data.features / scale).astype(np.float64)
+data.labels = data.labels.astype(np.float64)
+A = data.features.reshape(-1, 20)
+L_smooth = float(np.linalg.eigvalsh(A.T @ A / (4 * A.shape[0]))[-1])
+
+reg = L1(lam=0.003)
+grad_fn = logreg.make_grad_fn()
+full_g = logreg.full_gradient_fn(data.features, data.labels)
+params0 = logreg.init_params(20, dtype=np.float64)
+
+tau, eta_g = 10, 15.0
+eta_tilde = 0.5 / L_smooth
+eta = eta_tilde / (eta_g * tau)
+supplier = lambda r, rng: make_round_batches(data, tau, None, rng)  # full grads
+
+R = 4000
+ours = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
+fedda = FedDA(reg, tau, eta, eta_g)
+for alg in (ours, fedda):
+    h = run(alg, params0, grad_fn, supplier, 30, R,
+            reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
+            eval_every=R // 8)
+    tail = " <- converges to machine precision" if alg.name == "dprox" \
+        else " <- stalls at the client-drift floor"
+    print(f"{alg.name:>6s} relative optimality ||G(x^r)||/||G(x^1)||:")
+    print("   ", " ".join(f"{v:.1e}" for v in h.optimality), tail)

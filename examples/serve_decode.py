@@ -1,0 +1,52 @@
+"""Example: serve a federated-trained LM with batched requests.
+
+Trains a reduced stablelm-family model federatedly for a few rounds (so the
+served weights really come out of Algorithm 1's post-proximal global model),
+then runs batched prefill+decode through the serving engine.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.algorithm import DProxConfig, global_params, init_state, \
+    make_round_fn
+from repro.core.prox import L1
+from repro.data.synthetic import token_stream_heterogeneous
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+
+cfg = registry.get_smoke("stablelm_1_6b").with_overrides(
+    param_dtype=jnp.float32)
+params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+
+# --- brief federated training (4 clients, heterogeneous bigram corpora)
+n_clients, tau, seq = 4, 2, 64
+streams = token_stream_heterogeneous(n_clients, seq, 32, vocab=cfg.vocab,
+                                     seed=0)
+fcfg = DProxConfig(tau=tau, eta=5e-2, eta_g=2.0)
+reg = L1(lam=1e-7)
+round_fn = jax.jit(make_round_fn(fcfg, reg, T.make_grad_fn(cfg)))
+state = init_state(params, n_clients)
+rng = np.random.default_rng(0)
+for r in range(10):
+    idx = rng.integers(0, streams.shape[1], size=(n_clients, tau, 4))
+    toks = streams[np.arange(n_clients)[:, None, None], idx]
+    batches = {"tokens": jnp.asarray(toks, jnp.int32)}
+    state, info = round_fn(state, batches)
+    if r % 3 == 0:
+        print(f"fed round {r}: loss {float(info['train_loss']):.3f}")
+
+served_params = global_params(reg, fcfg, state)
+
+# --- batched serving
+engine = ServingEngine(cfg, served_params, max_len=seq + 16)
+prompts = streams[:, 0, : seq // 2]  # one prompt per client distribution
+res = engine.generate(prompts, max_new_tokens=8, temperature=0.0)
+print("prompt tails + greedy continuations:")
+for i in range(prompts.shape[0]):
+    print(f"  client {i}: ...{prompts[i, -6:].tolist()} -> "
+          f"{res.tokens[i].tolist()}")
+print("mean decode logprob:", float(res.logprobs.mean()))

@@ -1,0 +1,76 @@
+"""Pytree checkpointing: npz payload + json tree manifest.
+
+Saves any pytree of arrays (model params, full DProxState including the
+per-client correction terms) with dtype/shape manifest so restore can verify
+against a template.  Atomic write (tmp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _storable(v: np.ndarray) -> np.ndarray:
+    """npz only speaks standard numpy dtypes: widen bf16/f8 etc. to f32
+    (lossless for bf16; restore() casts back via the template dtype)."""
+    if v.dtype.kind == "f" and v.dtype.itemsize < 4 and v.dtype != np.float16:
+        return v.astype(np.float32)
+    if v.dtype.kind == "V" or v.dtype.name not in np.sctypeDict:
+        return v.astype(np.float32)
+    return v
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(tree: Any, path: str | os.PathLike, metadata: Optional[dict] = None):
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    manifest = {
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in leaves.items()},
+        "metadata": metadata or {},
+    }
+    with tempfile.NamedTemporaryFile(dir=path.parent, suffix=".tmp",
+                                     delete=False) as f:
+        np.savez(f, __manifest__=json.dumps(manifest),
+                 **{k: _storable(v) for k, v in leaves.items()})
+        tmp = f.name
+    os.replace(tmp, path)
+
+
+def restore(path: str | os.PathLike, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["__manifest__"]))
+        leaves, treedef = _flatten_with_paths(like)
+        out = []
+        for k, template in leaves.items():
+            if k not in z:
+                raise KeyError(f"checkpoint missing leaf {k!r}")
+            arr = z[k]
+            if list(arr.shape) != list(template.shape):
+                raise ValueError(
+                    f"{k}: checkpoint shape {arr.shape} != template "
+                    f"{template.shape}")
+            out.append(jax.numpy.asarray(arr.astype(template.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def metadata(path: str | os.PathLike) -> dict:
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["__manifest__"]))["metadata"]

@@ -1,0 +1,39 @@
+"""Config substrate: input shapes and architecture registry helpers.
+
+The four assigned input shapes.  ``train`` lowers the federated train step
+(Algorithm 1 round); ``prefill`` lowers the prompt-processing forward;
+``decode`` lowers serve_step = ONE new token against a KV/state cache of
+``seq_len`` tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_supported(cfg, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable; reason string when skipped.
+
+    Encoder-only models have no decode step; pure full-attention models skip
+    long_500k unless a sliding-window variant is configured (DESIGN.md
+    documents each skip)."""
+    if shape.kind == "decode" and not cfg.decode_supported:
+        return False, f"{cfg.name} is encoder-only: no decode step"
+    if shape.name == "long_500k" and cfg.long_mode == "skip":
+        return False, f"{cfg.name} has no sub-quadratic long-context variant"
+    return True, ""

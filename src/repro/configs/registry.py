@@ -1,0 +1,40 @@
+"""Architecture registry: ``get(name)`` -> full ArchConfig, ``get_smoke(name)``
+-> the reduced same-family variant used by the CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "stablelm_1_6b",
+    "internvl2_26b",
+    "recurrentgemma_9b",
+    "mistral_nemo_12b",
+    "mamba2_130m",
+    "phi3_medium_14b",
+    "grok_1_314b",
+    "gemma2_9b",
+    "deepseek_v3_671b",
+    "hubert_xlarge",
+]
+
+# CLI aliases with dashes
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def all_configs():
+    return {a: get(a) for a in ARCH_IDS}

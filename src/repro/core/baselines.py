@@ -1,0 +1,407 @@
+"""Baseline federated algorithms used in the paper's experiments (Section 4)
+plus two widely-used smooth-FL baselines for the ablation suite.
+
+All algorithms share one interface so the experiment harness, benchmarks and
+the distributed launcher can swap them freely:
+
+    alg.init(params0, n_clients) -> state
+    alg.make_round_fn(grad_fn)   -> round_fn(state, batches) -> (state, info)
+    alg.global_params(state)     -> deployable model
+    alg.uplink_vectors / downlink_vectors  -> d-dim vectors communicated per
+                                              round per client (Table: comm)
+
+``batches`` leaves have leading dims ``(n_clients, tau, ...)`` exactly as in
+:mod:`repro.core.algorithm`.
+
+Implemented:
+
+  * FedMid   [Yuan et al. 2021]: FedAvg with local *proximal* SGD; suffers the
+    "curse of primal averaging" (averaging post-proximal models destroys
+    sparsity) and client drift.
+  * FedDA    [Yuan et al. 2021]: local dual averaging; server averages in the
+    dual (pre-proximal) space then applies prox.  Structurally this is
+    Algorithm 1 *without* the drift-correction term, which is exactly how the
+    paper configures it (same eta/eta_g); at tau=1 it coincides with ours.
+  * FastFedDA [Bao et al. 2022]: dual averaging with weighted gradient memory
+    and decaying step sizes; communicates TWO vectors per round (weighted
+    gradient sum + model).  We implement the decaying-step variant the paper
+    benchmarks; see DESIGN.md for the (documented) simplifications.
+  * Scaffold [Karimireddy et al. 2020]: control variates, 2 uplink + 2
+    downlink vectors; designed for smooth problems -- we apply the prox at the
+    server as the natural composite extension (marked heuristic).
+  * FedAvg   [McMahan et al. 2017]: smooth baseline, ignores g in the local
+    steps (evaluated on F = f + g).
+  * FedProx  [Li et al. 2020]: local proximal-point term mu/2 ||z - x||^2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prox import Regularizer, Zero
+from repro.utils import tree as tu
+
+Params = Any
+GradFn = Callable[[Params, Any], tuple[jax.Array, Params]]
+
+
+def _client_axis(batches) -> int:
+    return jax.tree_util.tree_leaves(batches)[0].shape[0]
+
+
+def _scan_local(body, carry0, tau):
+    return jax.lax.scan(body, carry0, jnp.arange(tau))
+
+
+class FedAlgorithm:
+    name: str = "base"
+    uplink_vectors: int = 1
+    downlink_vectors: int = 1
+
+    def init(self, params0: Params, n_clients: int):
+        raise NotImplementedError
+
+    def make_round_fn(self, grad_fn: GradFn):
+        raise NotImplementedError
+
+    def global_params(self, state) -> Params:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+
+
+class _XState(NamedTuple):
+    x: Params
+    round: jax.Array
+
+
+@dataclass
+class FedAvg(FedAlgorithm):
+    """Local SGD on f only; plain averaging.  The smooth-FL reference point."""
+
+    tau: int
+    eta: float
+    eta_g: float = 1.0
+    name: str = "fedavg"
+
+    def init(self, params0, n_clients):
+        return _XState(x=params0, round=jnp.zeros((), jnp.int32))
+
+    def make_round_fn(self, grad_fn):
+        def round_fn(state, batches):
+            n = _client_axis(batches)
+            z0 = tu.tree_broadcast_axis0(state.x, n)
+
+            def body(carry, t):
+                z, loss_sum = carry
+                batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
+                losses, grads = jax.vmap(grad_fn)(z, batch_t)
+                z = jax.tree_util.tree_map(lambda zi, g: zi - self.eta * g, z, grads)
+                return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+
+            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
+            mean_z = tu.tree_mean_over_axis0(z_tau)
+            x_next = jax.tree_util.tree_map(
+                lambda x, mz: x + self.eta_g * (mz - x), state.x, mean_z
+            )
+            return _XState(x_next, state.round + 1), {"train_loss": loss_sum / self.tau}
+
+        return round_fn
+
+    def global_params(self, state):
+        return state.x
+
+
+@dataclass
+class FedMid(FedAlgorithm):
+    """Federated mirror descent: local proximal SGD + primal averaging."""
+
+    reg: Regularizer
+    tau: int
+    eta: float
+    eta_g: float = 1.0
+    name: str = "fedmid"
+
+    def init(self, params0, n_clients):
+        return _XState(x=params0, round=jnp.zeros((), jnp.int32))
+
+    def make_round_fn(self, grad_fn):
+        def round_fn(state, batches):
+            n = _client_axis(batches)
+            z0 = tu.tree_broadcast_axis0(state.x, n)
+
+            def body(carry, t):
+                z, loss_sum = carry
+                batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
+                losses, grads = jax.vmap(grad_fn)(z, batch_t)
+                z = jax.tree_util.tree_map(lambda zi, g: zi - self.eta * g, z, grads)
+                z = self.reg.prox(z, self.eta)  # prox INSIDE the local loop
+                return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+
+            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
+            # Primal averaging of post-proximal models: the step that destroys
+            # sparsity ("curse of primal averaging").
+            mean_z = tu.tree_mean_over_axis0(z_tau)
+            x_next = jax.tree_util.tree_map(
+                lambda x, mz: x + self.eta_g * (mz - x), state.x, mean_z
+            )
+            return _XState(x_next, state.round + 1), {"train_loss": loss_sum / self.tau}
+
+        return round_fn
+
+    def global_params(self, state):
+        return state.x
+
+
+class _DualState(NamedTuple):
+    x_bar: Params  # pre-proximal (dual) global model
+    round: jax.Array
+
+
+@dataclass
+class FedDA(FedAlgorithm):
+    """Federated dual averaging, configured as in the paper's experiments.
+
+    Identical to Algorithm 1 with the correction term forced to zero: local
+    updates accumulate gradients in the pre-proximal (dual) iterate, the
+    server averages pre-proximal models and applies the prox.  Coincides with
+    ours at tau=1; drifts for tau>1 under heterogeneity (Fig. 2 right).
+    """
+
+    reg: Regularizer
+    tau: int
+    eta: float
+    eta_g: float
+    name: str = "fedda"
+
+    @property
+    def eta_tilde(self):
+        return self.eta * self.eta_g * self.tau
+
+    def init(self, params0, n_clients):
+        return _DualState(x_bar=params0, round=jnp.zeros((), jnp.int32))
+
+    def make_round_fn(self, grad_fn):
+        def round_fn(state, batches):
+            n = _client_axis(batches)
+            p = self.reg.prox(state.x_bar, self.eta_tilde)
+            z_hat0 = tu.tree_broadcast_axis0(p, n)
+
+            def body(carry, t):
+                z_hat, z, loss_sum = carry
+                batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
+                losses, grads = jax.vmap(grad_fn)(z, batch_t)
+                z_hat = jax.tree_util.tree_map(
+                    lambda zh, g: zh - self.eta * g, z_hat, grads
+                )
+                z = self.reg.prox(z_hat, (t + 1) * self.eta)
+                return (z_hat, z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+
+            (z_hat_tau, _, loss_sum), _ = _scan_local(
+                body, (z_hat0, z_hat0, jnp.float32(0.0)), self.tau
+            )
+            mean_z_hat = tu.tree_mean_over_axis0(z_hat_tau)
+            x_bar_next = jax.tree_util.tree_map(
+                lambda pp, mz: pp + self.eta_g * (mz - pp), p, mean_z_hat
+            )
+            return _DualState(x_bar_next, state.round + 1), {
+                "train_loss": loss_sum / self.tau
+            }
+
+        return round_fn
+
+    def global_params(self, state):
+        return self.reg.prox(state.x_bar, self.eta_tilde)
+
+
+class _FastDAState(NamedTuple):
+    x_bar: Params
+    grad_mem: Params  # weighted gradient memory (server aggregated)
+    round: jax.Array
+
+
+@dataclass
+class FastFedDA(FedAlgorithm):
+    """Fast-FedDA: weighted dual averaging with decaying steps, 2x uplink."""
+
+    reg: Regularizer
+    tau: int
+    eta0: float
+    eta_g: float = 1.0
+    name: str = "fast_fedda"
+    uplink_vectors: int = 2
+
+    def init(self, params0, n_clients):
+        return _FastDAState(
+            x_bar=params0,
+            grad_mem=tu.tree_zeros_like(params0),
+            round=jnp.zeros((), jnp.int32),
+        )
+
+    def make_round_fn(self, grad_fn):
+        def round_fn(state, batches):
+            n = _client_axis(batches)
+            r = state.round.astype(jnp.float32)
+            p = self.reg.prox(state.x_bar, self.eta0 * self.tau)
+            z_hat0 = tu.tree_broadcast_axis0(p, n)
+            mem0 = tu.tree_broadcast_axis0(state.grad_mem, n)
+
+            def body(carry, t):
+                z_hat, z, mem, loss_sum = carry
+                k = r * self.tau + t.astype(jnp.float32)  # global step index
+                eta_k = self.eta0 / jnp.sqrt(k + 1.0)  # decaying step size
+                batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
+                losses, grads = jax.vmap(grad_fn)(z, batch_t)
+                # weighted gradient memory: past gradients keep contributing
+                mem = jax.tree_util.tree_map(
+                    lambda m, g: 0.5 * m + 0.5 * g, mem, grads
+                )
+                z_hat = jax.tree_util.tree_map(
+                    lambda zh, m: zh - eta_k * m, z_hat, mem
+                )
+                z = self.reg.prox(z_hat, (t + 1) * self.eta0)
+                return (z_hat, z, mem, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+
+            (z_hat_tau, _, mem_tau, loss_sum), _ = _scan_local(
+                body, (z_hat0, z_hat0, mem0, jnp.float32(0.0)), self.tau
+            )
+            mean_z_hat = tu.tree_mean_over_axis0(z_hat_tau)
+            mean_mem = tu.tree_mean_over_axis0(mem_tau)  # 2nd uplink vector
+            x_bar_next = jax.tree_util.tree_map(
+                lambda pp, mz: pp + self.eta_g * (mz - pp), p, mean_z_hat
+            )
+            return _FastDAState(x_bar_next, mean_mem, state.round + 1), {
+                "train_loss": loss_sum / self.tau
+            }
+
+        return round_fn
+
+    def global_params(self, state):
+        return self.reg.prox(state.x_bar, self.eta0 * self.tau)
+
+
+class _ScaffoldState(NamedTuple):
+    x: Params
+    c: Params  # server control variate
+    ci: Params  # per-client control variates (leading client axis)
+    round: jax.Array
+
+
+@dataclass
+class Scaffold(FedAlgorithm):
+    """Scaffold with server-side prox as the composite extension (heuristic).
+
+    Communicates the model delta AND the control-variate delta: 2 uplink and
+    2 downlink d-dim vectors per round -- the extra signalling the paper's
+    algorithm avoids (Section 2.2 item 3).
+    """
+
+    reg: Regularizer
+    tau: int
+    eta: float
+    eta_g: float = 1.0
+    name: str = "scaffold"
+    uplink_vectors: int = 2
+    downlink_vectors: int = 2
+
+    def init(self, params0, n_clients):
+        z = tu.tree_zeros_like(params0)
+        return _ScaffoldState(
+            x=params0,
+            c=z,
+            ci=tu.tree_broadcast_axis0(z, n_clients),
+            round=jnp.zeros((), jnp.int32),
+        )
+
+    def make_round_fn(self, grad_fn):
+        def round_fn(state, batches):
+            n = _client_axis(batches)
+            y0 = tu.tree_broadcast_axis0(state.x, n)
+
+            def body(carry, t):
+                y, loss_sum = carry
+                batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
+                losses, grads = jax.vmap(grad_fn)(y, batch_t)
+                y = jax.tree_util.tree_map(
+                    lambda yi, g, cii, cc: yi - self.eta * (g - cii + cc[None]),
+                    y,
+                    grads,
+                    state.ci,
+                    state.c,
+                )
+                return (y, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+
+            (y_tau, loss_sum), _ = _scan_local(body, (y0, jnp.float32(0.0)), self.tau)
+            # ci+ = ci - c + (x - y_tau)/(tau*eta)   (Scaffold option II)
+            ci_next = jax.tree_util.tree_map(
+                lambda cii, cc, x, y: cii
+                - cc[None]
+                + (x[None] - y) / (self.tau * self.eta),
+                state.ci,
+                state.c,
+                state.x,
+                y_tau,
+            )
+            mean_y = tu.tree_mean_over_axis0(y_tau)
+            x_next = jax.tree_util.tree_map(
+                lambda x, my: x + self.eta_g * (my - x), state.x, mean_y
+            )
+            x_next = self.reg.prox(x_next, self.eta * self.tau)  # heuristic prox
+            c_next = tu.tree_mean_over_axis0(ci_next)
+            return _ScaffoldState(x_next, c_next, ci_next, state.round + 1), {
+                "train_loss": loss_sum / self.tau
+            }
+
+        return round_fn
+
+    def global_params(self, state):
+        return state.x
+
+
+@dataclass
+class FedProx(FedAlgorithm):
+    """FedProx: local objective f_i(z) + mu/2 ||z - x||^2, prox-SGD steps."""
+
+    reg: Regularizer
+    tau: int
+    eta: float
+    mu: float = 0.1
+    eta_g: float = 1.0
+    name: str = "fedprox"
+
+    def init(self, params0, n_clients):
+        return _XState(x=params0, round=jnp.zeros((), jnp.int32))
+
+    def make_round_fn(self, grad_fn):
+        def round_fn(state, batches):
+            n = _client_axis(batches)
+            z0 = tu.tree_broadcast_axis0(state.x, n)
+
+            def body(carry, t):
+                z, loss_sum = carry
+                batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
+                losses, grads = jax.vmap(grad_fn)(z, batch_t)
+                z = jax.tree_util.tree_map(
+                    lambda zi, g, x: zi - self.eta * (g + self.mu * (zi - x[None])),
+                    z,
+                    grads,
+                    state.x,
+                )
+                z = self.reg.prox(z, self.eta)
+                return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+
+            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
+            mean_z = tu.tree_mean_over_axis0(z_tau)
+            x_next = jax.tree_util.tree_map(
+                lambda x, mz: x + self.eta_g * (mz - x), state.x, mean_z
+            )
+            return _XState(x_next, state.round + 1), {"train_loss": loss_sum / self.tau}
+
+        return round_fn
+
+    def global_params(self, state):
+        return state.x

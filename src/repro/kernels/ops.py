@@ -1,0 +1,93 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These adapt arbitrary parameter pytrees / GQA head layouts to the kernels'
+tiled layouts, and select interpret mode automatically on non-TPU backends so
+the same call sites work on CPU (tests) and TPU (production).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_prox, flash_attention as fa
+
+LANES = fused_prox.LANES
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to_tiles(flat, block_rows):
+    tile = block_rows * LANES
+    n = flat.shape[0]
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, LANES), n
+
+
+def fused_local_update(z_hat, grads, c, eta, thresh, *, interpret=None,
+                       block_rows=fused_prox.BLOCK_ROWS):
+    """Fused Algorithm-1 local update + L1 prox over a whole pytree.
+
+    Returns (z_hat_next, z_next) with the same structure/shapes/dtypes.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    leaves_zh, treedef = jax.tree_util.tree_flatten(z_hat)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_c = treedef.flatten_up_to(c)
+    out_zh, out_z = [], []
+    for zh, g, ci in zip(leaves_zh, leaves_g, leaves_c):
+        flat, n = _pad_to_tiles(zh.reshape(-1), block_rows)
+        gflat, _ = _pad_to_tiles(g.reshape(-1).astype(zh.dtype), block_rows)
+        cflat, _ = _pad_to_tiles(ci.reshape(-1).astype(zh.dtype), block_rows)
+        zh2, z2 = fused_prox.fused_local_update_2d(
+            flat, gflat, cflat, eta, thresh,
+            interpret=interpret, block_rows=block_rows)
+        out_zh.append(zh2.reshape(-1)[:n].reshape(zh.shape))
+        out_z.append(z2.reshape(-1)[:n].reshape(zh.shape))
+    return (jax.tree_util.tree_unflatten(treedef, out_zh),
+            jax.tree_util.tree_unflatten(treedef, out_z))
+
+
+def fused_local_update_step(reg, eta, t, z_hat, grads, c, *,
+                            interpret_ok=True):
+    """Drop-in for repro.core.algorithm.local_update_step when reg is L1."""
+    from repro.core.prox import L1
+
+    assert isinstance(reg, L1), "fused kernel path requires the L1 regularizer"
+    thresh = (t + 1) * eta * reg.lam
+    return fused_local_update(z_hat, grads, c, eta, thresh,
+                              interpret=None if interpret_ok else False)
+
+
+def gqa_flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                        interpret=None, bq=None, bk=None):
+    """Flash attention for (B, S, H, D) activations with K kv heads.
+
+    Repeats kv heads to match q heads (GQA), transposes to the kernel's
+    (B, H, S, D) layout, and picks block sizes that divide S.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    rep = h // kh
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = bq or min(fa.DEFAULT_BQ, s)
+    bk = bk or min(fa.DEFAULT_BK, s)
+    while s % bq:
+        bq //= 2
+    while s % bk:
+        bk //= 2
+    out = fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                             softcap=softcap, bq=bq, bk=bk,
+                             interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

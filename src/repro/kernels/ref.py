@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernel tests sweep shapes/dtypes and
+assert_allclose against these functions (interpret=True on CPU, compiled on
+real TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_local_update(z_hat, grads, c, eta, thresh):
+    """Algorithm 1 Lines 9-10 for g = lam*||.||_1, fused:
+
+        z_hat' = z_hat - eta * (grads + c)
+        z'     = sign(z_hat') * max(|z_hat'| - thresh, 0)
+
+    where thresh = (t+1) * eta * lam.  Elementwise over any shape.
+    """
+    z_hat_next = z_hat - eta * (grads + c)
+    z_next = jnp.sign(z_hat_next) * jnp.maximum(
+        jnp.abs(z_hat_next) - thresh, 0.0
+    ).astype(z_hat_next.dtype)
+    return z_hat_next, z_next.astype(z_hat_next.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None):
+    """Reference attention.  q,k,v: (B, H, S, D).  Returns (B, H, S, D).
+
+    GQA is handled by the ops wrapper (kv heads repeated before the call).
+    """
+    b, h, s, d = q.shape
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)

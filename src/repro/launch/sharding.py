@@ -1,0 +1,189 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model/init code annotates every tensor dimension with a *logical* axis name
+(see repro.models.layers).  This module resolves those names to mesh
+PartitionSpecs under a rule table, with:
+
+  * preference lists  -- a logical axis may try several mesh axes
+    (e.g. ``expert: ["model"]`` works for deepseek's 256 experts but fails
+    divisibility for grok's 8, falling through to tensor-parallel experts);
+  * priorities        -- dims are assigned in priority order so e.g. kv_heads
+    claims 'model' before cache_seq does;
+  * divisibility + no-reuse constraints enforced automatically.
+
+Two federated placement plans (DESIGN.md 'Distribution'):
+
+  Plan A (client-per-datagroup) -- archs that fit 16-way sharded:
+      server model x_bar: fully sharded over (data, model) [FSDP+TP];
+      per-client state (c, z_hat, z): client axis -> 'data', params -> 'model'.
+      The broadcast P(x_bar) -> clients lowers to an all-gather over 'data'
+      (the FL downlink); the client mean lowers to a reduce over 'data' (the
+      FL uplink): Algorithm 1's one-vector-per-round is visible in the HLO.
+
+  Plan B (fully-sharded / pod-per-client) -- 26B/314B/671B archs:
+      every federated tensor sharded over (data, model); the client axis maps
+      to 'pod' on the multi-pod mesh (cross-silo FL: one client = one pod)
+      and has size 1 on a single pod.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+Rule = tuple[Sequence, int]  # (mesh-axis preference list, priority)
+
+
+def _axis_size(mesh, entry) -> int | None:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        if n not in mesh.shape:
+            return None
+        size *= mesh.shape[n]
+    return size
+
+
+def spec_for(shape, logical_axes, rules: Mapping[str, Rule], mesh) -> PartitionSpec:
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    order = sorted(
+        range(len(shape)),
+        key=lambda i: rules.get(logical_axes[i], ((), 99))[1],
+    )
+    used: set = set()
+    assign: dict[int, Any] = {}
+    for i in order:
+        prefs, _ = rules.get(logical_axes[i], ((), 99))
+        for entry in prefs:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if any(n in used for n in names):
+                continue
+            sz = _axis_size(mesh, entry)
+            if sz is None or sz == 1:
+                continue
+            if shape[i] % sz != 0:
+                continue
+            assign[i] = entry
+            used.update(names)
+            break
+    return PartitionSpec(*[assign.get(i) for i in range(len(shape))])
+
+
+def tree_shardings(tree, spec_tree, rules, mesh):
+    """NamedShardings for a params/cache pytree given its logical-spec tree."""
+    is_spec = lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x)
+
+    def one(x, ax):
+        return NamedSharding(mesh, spec_for(x.shape, ax, rules, mesh))
+
+    return jax.tree_util.tree_map(one, tree, spec_tree,
+                                  is_leaf=lambda x: False)
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+_COMMON_PARAMS: dict[str, Rule] = {
+    # heavy sharded axes (priority asc = assigned first)
+    "vocab": (["model", "data"], 0),
+    "expert": (["model", "data"], 0),
+    "mlp": (["model", "data"], 1),
+    "expert_mlp": (["model", "data"], 1),
+    "heads": (["model", "data"], 1),
+    "rnn": (["model", "data"], 1),
+    "kv_heads": (["model", "data"], 2),
+    "kv_lora": (["model", "data"], 2),
+    "embed": (["data"], 3),  # FSDP axis
+    # never sharded
+    "head_dim": ((), 9), "qk_dim": ((), 9), "v_dim": ((), 9),
+    "state": ((), 9), "conv": ((), 9), "layers": ((), 9), "none": ((), 9),
+}
+
+
+def server_param_rules(plan: str) -> dict[str, Rule]:
+    """x_bar / deployed params: fully sharded in both plans."""
+    return dict(_COMMON_PARAMS)
+
+
+def client_state_rules(plan: str) -> dict[str, Rule]:
+    """Per-client federated tensors (c, z_hat, z, grad accumulators)."""
+    r = dict(_COMMON_PARAMS)
+    if plan == "A":
+        # client axis claims 'data' (and 'pod' too on the multi-pod mesh);
+        # inner dims then only get 'model'
+        r["client"] = ([("pod", "data"), "data"], 0)
+    else:
+        r["client"] = (["pod"], 0)
+    return r
+
+
+def batch_rules(plan: str) -> dict[str, Rule]:
+    if plan == "A":
+        return {
+            "client": ([("pod", "data"), "data"], 0),
+            "batch": ((), 5), "seq": ((), 9), "tau": ((), 9), "none": ((), 9),
+        }
+    if plan == "A_dp":
+        # hillclimb variant: shard the per-client batch over 'model' too, so
+        # the inner step is batch-parallel (params all-gathered per layer)
+        # instead of tensor-parallel (activations all-reduced per layer).
+        return {
+            "client": ([("pod", "data"), "data"], 0),
+            "batch": (["model"], 1), "seq": ((), 9), "tau": ((), 9),
+            "none": ((), 9),
+        }
+    return {
+        "client": (["pod"], 0),
+        "batch": (["data"], 1), "seq": ((), 9), "tau": ((), 9), "none": ((), 9),
+    }
+
+
+def serving_param_rules() -> dict[str, Rule]:
+    return dict(_COMMON_PARAMS)
+
+
+def cache_rules() -> dict[str, Rule]:
+    return {
+        "batch": ([("pod", "data"), "data"], 0),
+        "kv_heads": (["model"], 2),
+        "heads": (["model"], 2),
+        "kv_lora": ((), 9),
+        "cache_seq": ([("pod", "data", "model"), ("data", "model"), "model"], 5),
+        "rnn": (["model"], 3),
+        "state": ((), 9), "head_dim": ((), 9), "layers": ((), 9), "none": ((), 9),
+    }
+
+
+def request_rules() -> dict[str, Rule]:
+    return {"batch": ([("pod", "data"), "data"], 0), "seq": ((), 9),
+            "none": ((), 9)}
+
+
+def fed_state_shardings(mesh, param_tree, param_specs, plan: str, n_clients: int):
+    """Shardings for a DProxState(x_bar, c, round)."""
+    from repro.core.algorithm import DProxState
+
+    xb = tree_shardings(param_tree, param_specs, server_param_rules(plan), mesh)
+    crules = client_state_rules(plan)
+    is_spec = lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x)
+    client_specs = jax.tree_util.tree_map(
+        lambda ax: ("client",) + ax, param_specs, is_leaf=is_spec)
+    c_tree = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), param_tree)
+    c = tree_shardings(c_tree, client_specs, crules, mesh)
+    scalar = NamedSharding(mesh, PartitionSpec())
+    return DProxState(x_bar=xb, c=c, round=scalar)
+
+
+def batch_shardings(mesh, batches, plan: str):
+    """Shardings for fed-round batches: leaves (client, tau, b, ...)."""
+    rules = batch_rules(plan)
+
+    def one(x):
+        axes = ("client", "tau", "batch") + ("seq",) * (x.ndim - 3)
+        return NamedSharding(mesh, spec_for(x.shape, axes, rules, mesh))
+
+    return jax.tree_util.tree_map(one, batches)

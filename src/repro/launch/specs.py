@@ -1,0 +1,112 @@
+"""Input construction for every (architecture x input shape) combination.
+
+``build_inputs(cfg, shape, ...)`` returns the exact pytree each lowered step
+function consumes:
+
+  train    -> federated round batches: leaves (n_clients, tau, b_local, ...)
+  prefill  -> a request batch {tokens / patches+tokens / features+targets}
+  decode   -> (caches, token, cache_len): ONE new token against a cache of
+              ``shape.seq_len`` tokens
+
+With ``abstract=True`` the leaves are ``jax.ShapeDtypeStruct`` -- the
+multi-pod dry-run lowers against these with zero device allocation.  With
+``abstract=False`` small REAL arrays are drawn for the CPU smoke tests.
+
+Modality stubs (the one sanctioned carve-out): audio features are precomputed
+conv-extractor frames, VLM patches are precomputed InternViT embeddings; both
+enter through the trainable projector in the model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape
+from repro.models import transformer as T
+
+
+def _leaf(shape, dtype, abstract, rng, kind="tokens", vocab=None):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if kind == "tokens":
+        return jnp.asarray(rng.integers(0, vocab, size=shape), dtype)
+    if kind == "float":
+        return jnp.asarray(rng.normal(size=shape), dtype)
+    if kind == "mask":
+        return jnp.asarray(rng.uniform(size=shape) < 0.08, dtype)
+    raise ValueError(kind)
+
+
+def _example(cfg, batch, seq, abstract, rng):
+    """One forward-pass batch for arch family ``cfg``."""
+    if cfg.frontend == "audio":
+        return {
+            "features": _leaf((batch, seq, cfg.frontend_dim), jnp.bfloat16,
+                              abstract, rng, "float"),
+            "targets": _leaf((batch, seq), jnp.int32, abstract, rng,
+                             "tokens", cfg.vocab),
+            "mask": _leaf((batch, seq), jnp.float32, abstract, rng, "mask"),
+        }
+    if cfg.frontend == "vision":
+        s_img = max(seq // 4, 1)  # 25% image patches, 75% text
+        s_txt = seq - s_img
+        return {
+            "patches": _leaf((batch, s_img, cfg.frontend_dim), jnp.bfloat16,
+                             abstract, rng, "float"),
+            "tokens": _leaf((batch, s_txt), jnp.int32, abstract, rng,
+                            "tokens", cfg.vocab),
+        }
+    return {
+        "tokens": _leaf((batch, seq), jnp.int32, abstract, rng,
+                        "tokens", cfg.vocab),
+    }
+
+
+def train_batches(cfg, shape: InputShape, n_clients: int, tau: int,
+                  abstract=True, seed=0):
+    """Federated-round batches: (n_clients, tau, b_local, ...) leaves."""
+    assert shape.global_batch % n_clients == 0, (
+        f"global_batch {shape.global_batch} not divisible by {n_clients} clients")
+    b_local = shape.global_batch // n_clients
+    rng = np.random.default_rng(seed)
+    ex = _example(cfg, b_local, shape.seq_len, abstract, rng)
+
+    def lift(x):
+        shp = (n_clients, tau) + x.shape
+        if abstract:
+            return jax.ShapeDtypeStruct(shp, x.dtype)
+        return jnp.broadcast_to(x[None, None], shp)
+
+    return jax.tree_util.tree_map(lift, ex)
+
+
+def prefill_batch(cfg, shape: InputShape, abstract=True, seed=0):
+    rng = np.random.default_rng(seed)
+    return _example(cfg, shape.global_batch, shape.seq_len, abstract, rng)
+
+
+def decode_inputs(cfg, shape: InputShape, abstract=True, seed=0):
+    """(caches, token, cache_len) for serve_step.
+
+    The cache covers ``seq_len`` already-generated tokens (the new token is
+    written at position seq_len-1 ... i.e. cache_len = seq_len - 1 tokens
+    precede it, giving attention over exactly seq_len entries)."""
+    lcfg = cfg.long_context_variant() if shape.name == "long_500k" else cfg
+    B = shape.global_batch
+
+    def build():
+        caches, _ = T.init_cache(lcfg, B, shape.seq_len)
+        return caches
+
+    if abstract:
+        caches = jax.eval_shape(build)
+    else:
+        caches = build()
+    rng = np.random.default_rng(seed)
+    token = _leaf((B, 1), jnp.int32, abstract, rng, "tokens", cfg.vocab)
+    cache_len = (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                 else jnp.asarray(shape.seq_len - 1, jnp.int32))
+    return lcfg, caches, token, cache_len

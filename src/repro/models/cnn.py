@@ -1,0 +1,85 @@
+"""The paper's MNIST CNN classifier (Section 4.2).
+
+Architecture (as described): two 3x3 conv layers with 32 feature maps, 2x2
+max pooling, then fully-connected layers of 64, 32 and 10 units, ReLU hidden
+activations, softmax output, cross-entropy loss with g(x) = theta*||x||_1.
+
+With 'same' conv padding and pooling after each conv the parameter count is
+EXACTLY the paper's d = 112,394 (asserted in tests/test_paper_experiments.py),
+confirming the layout: conv->pool->conv->pool->fc64->fc32->fc10.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_params(key, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+
+    def he(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32)
+                * np.sqrt(2.0 / fan_in)).astype(dtype)
+
+    return {
+        "conv1_w": he(ks[0], (3, 3, 1, 32), 9),
+        "conv1_b": jnp.zeros((32,), dtype),
+        "conv2_w": he(ks[1], (3, 3, 32, 32), 9 * 32),
+        "conv2_b": jnp.zeros((32,), dtype),
+        "fc1_w": he(ks[2], (7 * 7 * 32, 64), 7 * 7 * 32),
+        "fc1_b": jnp.zeros((64,), dtype),
+        "fc2_w": he(ks[3], (64, 32), 64),
+        "fc2_b": jnp.zeros((32,), dtype),
+        "fc3_w": he(ks[4], (32, 10), 32),
+        "fc3_b": jnp.zeros((10,), dtype),
+    }
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def forward(params, images):
+    """images: (B, 28, 28, 1) -> logits (B, 10)."""
+    x = jax.nn.relu(_conv(images, params["conv1_w"], params["conv1_b"]))
+    x = _maxpool(x)
+    x = jax.nn.relu(_conv(x, params["conv2_w"], params["conv2_b"]))
+    x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    x = jax.nn.relu(x @ params["fc2_w"] + params["fc2_b"])
+    return x @ params["fc3_w"] + params["fc3_b"]
+
+
+def loss_fn(params, batch):
+    """batch: {"x": (B,28,28,1), "y": (B,) int32}."""
+    logits = forward(params, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def make_grad_fn():
+    vg = jax.value_and_grad(loss_fn)
+
+    def fn(params, batch):
+        return vg(params, batch)
+
+    return fn
+
+
+def accuracy(params, images, labels, batch=500):
+    correct = 0
+    n = images.shape[0]
+    for i in range(0, n, batch):
+        logits = forward(params, images[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == labels[i:i + batch]))
+    return correct / n

@@ -1,0 +1,763 @@
+"""Composable model layers for the 10-architecture zoo.
+
+Every ``init_*`` function returns ``(params, specs)`` where ``specs`` mirrors
+``params`` with tuples of *logical axis names* per dimension.  The launcher
+maps logical axes to mesh axes via :mod:`repro.launch.sharding` rules, so the
+same model definition runs on 1 CPU device (smoke tests) and on the 512-chip
+production mesh (dry-run) unchanged.
+
+Logical axes used here:
+  embed, mlp, vocab, heads, kv_heads, head_dim, qk_dim, v_dim, kv_lora,
+  expert, expert_mlp, rnn, state, conv, layers (scan-stacked), none.
+
+Attention variants: GQA (stablelm/mistral/phi3/hubert/internvl2), sliding
+window (gemma2 local / long-context mode), logit softcap (gemma2, grok),
+MLA latent attention (deepseek-v3).  Sequence mixers: RG-LRU (recurrentgemma)
+and Mamba2 SSD (mamba2-130m).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def init_dense(key, shape, axes, dtype, scale=None):
+    """A weight matrix/tensor with fan-in scaling over the first dim(s)."""
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return _normal(key, shape, scale, dtype), axes
+
+
+def init_embed(key, vocab, d, dtype):
+    return _normal(key, (vocab, d), 0.02, dtype), ("vocab", "embed")
+
+
+def init_norm(d, dtype):
+    return jnp.ones((d,), dtype), ("embed",)
+
+
+# ---------------------------------------------------------------------------
+# basic ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta=10000.0):
+    """Rotary embedding.  x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def gelu_mul(gate, up):
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    kind: str = "gqa"  # gqa | mla
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding window size (None = full)
+    logit_softcap: Optional[float] = None
+    causal: bool = True
+    # MLA only:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    # implementation knobs (injected from ArchConfig by the block builder)
+    impl: str = "naive"  # naive (S^2 logits) | blocked (flash-style scan)
+    block_q: int = 512
+
+
+def init_attention(key, cfg: AttnCfg, d_model: int, dtype):
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    if cfg.kind == "gqa":
+        hd = cfg.head_dim
+        p["wq"], s["wq"] = init_dense(ks[0], (d_model, cfg.num_heads, hd),
+                                      ("embed", "heads", "head_dim"), dtype)
+        p["wk"], s["wk"] = init_dense(ks[1], (d_model, cfg.num_kv_heads, hd),
+                                      ("embed", "kv_heads", "head_dim"), dtype)
+        p["wv"], s["wv"] = init_dense(ks[2], (d_model, cfg.num_kv_heads, hd),
+                                      ("embed", "kv_heads", "head_dim"), dtype)
+        p["wo"], s["wo"] = init_dense(ks[3], (cfg.num_heads, hd, d_model),
+                                      ("heads", "head_dim", "embed"), dtype)
+    elif cfg.kind == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p["wq"], s["wq"] = init_dense(ks[0], (d_model, cfg.num_heads, qk),
+                                      ("embed", "heads", "qk_dim"), dtype)
+        p["w_dkv"], s["w_dkv"] = init_dense(
+            ks[1], (d_model, cfg.kv_lora_rank + cfg.qk_rope_dim),
+            ("embed", "kv_lora"), dtype)
+        p["w_uk"], s["w_uk"] = init_dense(
+            ks[2], (cfg.kv_lora_rank, cfg.num_heads, cfg.qk_nope_dim),
+            ("kv_lora", "heads", "qk_dim"), dtype)
+        p["w_uv"], s["w_uv"] = init_dense(
+            ks[3], (cfg.kv_lora_rank, cfg.num_heads, cfg.v_dim),
+            ("kv_lora", "heads", "v_dim"), dtype)
+        p["wo"], s["wo"] = init_dense(ks[4], (cfg.num_heads, cfg.v_dim, d_model),
+                                      ("heads", "v_dim", "embed"), dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p, s
+
+
+def _sdpa(q, k, v, mask, scale, cap=None):
+    """q: (B,S,H,Dk)  k: (B,T,K,Dk)  v: (B,T,K,Dv) with H = K*rep.
+    mask: broadcastable to (B,K,rep,S,T) or None."""
+    b, sq, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // kh
+    q = q.reshape(b, sq, kh, rep, d)
+    logits = jnp.einsum("bskrd,btkd->bkrst", q, k).astype(jnp.float32) * scale
+    if cap is not None:
+        logits = softcap(logits, cap)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None, :, :] if mask.ndim == 3
+                           else mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    return out.reshape(b, sq, h, dv)
+
+
+def _blocked_sdpa(q, k, v, *, causal, window, cap, scale, block_q):
+    """Flash-style attention expressed in XLA: scan over query blocks so only
+    a (Bq, T) logits tile is ever live, never the full (S, S) matrix.
+
+    This is the TPU-native adaptation of the flash-attention insight for the
+    dry-run/compile path (the Pallas kernel in repro.kernels.flash_attention
+    is the on-TPU implementation; this variant keeps cost_analysis meaningful
+    and cuts the memory roofline term on any backend).
+
+    q: (B,S,H,Dk)  k: (B,T,K,Dk)  v: (B,T,K,Dv).  Returns (B,S,H,Dv).
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // kh
+    bq = min(block_q, s)
+    while s % bq:
+        bq //= 2
+    nq = s // bq
+    qr = q.reshape(b, nq, bq, kh, rep, d).transpose(1, 0, 3, 4, 2, 5)
+    # qr: (nq, b, kh, rep, bq, d)
+    kpos = jnp.arange(t)
+
+    def body(_, inp):
+        qb, i = inp
+        logits = jnp.einsum("bkrsd,btkd->bkrst", qb, k).astype(jnp.float32)
+        logits = logits * scale
+        if cap is not None:
+            logits = softcap(logits, cap)
+        if causal:
+            qpos = i * bq + jnp.arange(bq)
+            m = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                m &= kpos[None, :] > qpos[:, None] - window
+            logits = jnp.where(m[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkrst,btkd->bkrsd", probs, v)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qr, jnp.arange(nq)))
+    # outs: (nq, b, kh, rep, bq, dv) -> (b, s, h, dv)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, dv)
+
+
+def causal_mask(sq, st, q_offset=0, window=None, dtype=jnp.bool_):
+    """(sq, st) boolean mask; True = attend.  q position i attends kv j iff
+    j <= i + q_offset and (window is None or j > i + q_offset - window)."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(st)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (kpos > qpos - window)
+    return m.astype(dtype)
+
+
+def attention_train(p, cfg: AttnCfg, x, positions):
+    """Full-sequence attention (training / prefill compute path)."""
+    if cfg.kind == "mla":
+        return _mla_train(p, cfg, x, positions)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    sq = x.shape[1]
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if cfg.impl == "blocked":
+        out = _blocked_sdpa(q, k, v, causal=cfg.causal, window=cfg.window,
+                            cap=cfg.logit_softcap, scale=scale,
+                            block_q=cfg.block_q)
+    else:
+        if cfg.causal:
+            mask = causal_mask(sq, sq, window=cfg.window)[None, None]
+        else:
+            mask = None
+        out = _sdpa(q, k, v, mask, scale, cfg.logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _mla_train(p, cfg: AttnCfg, x, positions):
+    """MLA in the materialized (training) form."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    ckv, k_rope = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank :]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rope)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    h = cfg.num_heads
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h, cfg.qk_rope_dim))],
+        axis=-1,
+    )
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    sq = x.shape[1]
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    if cfg.impl == "blocked":
+        out = _blocked_sdpa(qfull, k, v, causal=True, window=cfg.window,
+                            cap=cfg.logit_softcap, scale=scale,
+                            block_q=cfg.block_q)
+    else:
+        mask = causal_mask(sq, sq, window=cfg.window)[None, None]
+        out = _sdpa(qfull, k, v, mask, scale, cfg.logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# --- decode path (one new token against a cache) ---------------------------
+
+
+def attention_decode(p, cfg: AttnCfg, x, cache, cache_len):
+    """x: (B,1,d); cache dict with ring-or-linear k/v buffers.
+
+    Returns (out (B,1,d), new_cache).  The cache buffer length T is either the
+    max sequence (linear) or the sliding window (ring); ``cache_len`` is the
+    number of tokens already written (the new token's position).
+    """
+    if cfg.kind == "mla":
+        return _mla_decode(p, cfg, x, cache, cache_len)
+    pos = cache_len[..., None]  # (B,1) or (1,)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, pos, cfg.rope_theta)
+    k_new = rope(k_new, pos, cfg.rope_theta)
+    T = cache["k"].shape[1]
+    slot = (cache_len % T).astype(jnp.int32)
+    # write at the (possibly ring) slot
+    k_buf = _write_slot(cache["k"], k_new, slot)
+    v_buf = _write_slot(cache["v"], v_new, slot)
+    # valid positions: absolute kv index of each buffer slot
+    idx = jnp.arange(T)
+    if cfg.window is not None and T == cfg.window:
+        # ring buffer: slot j holds absolute position p where p % T == j and
+        # p <= cache_len; valid iff cache_len - T < p_abs <= cache_len
+        p_abs = cache_len - ((cache_len - idx) % T)
+        valid = (p_abs >= 0) & (p_abs >= cache_len - T + 1)
+    else:
+        valid = idx <= cache_len
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,T) -> bkrst broadcast
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    out = _sdpa_masked_flat(q, k_buf, v_buf, mask, scale, cfg.logit_softcap)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": k_buf, "v": v_buf}
+
+
+def _write_slot(buf, new, slot):
+    """buf: (B,T,...); new: (B,1,...); write new at index ``slot`` along axis 1."""
+    T = buf.shape[1]
+    onehot = (jnp.arange(T) == slot).astype(buf.dtype)  # (T,)
+    onehot = onehot.reshape((1, T) + (1,) * (buf.ndim - 2))
+    return buf * (1 - onehot) + new.astype(buf.dtype) * onehot
+
+
+def _sdpa_masked_flat(q, k, v, mask, scale, cap=None):
+    b, sq, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = h // kh
+    qg = q.reshape(b, sq, kh, rep, d)
+    logits = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32) * scale
+    if cap is not None:
+        logits = softcap(logits, cap)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    return out.reshape(b, sq, h, dv)
+
+
+def _mla_decode(p, cfg: AttnCfg, x, cache, cache_len):
+    """Absorbed MLA decode: cache holds the latent + rope-key only."""
+    pos = cache_len[..., None]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    ckv_new, krope_new = dkv[..., : cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank :]
+    krope_new = rope(krope_new[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+    T = cache["ckv"].shape[1]
+    slot = (cache_len % T).astype(jnp.int32)
+    ckv = _write_slot(cache["ckv"], ckv_new, slot)
+    krope = _write_slot(cache["k_rope"], krope_new, slot)
+    # absorb k_up into the query:  (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    logits = (
+        jnp.einsum("bshr,btr->bhst", q_lat, ckv)
+        + jnp.einsum("bshk,btk->bhst", q_rope, krope)
+    ).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    logits = logits * scale
+    if cfg.logit_softcap is not None:
+        logits = softcap(logits, cfg.logit_softcap)
+    valid = jnp.arange(T) <= cache_len
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(ckv.dtype)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, ckv)  # (B,1,H,r)
+    out = jnp.einsum("bshr,rhk->bshk", out_lat, p["w_uv"])  # (B,1,H,v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"ckv": ckv, "k_rope": krope}
+
+
+def init_attn_cache(cfg: AttnCfg, batch, max_len, dtype):
+    """Cache pytree + logical specs for one attention layer."""
+    T = min(max_len, cfg.window) if cfg.window is not None else max_len
+    if cfg.kind == "mla":
+        p = {
+            "ckv": jnp.zeros((batch, T, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, T, cfg.qk_rope_dim), dtype),
+        }
+        s = {"ckv": ("batch", "cache_seq", "kv_lora"),
+             "k_rope": ("batch", "cache_seq", "none")}
+    else:
+        p = {
+            "k": jnp.zeros((batch, T, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, T, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+        s = {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+             "v": ("batch", "cache_seq", "kv_heads", "head_dim")}
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# MLPs and MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype, act="swiglu"):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["w_gate"], s["w_gate"] = init_dense(ks[0], (d_model, d_ff), ("embed", "mlp"), dtype)
+    p["w_up"], s["w_up"] = init_dense(ks[1], (d_model, d_ff), ("embed", "mlp"), dtype)
+    p["w_down"], s["w_down"] = init_dense(ks[2], (d_ff, d_model), ("mlp", "embed"), dtype)
+    return p, s
+
+
+def mlp(p, x, act="swiglu"):
+    actfn = swiglu if act == "swiglu" else gelu_mul
+    h = actfn(jnp.einsum("bsd,df->bsf", x, p["w_gate"]),
+              jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 1024
+    num_shared: int = 0          # deepseek-v3 style shared expert(s)
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+
+
+def init_moe(key, cfg: MoECfg, d_model, dtype, act="swiglu"):
+    ks = jax.random.split(key, 6)
+    E, F = cfg.num_experts, cfg.d_ff_expert
+    p, s = {}, {}
+    p["router"], s["router"] = init_dense(ks[0], (d_model, E), ("embed", "expert"), dtype)
+    p["w_gate"], s["w_gate"] = init_dense(ks[1], (E, d_model, F),
+                                          ("expert", "embed", "expert_mlp"), dtype,
+                                          scale=1.0 / math.sqrt(d_model))
+    p["w_up"], s["w_up"] = init_dense(ks[2], (E, d_model, F),
+                                      ("expert", "embed", "expert_mlp"), dtype,
+                                      scale=1.0 / math.sqrt(d_model))
+    p["w_down"], s["w_down"] = init_dense(ks[3], (E, F, d_model),
+                                          ("expert", "expert_mlp", "embed"), dtype,
+                                          scale=1.0 / math.sqrt(F))
+    if cfg.num_shared:
+        sp, ss = init_mlp(ks[4], d_model, cfg.d_ff_shared, dtype, act)
+        p["shared"], s["shared"] = sp, ss
+    return p, s
+
+
+def moe(p, cfg: MoECfg, x, act="swiglu"):
+    """Capacity-based top-k MoE with scatter dispatch / gather combine.
+
+    Returns (out, aux_loss).  aux_loss is the standard load-balance loss
+    (mean_e frac_tokens_e * mean_router_prob_e * E).
+    """
+    b, sq, d = x.shape
+    T = b * sq
+    xf = x.reshape(T, d)
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(int(T * K / E * cfg.capacity_factor), 1)
+
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, k) within its expert queue
+    flat_e = expert_idx.reshape(-1)  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*K, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot  # 1-based position
+    pos_in_e = jnp.sum(pos, axis=-1) - 1  # (T*K,)
+    keep = (pos_in_e < C) & (pos_in_e >= 0)
+    slot = jnp.where(keep, pos_in_e, 0)
+
+    # dispatch: (E, C, d)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    disp = jnp.zeros((E, C, d), x.dtype)
+    contrib = jnp.where(keep[:, None], xf[tok_idx], 0.0).astype(x.dtype)
+    disp = disp.at[flat_e, slot].add(contrib)
+
+    actfn = swiglu if act == "swiglu" else gelu_mul
+    h = actfn(jnp.einsum("ecd,edf->ecf", disp, p["w_gate"]),
+              jnp.einsum("ecd,edf->ecf", disp, p["w_up"]))
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"])  # (E,C,d)
+
+    # combine: gather each (token,k) slot's output back
+    gathered = eout[flat_e, slot]  # (T*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = gate_vals.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, d), gathered.dtype).at[tok_idx].add(gathered * w)
+    out = out.reshape(b, sq, d).astype(x.dtype)
+
+    if cfg.num_shared:
+        out = out + mlp(p["shared"], x, act)
+
+    # load-balance auxiliary loss
+    frac = jnp.mean(
+        jax.nn.one_hot(expert_idx, E, dtype=jnp.float32).sum(1), axis=0
+    ) / K
+    imp = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUCfg:
+    width: int = 0  # rnn width (defaults to d_model)
+    conv_width: int = 4
+    c: float = 8.0
+
+
+def init_rglru_block(key, cfg: RGLRUCfg, d_model, dtype):
+    w = cfg.width or d_model
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["w_x"], s["w_x"] = init_dense(ks[0], (d_model, w), ("embed", "rnn"), dtype)
+    p["w_gate"], s["w_gate"] = init_dense(ks[1], (d_model, w), ("embed", "rnn"), dtype)
+    p["w_out"], s["w_out"] = init_dense(ks[2], (w, d_model), ("rnn", "embed"), dtype)
+    p["conv"], s["conv"] = (
+        _normal(ks[3], (cfg.conv_width, w), 0.1, dtype), ("conv", "rnn"))
+    p["w_a"], s["w_a"] = init_dense(ks[4], (w, w), ("rnn", "rnn"), dtype)
+    p["w_i"], s["w_i"] = init_dense(ks[5], (w, w), ("rnn", "rnn"), dtype)
+    # Lambda init so that a = sigmoid(lam) in [0.9, 0.999]
+    u = jax.random.uniform(ks[6], (w,), jnp.float32, 0.9, 0.999)
+    p["lam"], s["lam"] = jnp.log(u / (1 - u)).astype(jnp.float32), ("rnn",)
+    return p, s
+
+
+def _causal_conv1d(x, w, state=None):
+    """x: (B,L,C); w: (W,C) depthwise.  state: (B,W-1,C) carry for decode."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, L+W-1, C)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+def _rglru_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t via associative scan over axis 1."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rglru_block_train(p, cfg: RGLRUCfg, x):
+    """Full-sequence Griffin recurrent block."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u, _ = _causal_conv1d(u, p["conv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_i"]).astype(jnp.float32))
+    log_a = -cfg.c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (i * u.astype(jnp.float32))
+    h = _rglru_scan(a, b)
+    out = (h.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", out, p["w_out"])
+
+
+def rglru_block_decode(p, cfg: RGLRUCfg, x, cache):
+    """One-token step. cache: {"h": (B,W), "conv": (B,conv_w-1,W)}."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u, conv_state = _causal_conv1d(u, p["conv"], cache["conv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["w_i"]).astype(jnp.float32))
+    log_a = -cfg.c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)[:, 0]  # (B,W)
+    b = (jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12))
+         * (i[:, 0] * u[:, 0].astype(jnp.float32)))
+    h = a * cache["h"] + b
+    out = (h[:, None].astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"])
+    return out, {"h": h, "conv": conv_state}
+
+
+def init_rglru_cache(cfg: RGLRUCfg, d_model, batch, dtype):
+    w = cfg.width or d_model
+    p = {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+    s = {"h": ("batch", "rnn"), "conv": ("batch", "none", "rnn")}
+    return p, s
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) layer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    num_heads: int = 8      # H
+    head_dim: int = 64      # P
+    state_dim: int = 128    # N
+    conv_width: int = 4
+    chunk: int = 64
+    expand: int = 2
+
+
+def init_mamba2_block(key, cfg: SSMCfg, d_model, dtype):
+    H, P, N = cfg.num_heads, cfg.head_dim, cfg.state_dim
+    inner = H * P
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["in_x"], s["in_x"] = init_dense(ks[0], (d_model, inner), ("embed", "rnn"), dtype)
+    p["in_z"], s["in_z"] = init_dense(ks[1], (d_model, inner), ("embed", "rnn"), dtype)
+    p["in_B"], s["in_B"] = init_dense(ks[2], (d_model, N), ("embed", "state"), dtype)
+    p["in_C"], s["in_C"] = init_dense(ks[3], (d_model, N), ("embed", "state"), dtype)
+    p["in_dt"], s["in_dt"] = init_dense(ks[4], (d_model, H), ("embed", "heads"), dtype)
+    p["conv"], s["conv"] = (_normal(ks[5], (cfg.conv_width, inner + 2 * N), 0.1, dtype),
+                            ("conv", "rnn"))
+    p["A_log"], s["A_log"] = (
+        jnp.log(jax.random.uniform(ks[6], (H,), jnp.float32, 1.0, 16.0)), ("heads",))
+    p["D"], s["D"] = jnp.ones((H,), jnp.float32), ("heads",)
+    p["dt_bias"], s["dt_bias"] = jnp.zeros((H,), jnp.float32), ("heads",)
+    p["out"], s["out"] = init_dense(ks[7], (inner, d_model), ("rnn", "embed"), dtype)
+    return p, s
+
+
+def _segsum(a):
+    """a: (..., T). Returns (..., T, T) with out[..., i, j] = sum_{j<k<=i} a_k,
+    -inf above the diagonal (strictly causal cumulative log-decay)."""
+    T = a.shape[-1]
+    cums = jnp.cumsum(a, axis=-1)
+    diff = cums[..., :, None] - cums[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk):
+    """Chunked SSD forward; see :func:`ssd_chunked_with_state`."""
+    return ssd_chunked_with_state(x, dt, A, B, C, D, chunk)[0]
+
+
+def ssd_chunked_with_state(x, dt, A, B, C, D, chunk):
+    """Chunked SSD forward (Mamba2, Dao & Gu 2024, Listing 1 adapted).
+
+    x: (b,l,h,p)  dt: (b,l,h)  A: (h,) (negative)  B,C: (b,l,n)  D: (h,)
+    Returns (y: (b,l,h,p), final_state: (b,h,p,n)).
+    Sequences whose length is not a multiple of ``chunk`` are zero-padded:
+    padded steps have dt=0 (decay exp(0)=1, zero input) so they neither decay
+    nor perturb the state, and their outputs are discarded.
+    """
+    l_orig = x.shape[1]
+    pad = (-l_orig) % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = zp(x), zp(dt), zp(B), zp(C)
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    nc = l // q
+    xb = (x * dt[..., None]).reshape(b, nc, q, h, p)
+    a = (A[None, None] * dt).reshape(b, nc, q, h)  # log-decay per step
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))  # (b,nc,h,q,q)
+    y_intra = jnp.einsum("bcsn,bczn,bchsz,bczhp->bcshp", Cc, Bc, L, xb)
+
+    # chunk states
+    a_cum = jnp.cumsum(a, axis=2)  # (b,nc,q,h)
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,nc,q,h)
+    S = jnp.einsum("bczn,bczh,bczhp->bchnp", Bc, decay_to_end, xb)  # per-chunk state
+
+    # inter-chunk recurrence over chunks
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (b,nc,h)
+
+    def op(lhs, rhs):
+        dl, sl = lhs
+        dr, sr = rhs
+        return dl * dr, sl * dr[..., None, None] + sr
+
+    _, S_inc = jax.lax.associative_scan(
+        op, (chunk_decay, S), axis=1
+    )  # inclusive states at chunk ends
+    S_prev = jnp.concatenate(
+        [jnp.zeros_like(S_inc[:, :1]), S_inc[:, :-1]], axis=1
+    )  # state entering each chunk
+
+    decay_in = jnp.exp(a_cum)  # (b,nc,q,h) decay from chunk start to step
+    y_inter = jnp.einsum("bcsn,bcsh,bchnp->bcshp", Cc, decay_in, S_prev)
+
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = y + x * D[None, None, :, None]
+    final_state = S_inc[:, -1].transpose(0, 1, 3, 2)  # (b,h,n,p)->(b,h,p,n)
+    return y[:, :l_orig], final_state
+
+
+def mamba2_train(p, cfg: SSMCfg, x):
+    H, P, N = cfg.num_heads, cfg.head_dim, cfg.state_dim
+    z = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, p["in_z"]))
+    u = jnp.einsum("bsd,di->bsi", x, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])
+    ubc = jnp.concatenate([u, Bm, Cm], axis=-1)
+    ubc, _ = _causal_conv1d(ubc, p["conv"])
+    ubc = jax.nn.silu(ubc)
+    inner = H * P
+    u, Bm, Cm = ubc[..., :inner], ubc[..., inner : inner + N], ubc[..., inner + N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["in_dt"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    u4 = u.reshape(u.shape[0], u.shape[1], H, P).astype(jnp.float32)
+    y = ssd_chunked(u4, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                    p["D"], cfg.chunk)
+    y = y.reshape(x.shape[0], x.shape[1], inner).astype(x.dtype) * z
+    return jnp.einsum("bsi,id->bsd", y, p["out"])
+
+
+def mamba2_decode(p, cfg: SSMCfg, x, cache):
+    """One-token SSM step.  cache: {"ssm": (B,H,P,N) fp32, "conv": (B,W-1,ch)}."""
+    H, P, N = cfg.num_heads, cfg.head_dim, cfg.state_dim
+    inner = H * P
+    z = jax.nn.silu(jnp.einsum("bsd,di->bsi", x, p["in_z"]))
+    u = jnp.einsum("bsd,di->bsi", x, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["in_C"])
+    ubc = jnp.concatenate([u, Bm, Cm], axis=-1)
+    ubc, conv_state = _causal_conv1d(ubc, p["conv"], cache["conv"])
+    ubc = jax.nn.silu(ubc)
+    u, Bm, Cm = ubc[..., :inner], ubc[..., inner : inner + N], ubc[..., inner + N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["in_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    u4 = u[:, 0].reshape(-1, H, P).astype(jnp.float32)
+    decay = jnp.exp(A[None] * dt)  # (B,H)
+    # h' = decay * h + dt * B x^T ;  y = C . h' + D x
+    hB = jnp.einsum("bhp,bn,bh->bhpn", u4, Bm[:, 0].astype(jnp.float32), dt)
+    h = cache["ssm"] * decay[..., None, None] + hB
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, 0].astype(jnp.float32))
+    y = y + u4 * p["D"][None, :, None]
+    y = y.reshape(-1, 1, inner).astype(x.dtype) * z
+    out = jnp.einsum("bsi,id->bsd", y, p["out"])
+    return out, {"ssm": h, "conv": conv_state}
+
+
+def init_mamba2_cache(cfg: SSMCfg, batch, dtype):
+    H, P, N = cfg.num_heads, cfg.head_dim, cfg.state_dim
+    ch = H * P + 2 * N
+    p = {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, ch), dtype),
+    }
+    s = {"ssm": ("batch", "heads", "head_dim", "state"),
+         "conv": ("batch", "none", "rnn")}
+    return p, s

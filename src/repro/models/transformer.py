@@ -1,0 +1,541 @@
+"""Config-driven model stack covering all 10 assigned architectures.
+
+A model is a sequence of *blocks*; each block is ``norm -> mixer -> residual
+[-> norm -> mlp/moe -> residual]``.  Mixer kinds:
+
+  attn    full (causal or bidirectional) attention, GQA or MLA
+  local   sliding-window attention (window = cfg.window_local)
+  rec     RG-LRU recurrent block (RecurrentGemma / Griffin)
+  ssm     Mamba2 SSD block
+
+The layer stack is organised as ``prefix_blocks`` (unscanned) + a repeating
+``block_pattern`` scanned ``n_periods`` times with stacked parameters (small
+HLO, fast SPMD compile -- the MaxText convention) + ``suffix_blocks``.
+
+Three entry points per model:
+  * ``loss_fn(params, batch)``      -- training loss (next-token CE, masked
+                                       prediction for encoders, text-only CE
+                                       for VLMs) + MoE aux loss;
+  * ``prefill(params, batch)``      -- forward pass emitting logits + cache;
+  * ``decode_step(params, cache, batch)`` -- ONE token with a KV/state cache.
+
+Every ``init`` returns ``(params, specs)`` where specs carry logical axis
+names consumed by :mod:`repro.launch.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: Optional[L.AttnCfg] = None
+    moe: Optional[L.MoECfg] = None
+    ssm: Optional[L.SSMCfg] = None
+    rglru: Optional[L.RGLRUCfg] = None
+    block_pattern: tuple = ("attn",)
+    prefix_blocks: tuple = ()
+    suffix_blocks: tuple = ()
+    mlp_kind: str = "dense"  # mlp of the scanned pattern: dense | moe | none
+    prefix_mlp_kind: str = "dense"
+    act: str = "swiglu"
+    causal: bool = True
+    tie_embeddings: bool = True
+    scale_embed: bool = False  # gemma convention: embed * sqrt(d)
+    final_softcap: Optional[float] = None
+    post_norm: bool = False  # gemma2: extra norm after mixer/mlp outputs
+    window_local: Optional[int] = None
+    frontend: Optional[str] = None  # None | "audio" | "vision"
+    frontend_dim: int = 0
+    param_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    remat: bool = True
+    scan_unroll: bool = False  # True: emit unrolled stacks (cost probes)
+    attn_impl: str = "naive"  # naive (S^2 logits) | blocked (flash-style)
+    attn_block_q: int = 512
+    aux_loss_coef: float = 0.01
+    # deployment metadata (see DESIGN.md)
+    fed_plan: str = "A"  # A: client-per-datagroup; B: fully-sharded FSDP+TP
+    long_mode: str = "sliding"  # native | sliding | skip
+    long_window: int = 8192
+    decode_supported: bool = True
+    citation: str = ""
+
+    @property
+    def n_pattern_layers(self):
+        return self.n_layers - len(self.prefix_blocks) - len(self.suffix_blocks)
+
+    @property
+    def n_periods(self):
+        k = len(self.block_pattern)
+        assert self.n_pattern_layers % k == 0, (
+            f"{self.name}: {self.n_pattern_layers} pattern layers not divisible"
+            f" by pattern {self.block_pattern}"
+        )
+        return self.n_pattern_layers // k
+
+    def with_overrides(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+    def long_context_variant(self):
+        """Sub-quadratic variant used for the long_500k shape."""
+        if self.long_mode == "native":
+            return self
+        if self.long_mode == "skip":
+            raise ValueError(f"{self.name} does not support long context")
+        attn = dataclasses.replace(self.attn, window=self.long_window)
+        return dataclasses.replace(self, attn=attn, window_local=min(
+            self.window_local or self.long_window, self.long_window))
+
+
+# ---------------------------------------------------------------------------
+# block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _mixer_cfg(cfg: ArchConfig, kind: str):
+    if kind == "attn":
+        return dataclasses.replace(cfg.attn, impl=cfg.attn_impl,
+                                   block_q=cfg.attn_block_q)
+    if kind == "local":
+        return dataclasses.replace(cfg.attn, window=cfg.window_local,
+                                   impl=cfg.attn_impl,
+                                   block_q=cfg.attn_block_q)
+    if kind == "rec":
+        return cfg.rglru
+    if kind == "ssm":
+        return cfg.ssm
+    raise ValueError(kind)
+
+
+def init_block(key, cfg: ArchConfig, kind: str, mlp_kind: str):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg.d_model, jnp.float32)
+    mcfg = _mixer_cfg(cfg, kind)
+    if kind in ("attn", "local"):
+        p["mixer"], s["mixer"] = L.init_attention(ks[0], mcfg, cfg.d_model, cfg.param_dtype)
+    elif kind == "rec":
+        p["mixer"], s["mixer"] = L.init_rglru_block(ks[0], mcfg, cfg.d_model, cfg.param_dtype)
+    elif kind == "ssm":
+        p["mixer"], s["mixer"] = L.init_mamba2_block(ks[0], mcfg, cfg.d_model, cfg.param_dtype)
+    if cfg.post_norm:
+        p["post_norm1"], s["post_norm1"] = L.init_norm(cfg.d_model, jnp.float32)
+    if mlp_kind == "dense":
+        p["norm2"], s["norm2"] = L.init_norm(cfg.d_model, jnp.float32)
+        p["mlp"], s["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.param_dtype, cfg.act)
+    elif mlp_kind == "moe":
+        p["norm2"], s["norm2"] = L.init_norm(cfg.d_model, jnp.float32)
+        p["moe"], s["moe"] = L.init_moe(ks[1], cfg.moe, cfg.d_model, cfg.param_dtype, cfg.act)
+    if cfg.post_norm and mlp_kind != "none":
+        p["post_norm2"], s["post_norm2"] = L.init_norm(cfg.d_model, jnp.float32)
+    return p, s
+
+
+def apply_block(p, cfg: ArchConfig, kind: str, mlp_kind: str, x, positions,
+                mode: str, cache, cache_len):
+    """Returns (x, new_cache, aux_loss)."""
+    mcfg = _mixer_cfg(cfg, kind)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_cache = cache
+    if kind in ("attn", "local"):
+        if mode == "decode":
+            y, new_cache = L.attention_decode(p["mixer"], mcfg, h, cache, cache_len)
+        else:
+            y = L.attention_train(p["mixer"], mcfg, h, positions)
+            if mode == "prefill":
+                new_cache = _fill_attn_cache(p["mixer"], mcfg, h, positions, cache)
+    elif kind == "rec":
+        if mode == "decode":
+            y, new_cache = L.rglru_block_decode(p["mixer"], mcfg, h, cache)
+        else:
+            y = L.rglru_block_train(p["mixer"], mcfg, h)
+            if mode == "prefill":
+                new_cache = _fill_rglru_cache(p["mixer"], mcfg, h, cache)
+    elif kind == "ssm":
+        if mode == "decode":
+            y, new_cache = L.mamba2_decode(p["mixer"], mcfg, h, cache)
+        else:
+            y = L.mamba2_train(p["mixer"], mcfg, h)
+            if mode == "prefill":
+                new_cache = _fill_mamba2_cache(p["mixer"], mcfg, h, cache)
+    if cfg.post_norm:
+        y = L.rms_norm(y, p["post_norm1"], cfg.norm_eps)
+    x = x + y
+    aux = jnp.float32(0.0)
+    if mlp_kind != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if mlp_kind == "dense":
+            y = L.mlp(p["mlp"], h, cfg.act)
+        else:
+            y, aux = L.moe(p["moe"], cfg.moe, h, cfg.act)
+        if cfg.post_norm:
+            y = L.rms_norm(y, p["post_norm2"], cfg.norm_eps)
+        x = x + y
+    return x, new_cache, aux
+
+
+# --- prefill cache fillers --------------------------------------------------
+
+
+def _ring_scatter(full, T):
+    """full: (B,S,...) values for absolute positions 0..S-1; place the last
+    min(S,T) of them into a (B,T,...) ring buffer at slot p % T.
+
+    Implemented WITHOUT a scatter: the target slots always form a contiguous
+    cyclic range, so a pad (S<=T) or a roll (ring) suffices.  The original
+    scatter formulation forced GSPMD into involuntary full rematerialization
+    (replicating the whole (B,S,d) tensor per layer) -- see the gemma2
+    prefill hillclimb iteration 4 in EXPERIMENTS.md section Perf."""
+    B, S = full.shape[0], full.shape[1]
+    if S <= T:
+        pad = jnp.zeros((B, T - S) + full.shape[2:], full.dtype)
+        return jnp.concatenate([full, pad], axis=1)
+    # ring: keep the last T positions; element i of `last` holds absolute
+    # position p = S-T+i and belongs at slot p % T = (i + (S-T)) % T.
+    last = full[:, S - T:]
+    return jnp.roll(last, shift=(S - T) % T, axis=1)
+
+
+def _fill_attn_cache(p, mcfg: L.AttnCfg, h, positions, cache):
+    if mcfg.kind == "mla":
+        dkv = jnp.einsum("bsd,dr->bsr", h, p["w_dkv"])
+        ckv, k_rope = dkv[..., : mcfg.kv_lora_rank], dkv[..., mcfg.kv_lora_rank:]
+        k_rope = L.rope(k_rope[:, :, None, :], positions, mcfg.rope_theta)[:, :, 0]
+        T = cache["ckv"].shape[1]
+        return {"ckv": _ring_scatter(ckv.astype(cache["ckv"].dtype), T),
+                "k_rope": _ring_scatter(k_rope.astype(cache["k_rope"].dtype), T)}
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    k = L.rope(k, positions, mcfg.rope_theta)
+    T = cache["k"].shape[1]
+    return {"k": _ring_scatter(k.astype(cache["k"].dtype), T),
+            "v": _ring_scatter(v.astype(cache["v"].dtype), T)}
+
+
+def _fill_rglru_cache(p, mcfg: L.RGLRUCfg, h, cache):
+    u = jnp.einsum("bsd,dw->bsw", h, p["w_x"])
+    W = mcfg.conv_width
+    conv_state = jnp.concatenate(
+        [jnp.zeros_like(u[:, : max(W - 1 - u.shape[1], 0)]), u[:, -(W - 1):]], axis=1
+    )
+    uc, _ = L._causal_conv1d(u, p["conv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uc, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", uc, p["w_i"]).astype(jnp.float32))
+    log_a = -mcfg.c * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * (i * uc.astype(jnp.float32))
+    hseq = L._rglru_scan(a, b)
+    return {"h": hseq[:, -1], "conv": conv_state.astype(cache["conv"].dtype)}
+
+
+def _fill_mamba2_cache(p, mcfg: L.SSMCfg, h, cache):
+    H, P, N = mcfg.num_heads, mcfg.head_dim, mcfg.state_dim
+    inner = H * P
+    u = jnp.einsum("bsd,di->bsi", h, p["in_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["in_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["in_C"])
+    ubc_raw = jnp.concatenate([u, Bm, Cm], axis=-1)
+    W = mcfg.conv_width
+    conv_state = ubc_raw[:, -(W - 1):]
+    ubc, _ = L._causal_conv1d(ubc_raw, p["conv"])
+    ubc = jax.nn.silu(ubc)
+    u, Bm, Cm = ubc[..., :inner], ubc[..., inner:inner + N], ubc[..., inner + N:]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, p["in_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    u4 = u.reshape(u.shape[0], u.shape[1], H, P).astype(jnp.float32)
+    _, final_state = L.ssd_chunked_with_state(
+        u4, dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), p["D"], mcfg.chunk)
+    return {"ssm": final_state, "conv": conv_state.astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def _block_sequence(cfg: ArchConfig):
+    """[(kind, mlp_kind)] for prefix, pattern (one period) and suffix."""
+    pat_mlp = "none" if cfg.mlp_kind == "none" else cfg.mlp_kind
+    prefix = [(k, cfg.prefix_mlp_kind) for k in cfg.prefix_blocks]
+    pattern = [(k, pat_mlp) for k in cfg.block_pattern]
+    suffix = [(k, cfg.prefix_mlp_kind) for k in cfg.suffix_blocks]
+    return prefix, pattern, suffix
+
+
+def init_model(key, cfg: ArchConfig):
+    prefix, pattern, suffix = _block_sequence(cfg)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["embed"], s["embed"] = L.init_embed(ks[0], cfg.vocab, cfg.d_model, cfg.param_dtype)
+    if cfg.frontend is not None:
+        p["frontend_proj"], s["frontend_proj"] = L.init_dense(
+            ks[1], (cfg.frontend_dim, cfg.d_model), ("none", "embed"), cfg.param_dtype)
+    for name, blocks, kidx in (("prefix", prefix, 2), ("suffix", suffix, 3)):
+        if blocks:
+            ps, ss = [], []
+            sub = jax.random.split(ks[kidx], len(blocks))
+            for bk, (kind, mk) in zip(sub, blocks):
+                bp, bs = init_block(bk, cfg, kind, mk)
+                ps.append(bp)
+                ss.append(bs)
+            p[name], s[name] = ps, ss
+    # scanned stack: one period's params stacked n_periods times
+    def one_period(k):
+        pp, sp = {}, {}
+        sub = jax.random.split(k, len(pattern))
+        for j, (bk, (kind, mk)) in enumerate(zip(sub, pattern)):
+            pp[f"b{j}"], sp[f"b{j}"] = init_block(bk, cfg, kind, mk)
+        return pp, sp
+
+    period_keys = jax.random.split(ks[4], cfg.n_periods)
+    pers = [one_period(k) for k in period_keys]
+    p["stack"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[pp for pp, _ in pers])
+    # specs: same tree with a leading "layers" axis
+    s["stack"] = jax.tree_util.tree_map(
+        lambda ax: ("layers",) + ax, pers[0][1],
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x))
+    p["final_norm"], s["final_norm"] = L.init_norm(cfg.d_model, jnp.float32)
+    if not cfg.tie_embeddings:
+        p["unembed"], s["unembed"] = L.init_dense(
+            ks[5], (cfg.d_model, cfg.vocab), ("embed", "vocab"), cfg.param_dtype)
+    return p, s
+
+
+def _embed_inputs(p, cfg: ArchConfig, batch):
+    """Returns (x (B,S,d), positions (B,S) or (1,S))."""
+    if cfg.frontend == "audio":
+        feats = batch["features"]  # (B, T, frontend_dim) precomputed frames
+        x = jnp.einsum("btf,fd->btd", feats.astype(cfg.param_dtype), p["frontend_proj"])
+    elif cfg.frontend == "vision":
+        patches = batch["patches"]  # (B, S_img, frontend_dim)
+        img = jnp.einsum("bpf,fd->bpd", patches.astype(cfg.param_dtype), p["frontend_proj"])
+        txt = jnp.take(p["embed"], batch["tokens"], axis=0)
+        x = jnp.concatenate([img, txt], axis=1)
+    else:
+        x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.arange(x.shape[1])[None]
+    return x, positions
+
+
+def _apply_stack(p, cfg: ArchConfig, x, positions, mode, caches, cache_len):
+    """caches: {"prefix": [..], "stack": stacked, "suffix": [..]} or None."""
+    prefix, pattern, suffix = _block_sequence(cfg)
+    aux_total = jnp.float32(0.0)
+    new_caches = {"prefix": [], "suffix": [], "stack": None}
+
+    def run_blocks(blocks, params_list, cache_list, x, aux_total, out_list):
+        for j, (kind, mk) in enumerate(blocks):
+            c = cache_list[j] if cache_list is not None else None
+            x, nc, aux = apply_block(params_list[j], cfg, kind, mk, x,
+                                     positions, mode, c, cache_len)
+            out_list.append(nc)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    if prefix:
+        x, aux_total = run_blocks(
+            prefix, p["prefix"], caches["prefix"] if caches else None,
+            x, aux_total, new_caches["prefix"])
+
+    def period_fn(carry, xs):
+        x, aux = carry
+        pp, pc = xs
+        new_pc = {}
+        for j, (kind, mk) in enumerate(pattern):
+            c = pc[f"b{j}"] if pc is not None else None
+            x, nc, a = apply_block(pp[f"b{j}"], cfg, kind, mk, x,
+                                   positions, mode, c, cache_len)
+            new_pc[f"b{j}"] = nc
+            aux = aux + a
+        return (x, aux), new_pc if mode != "train" else None
+
+    fn = period_fn
+    if cfg.remat and mode == "train":
+        fn = jax.checkpoint(period_fn, prevent_cse=False)
+    stack_caches = caches["stack"] if caches else None
+    xs = (p["stack"], stack_caches) if stack_caches is not None else (
+        p["stack"], jax.tree_util.tree_map(lambda _: None, jnp.arange(cfg.n_periods)))
+    unroll = True if cfg.scan_unroll else 1
+    if stack_caches is not None:
+        (x, aux_total), new_stack = jax.lax.scan(
+            fn, (x, aux_total), (p["stack"], stack_caches), unroll=unroll)
+    else:
+        def fn_nocache(carry, pp):
+            return fn(carry, (pp, None))
+        (x, aux_total), new_stack = jax.lax.scan(
+            fn_nocache, (x, aux_total), p["stack"], unroll=unroll)
+    new_caches["stack"] = new_stack
+
+    if suffix:
+        x, aux_total = run_blocks(
+            suffix, p["suffix"], caches["suffix"] if caches else None,
+            x, aux_total, new_caches["suffix"])
+    return x, new_caches, aux_total
+
+
+def _logits(p, cfg: ArchConfig, x):
+    x = L.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["unembed"])
+    if cfg.final_softcap is not None:
+        logits = L.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+def forward(p, cfg: ArchConfig, batch, mode="train", caches=None,
+            cache_len=None, last_only=False):
+    x, positions = _embed_inputs(p, cfg, batch)
+    if mode == "decode":
+        positions = None  # decode paths derive positions from cache_len
+    x, new_caches, aux = _apply_stack(p, cfg, x, positions, mode, caches, cache_len)
+    if last_only:
+        # serving prefill: only the final position is sampled from; slicing
+        # BEFORE the unembed removes the (B, S, V) materialization entirely
+        x = x[:, -1:]
+    return _logits(p, cfg, x), new_caches, aux
+
+
+# --- losses -----------------------------------------------------------------
+
+
+def _ce(logits, targets, mask=None):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(p, cfg: ArchConfig, batch):
+    """Composite-FL smooth part f_i: CE loss (+ MoE aux).  The non-smooth
+    regularizer g is handled by the federated algorithm's prox, NOT here."""
+    logits, _, aux = forward(p, cfg, batch, mode="train")
+    if cfg.frontend == "audio":
+        # masked-prediction: predict `targets` at masked frames
+        loss = _ce(logits, batch["targets"], batch.get("mask"))
+    elif cfg.frontend == "vision":
+        s_img = batch["patches"].shape[1]
+        txt_logits = logits[:, s_img:-1]
+        loss = _ce(txt_logits, batch["tokens"][:, 1:])
+    else:
+        loss = _ce(logits[:, :-1], batch["tokens"][:, 1:])
+    return loss + cfg.aux_loss_coef * aux
+
+
+def make_grad_fn(cfg: ArchConfig):
+    vg = jax.value_and_grad(lambda p, b: loss_fn(p, cfg, b))
+
+    def fn(params, batch):
+        return vg(params, batch)
+
+    return fn
+
+
+# --- serving ----------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Cache pytree + logical specs for the whole model."""
+    prefix, pattern, suffix = _block_sequence(cfg)
+
+    def one(kind):
+        mcfg = _mixer_cfg(cfg, kind)
+        if kind in ("attn", "local"):
+            return L.init_attn_cache(mcfg, batch, max_len, cfg.param_dtype)
+        if kind == "rec":
+            return L.init_rglru_cache(mcfg, cfg.d_model, batch, cfg.param_dtype)
+        if kind == "ssm":
+            return L.init_mamba2_cache(mcfg, batch, cfg.param_dtype)
+
+    caches, specs = {"prefix": [], "suffix": [], "stack": None}, {
+        "prefix": [], "suffix": [], "stack": None}
+    for name, blocks in (("prefix", prefix), ("suffix", suffix)):
+        for kind, _ in blocks:
+            c, s = one(kind)
+            caches[name].append(c)
+            specs[name].append(s)
+    percs, perss = {}, {}
+    for j, (kind, _) in enumerate(pattern):
+        c, s = one(kind)
+        percs[f"b{j}"] = c
+        perss[f"b{j}"] = s
+    caches["stack"] = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), percs)
+    specs["stack"] = jax.tree_util.tree_map(
+        lambda ax: ("layers",) + ax, perss,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x))
+    return caches, specs
+
+
+def prefill(p, cfg: ArchConfig, batch, max_len=None, last_only=False):
+    """Forward over the prompt; returns (logits, caches, cache_len).
+
+    ``last_only`` emits logits for the final position only (what a serving
+    engine samples from)."""
+    if cfg.frontend == "audio":
+        S = batch["features"].shape[1]
+        B = batch["features"].shape[0]
+    elif cfg.frontend == "vision":
+        S = batch["patches"].shape[1] + batch["tokens"].shape[1]
+        B = batch["tokens"].shape[0]
+    else:
+        B, S = batch["tokens"].shape
+    caches, _ = init_cache(cfg, B, max_len or S)
+    logits, new_caches, _ = forward(p, cfg, batch, mode="prefill",
+                                    caches=caches, cache_len=None,
+                                    last_only=last_only)
+    return logits, new_caches, jnp.asarray(S, jnp.int32)
+
+
+def decode_step(p, cfg: ArchConfig, caches, token, cache_len):
+    """One-token decode: token (B,1) int32 -> (logits (B,1,V), new_caches)."""
+    batch = {"tokens": token}
+    x = jnp.take(p["embed"], token, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x, new_caches, _ = _apply_stack(p, cfg, x, None, "decode", caches, cache_len)
+    return _logits(p, cfg, x), new_caches
+
+
+# --- accounting ---------------------------------------------------------------
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def active_param_fraction(cfg: ArchConfig) -> float:
+    """Fraction of MoE expert params active per token (for 6*N_active*D)."""
+    if cfg.moe is None:
+        return 1.0
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    expert_p = 3 * cfg.d_model * cfg.moe.d_ff_expert  # per expert
+    total_moe = E * expert_p
+    active_moe = K * expert_p
+    # everything else is always active; approximate with per-layer shares
+    attn_p = 4 * cfg.d_model * cfg.d_model if cfg.attn else 0
+    shared = (3 * cfg.d_model * cfg.moe.d_ff_shared) if cfg.moe.num_shared else 0
+    per_layer_total = attn_p + total_moe + shared
+    per_layer_active = attn_p + active_moe + shared
+    return per_layer_active / max(per_layer_total, 1)

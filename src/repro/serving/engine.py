@@ -1,0 +1,71 @@
+"""Batched serving engine on top of the model zoo's prefill/decode steps.
+
+Serves the post-proximal global model produced by federated training (the
+deployable artifact of Algorithm 1).  Greedy or temperature sampling; the
+decode step is jitted once and reused across tokens; cache layouts (linear KV,
+ring-buffer sliding window, MLA latent, SSM/RG-LRU state) are handled by the
+model layer, so the engine is architecture-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray  # (B, n_new)
+    logprobs: np.ndarray  # (B, n_new)
+
+
+class ServingEngine:
+    def __init__(self, cfg: T.ArchConfig, params, max_len: int = 4096):
+        if not cfg.decode_supported:
+            raise ValueError(f"{cfg.name} is encoder-only; nothing to decode")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            functools.partial(T.decode_step, cfg=cfg),
+        )
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 extra_inputs: Optional[dict] = None) -> GenerationResult:
+        """prompts: (B, S) int32.  extra_inputs carries VLM patches etc."""
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        logits, caches, cache_len = T.prefill(
+            self.params, self.cfg, batch, max_len=self.max_len)
+        key = jax.random.PRNGKey(seed)
+        tok = self._sample(logits[:, -1], temperature, key)
+        out_toks, out_lps = [], []
+        for step in range(max_new_tokens):
+            logits_t, caches = self._decode(self.params, caches=caches,
+                                            token=tok, cache_len=cache_len)
+            lp = jax.nn.log_softmax(logits_t[:, 0].astype(jnp.float32))
+            out_toks.append(np.asarray(tok[:, 0]))
+            key, sub = jax.random.split(key)
+            nxt = self._sample(logits_t[:, 0], temperature, sub)
+            out_lps.append(np.asarray(
+                jnp.take_along_axis(lp, nxt, axis=-1)[:, 0]))
+            tok = nxt
+            cache_len = cache_len + 1
+        return GenerationResult(tokens=np.stack(out_toks, 1),
+                                logprobs=np.stack(out_lps, 1))
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        scaled = logits.astype(jnp.float32) / temperature
+        return jax.random.categorical(key, scaled, axis=-1)[:, None].astype(
+            jnp.int32)

@@ -1,0 +1,107 @@
+"""Property-based tests for the regularizers (repro.core.prox).
+
+Invariants checked with hypothesis:
+  * prox is firmly non-expansive: ||P(x)-P(y)|| <= ||x-y||;
+  * prox optimality: eta*g(P(x)) + 1/2||x-P(x)||^2 <= eta*g(u) + 1/2||x-u||^2;
+  * soft-threshold closed form matches the definition;
+  * prox(x, 0) = x; masks leave masked leaves untouched.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import L1, ElasticNet, GroupL2, LinfBall, Zero, soft_threshold
+
+REGS = [
+    L1(lam=0.1),
+    ElasticNet(lam1=0.05, lam2=0.2),
+    GroupL2(lam=0.1),
+    LinfBall(radius=0.7),
+    Zero(),
+]
+
+arrays = st.integers(0, 2**31 - 1).map(
+    lambda seed: np.random.default_rng(seed).normal(size=(4, 6)).astype(np.float64)
+)
+
+
+@pytest.mark.parametrize("reg", REGS, ids=lambda r: type(r).__name__)
+@given(seed=st.integers(0, 2**31 - 1), eta=st.floats(0.01, 10.0))
+@settings(max_examples=25, deadline=None)
+def test_prox_nonexpansive(reg, seed, eta):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 6)))
+    y = jnp.asarray(rng.normal(size=(4, 6)))
+    px, py = reg.prox(x, eta), reg.prox(y, eta)
+    assert float(jnp.linalg.norm(px - py)) <= float(jnp.linalg.norm(x - y)) + 1e-9
+
+
+@pytest.mark.parametrize("reg", REGS, ids=lambda r: type(r).__name__)
+@given(seed=st.integers(0, 2**31 - 1), eta=st.floats(0.01, 5.0))
+@settings(max_examples=25, deadline=None)
+def test_prox_optimality(reg, seed, eta):
+    """P(x) minimizes eta*g(u) + 1/2||x-u||^2; check against random candidates."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, 5)))
+    p = reg.prox(x, eta)
+
+    def obj(u):
+        return float(eta * reg.value(u) + 0.5 * jnp.sum((x - u) ** 2))
+
+    base = obj(p)
+    for _ in range(5):
+        u = jnp.asarray(rng.normal(size=(3, 5)))
+        assert base <= obj(u) + 1e-8
+    # also perturbations around p
+    for _ in range(5):
+        u = p + 0.01 * jnp.asarray(rng.normal(size=(3, 5)))
+        assert base <= obj(u) + 1e-10
+
+
+@given(seed=st.integers(0, 2**31 - 1), t=st.floats(0.0, 3.0))
+@settings(max_examples=50, deadline=None)
+def test_soft_threshold_closed_form(seed, t):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=17)
+    out = np.asarray(soft_threshold(jnp.asarray(x), t))
+    expected = np.sign(x) * np.maximum(np.abs(x) - t, 0.0)
+    np.testing.assert_allclose(out, expected, atol=1e-12)
+
+
+def test_prox_identity_at_zero_eta():
+    x = {"a": jnp.arange(5.0), "b": jnp.ones((2, 2))}
+    for reg in [L1(lam=0.5), GroupL2(lam=0.5)]:
+        p = reg.prox(x, 0.0)
+        for k in x:
+            np.testing.assert_allclose(np.asarray(p[k]), np.asarray(x[k]))
+
+
+def test_mask_restricts_prox():
+    x = {"w": jnp.ones(4) * 0.05, "b": jnp.ones(2) * 0.05}
+    reg = L1(lam=1.0).with_mask({"w": True, "b": False})
+    p = reg.prox(x, 1.0)
+    np.testing.assert_allclose(np.asarray(p["w"]), 0.0)  # thresholded away
+    np.testing.assert_allclose(np.asarray(p["b"]), 0.05)  # untouched
+    # value also only counts masked leaves
+    assert abs(float(reg.value(x)) - 0.05 * 4) < 1e-6
+
+
+def test_group_l2_kills_small_groups():
+    x = jnp.array([[0.01, 0.01, 0.01], [3.0, 4.0, 0.0]])
+    reg = GroupL2(lam=1.0)
+    p = np.asarray(reg.prox(x, 0.5))
+    np.testing.assert_allclose(p[0], 0.0)  # group norm < eta*lam -> zeroed
+    # surviving group shrunk along its direction
+    nrm = np.linalg.norm(x[1])
+    np.testing.assert_allclose(p[1], np.asarray(x[1]) * (1 - 0.5 / nrm), rtol=1e-6)
+
+
+def test_linf_ball_clips():
+    x = jnp.array([-2.0, 0.3, 5.0])
+    p = np.asarray(LinfBall(radius=0.7).prox(x, 123.0))
+    np.testing.assert_allclose(p, [-0.7, 0.3, 0.7])
