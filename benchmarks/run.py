@@ -12,9 +12,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (ablation_schedule, comm_table, fig2_fullgrad,
-                            fig3_stochastic, fig4_cnn, kernel_bench,
-                            roofline_table)
+    from benchmarks import (ablation_schedule, comm_table, exec_bench,
+                            fig2_fullgrad, fig3_stochastic, fig4_cnn,
+                            kernel_bench, roofline_table)
 
     modules = [
         ("fig2", fig2_fullgrad),
@@ -24,6 +24,7 @@ def main() -> None:
         ("comm", comm_table),
         ("kernels", kernel_bench),
         ("roofline", roofline_table),
+        ("exec", exec_bench),
     ]
     print("name,us_per_call,derived")
     failed = []

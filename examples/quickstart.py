@@ -4,6 +4,12 @@ Reproduces the headline phenomenon of Fig. 2 (right): with heterogeneous data
 and tau=10 local steps, the decoupled-prox algorithm with drift correction
 converges to machine precision while FedDA stalls at a drift floor.
 
+Execution goes through the unified round engine (repro.exec): the simulator
+fuses ``chunk_rounds`` rounds per compiled call (lax.scan over pre-sampled
+batches), so the 4000-round trajectories below pay one host sync per 16
+rounds instead of one per round.  Swap ``EngineConfig(backend=...)`` for
+"sharded" (mesh-placed) or "protocol" (literal per-client message passing).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -16,6 +22,7 @@ from repro.core.algorithm import DProxConfig
 from repro.core.baselines import FedDA
 from repro.core.prox import L1
 from repro.data.synthetic import logistic_heterogeneous, make_round_batches
+from repro.exec import EngineConfig, RoundEngine
 from repro.fed.simulator import DProxAlgorithm, run
 from repro.models import logreg
 
@@ -42,9 +49,11 @@ R = 4000
 ours = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
 fedda = FedDA(reg, tau, eta, eta_g)
 for alg in (ours, fedda):
+    engine = RoundEngine(alg, grad_fn, 30,
+                         EngineConfig(backend="inline", chunk_rounds=16))
     h = run(alg, params0, grad_fn, supplier, 30, R,
             reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
-            eval_every=R // 8)
+            eval_every=R // 8, engine=engine)
     tail = " <- converges to machine precision" if alg.name == "dprox" \
         else " <- stalls at the client-drift floor"
     print(f"{alg.name:>6s} relative optimality ||G(x^r)||/||G(x^1)||:")

@@ -3,11 +3,13 @@
   Zhang, Hu & Johansson, "Non-convex composite federated learning with
   heterogeneous data" (Automatica / CS.LG 2025).
 
-Subsystems: core/ (Algorithm 1 + baselines + metrics), models/ (10-arch zoo),
-data/ (heterogeneous generators), fed/ (simulator + sharded execution),
-kernels/ (Pallas TPU kernels + jnp oracles), configs/ (assigned archs),
-launch/ (mesh, dry-run, drivers), roofline/ (HLO-derived roofline),
-serving/ (KV-cache engine), checkpoint/ (pytree ckpt).
+Subsystems: core/ (Algorithm 1 + baselines + metrics), exec/ (unified
+round-execution engine: inline/sharded/protocol backends, multi-round
+chunking, partial participation), models/ (10-arch zoo), data/
+(heterogeneous generators), fed/ (simulator + sharded execution, thin
+callers of exec/), kernels/ (Pallas TPU kernels + jnp oracles), configs/
+(assigned archs), launch/ (mesh, dry-run, drivers), roofline/ (HLO-derived
+roofline), serving/ (KV-cache engine), checkpoint/ (pytree ckpt).
 """
 
 __version__ = "1.0.0"

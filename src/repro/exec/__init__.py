@@ -1,0 +1,30 @@
+"""Unified round-execution engine.
+
+One engine runs every federated algorithm in the repo (Algorithm 1 and all
+:mod:`repro.core.baselines`) on every execution substrate:
+
+  * ``inline``   -- single-device ``jax.jit`` (replaces the hand-rolled loop
+    of the old ``fed.simulator.run``);
+  * ``sharded``  -- mesh-placed with explicit state/batch shardings and
+    donated buffers (absorbs ``fed.distributed.make_sharded_round_fn``);
+  * ``protocol`` -- the literal per-client message-passing form of
+    Algorithm 1, kept for equivalence testing.
+
+On top of the backend, the engine owns device-resident *multi-round
+chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with
+pre-sampled batches, metrics accumulated on device and fetched once per
+chunk -- so Python dispatch and the device->host sync are paid once per
+chunk instead of once per round.  Client subsampling (partial participation)
+is a first-class engine option (``EngineConfig.participation``).
+
+    from repro.exec import EngineConfig, RoundEngine
+    eng = RoundEngine(alg, grad_fn, n_clients,
+                      EngineConfig(backend="inline", chunk_rounds=16))
+    state = eng.init(params0)
+    state, metrics = eng.run(state, batch_supplier, rounds=100, rng=rng)
+"""
+from repro.exec.engine import (EngineConfig, RoundEngine,
+                               rounds_to_boundary, sample_active_masks)
+
+__all__ = ["EngineConfig", "RoundEngine", "rounds_to_boundary",
+           "sample_active_masks"]

@@ -1,0 +1,353 @@
+"""The round-execution engine (see package docstring for the overview).
+
+Execution model
+---------------
+
+``RoundEngine`` wraps any :class:`repro.core.baselines.FedAlgorithm`.  The
+algorithm contributes the *math* of one round (``make_round_fn``); the engine
+contributes the *execution*:
+
+  * **chunking** -- ``chunk_rounds`` rounds are fused into one compiled call
+    via ``lax.scan`` over pre-sampled batches (leaves gain a leading
+    chunk axis).  Metrics come back as ``(chunk,)`` device arrays and are
+    fetched with a single ``device_get``, so the host round-trip that
+    dominated the old per-round loops is paid once per chunk;
+  * **donation** -- the (potentially n_clients x d sized) federated state is
+    donated into the compiled call on accelerator backends, so x_bar/c update
+    in place instead of doubling peak memory;
+  * **placement** -- the ``sharded`` backend installs the mesh shardings of
+    :mod:`repro.launch.sharding` on state and batches (plan A/B), exactly as
+    ``fed.distributed.make_sharded_round_fn`` used to;
+  * **participation** -- optional client subsampling: the engine samples an
+    ``(chunk, n_clients)`` participation mask per chunk and threads it into
+    round functions that accept an ``active`` argument (Algorithm 1's
+    compact form does; see ``core.algorithm.make_round_fn``).
+
+Backends never change the math: ``tests/test_exec.py`` pins trajectory
+parity between inline/sharded/protocol and chunked/unchunked execution.
+"""
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import FedAlgorithm
+
+Batch = Any
+BatchSupplier = Callable[[int, np.random.Generator], Batch]
+
+BACKENDS = ("inline", "sharded", "protocol")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Execution options -- orthogonal to the algorithm being run.
+
+    backend        : "inline" (single-device jit), "sharded" (mesh-placed,
+                     DProxState only) or "protocol" (literal per-client
+                     message passing; equivalence testing).
+    chunk_rounds   : rounds fused per compiled call (lax.scan).  1 reproduces
+                     the historical round-at-a-time loops exactly.
+    jit            : disable to run the round function eagerly (debugging);
+                     forces chunk_rounds=1.
+    donate_state   : donate the federated state into the compiled call.
+                     Ignored on CPU, where XLA does not implement donation.
+    participation  : if set, the fraction of clients active each round
+                     (uniform sampling without replacement, >= 1 client).
+                     Requires a round function with an ``active`` argument.
+    mesh/param_specs/plan : sharded backend only -- the device mesh, the
+                     logical-axis spec tree of the parameters, and the
+                     federated placement plan ("A" or "B").
+    """
+
+    backend: str = "inline"
+    chunk_rounds: int = 1
+    jit: bool = True
+    donate_state: bool = True
+    participation: Optional[float] = None
+    mesh: Any = None
+    param_specs: Any = None
+    plan: str = "A"
+
+    def validate(self) -> None:
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got "
+                             f"{self.backend!r}")
+        if self.chunk_rounds < 1:
+            raise ValueError(f"chunk_rounds must be >= 1, got "
+                             f"{self.chunk_rounds}")
+        if self.participation is not None and not (0.0 < self.participation <= 1.0):
+            raise ValueError(f"participation must be in (0, 1], got "
+                             f"{self.participation}")
+        if self.backend == "sharded" and self.mesh is None:
+            raise ValueError("sharded backend requires a mesh")
+        if self.backend == "sharded" and not self.jit:
+            raise ValueError("sharded backend requires jit (the eager path "
+                             "performs no mesh placement)")
+        if self.backend == "protocol" and self.participation is not None:
+            raise ValueError("protocol backend does not support partial "
+                             "participation")
+
+
+def rounds_to_boundary(r: int, every: int, total: int) -> int:
+    """Rounds from ``r`` to the next multiple of ``every``, capped at
+    ``total`` -- the segment length drivers hand to :meth:`RoundEngine.run`
+    between periodic eval/checkpoint points."""
+    return min(total, (r // every + 1) * every) - r
+
+
+def sample_active_masks(
+    n_clients: int, n_rounds: int, participation: float,
+    rng: np.random.Generator,
+) -> np.ndarray:
+    """(n_rounds, n_clients) bool masks: uniform subsampling w/o replacement."""
+    m = max(1, int(round(participation * n_clients)))
+    masks = np.zeros((n_rounds, n_clients), bool)
+    for r in range(n_rounds):
+        masks[r, rng.choice(n_clients, size=m, replace=False)] = True
+    return masks
+
+
+def _stack_batches(per_round: list) -> Batch:
+    """Stack per-round batch pytrees along a new leading axis.
+
+    Device-resident (jax) leaves stay on device -- no host round-trip; host
+    (numpy/scalar) leaves stack on host and transfer once at the jit call.
+    """
+
+    def lead1(x):
+        return x[None] if isinstance(x, jax.Array) else np.asarray(x)[None]
+
+    if len(per_round) == 1:  # view, not copy -- the chunk-of-1 hot path
+        return jax.tree_util.tree_map(lead1, per_round[0])
+
+    def stack(*xs):
+        if any(isinstance(x, jax.Array) for x in xs):
+            return jnp.stack([jnp.asarray(x) for x in xs])
+        return np.stack([np.asarray(x) for x in xs])
+
+    return jax.tree_util.tree_map(stack, *per_round)
+
+
+class RoundEngine:
+    """Runs federated rounds for one (algorithm, grad_fn, n_clients) triple.
+
+    The compiled artifacts are cached on the engine, so build it once per
+    training run and reuse it across ``run``/``step`` calls.
+    """
+
+    def __init__(
+        self,
+        algorithm: FedAlgorithm,
+        grad_fn,
+        n_clients: int,
+        config: EngineConfig = EngineConfig(),
+    ):
+        config.validate()
+        self.algorithm = algorithm
+        self.grad_fn = grad_fn
+        self.n_clients = n_clients
+        self.config = config
+
+        if config.backend == "protocol":
+            if not hasattr(algorithm, "make_protocol_round_fn"):
+                raise ValueError(
+                    f"algorithm {algorithm.name!r} has no protocol form "
+                    "(make_protocol_round_fn); use the inline backend")
+            self._round_fn = algorithm.make_protocol_round_fn(grad_fn)
+            self._accepts_active = False
+        else:
+            self._round_fn = algorithm.make_round_fn(grad_fn)
+            self._accepts_active = (
+                "active" in inspect.signature(self._round_fn).parameters
+            )
+        if config.participation is not None and not self._accepts_active:
+            raise ValueError(
+                f"algorithm {algorithm.name!r} does not support partial "
+                "participation (round_fn has no 'active' argument)")
+
+        self._use_active = config.participation is not None
+        self._chunked_call = None  # compiled lazily (needs a state template)
+        self._state_shardings = None
+
+    # -- state ------------------------------------------------------------
+
+    def init(self, params0):
+        """Algorithm state, placed on the backend's devices."""
+        state = self.algorithm.init(params0, self.n_clients)
+        if self.config.backend == "sharded":
+            state = jax.device_put(state, self.state_shardings(state))
+        return state
+
+    def set_state_shardings(self, shardings) -> None:
+        """Install precomputed state shardings (sharded backend)."""
+        self._state_shardings = shardings
+
+    def state_shardings(self, state):
+        """Mesh shardings for the federated state (sharded backend)."""
+        from repro.core.algorithm import DProxState
+        from repro.launch import sharding as shd
+
+        if self._state_shardings is None:
+            if not isinstance(state, DProxState):
+                raise ValueError(
+                    "the sharded backend currently places DProxState only; "
+                    f"got {type(state).__name__} (run baselines inline)")
+            self._state_shardings = shd.fed_state_shardings(
+                self.config.mesh, state.x_bar, self.config.param_specs,
+                self.config.plan, self.n_clients)
+        return self._state_shardings
+
+    # -- compiled chunk ---------------------------------------------------
+
+    def _make_chunk_fn(self):
+        round_fn, with_active = self._round_fn, self._use_active
+
+        def chunk_fn(state, batches, active):
+            def body(st, xs):
+                if with_active:
+                    b, a = xs
+                    st, info = round_fn(st, b, active=a)
+                else:
+                    st, info = round_fn(st, xs)
+                return st, info
+
+            xs = (batches, active) if with_active else batches
+            return jax.lax.scan(body, state, xs)
+
+        return chunk_fn
+
+    def _build_chunked_call(self, state):
+        cfg = self.config
+        chunk_fn = self._make_chunk_fn()
+        donate = (cfg.donate_state and cfg.jit
+                  and jax.default_backend() != "cpu")
+        donate_argnums = (0,) if donate else ()
+
+        if cfg.backend == "sharded":
+            from repro.launch import sharding as shd
+
+            state_sh = self.state_shardings(state)
+            jitted = jax.jit(chunk_fn, out_shardings=(state_sh, None),
+                             donate_argnums=donate_argnums)
+
+            def call(state, batches, active):
+                batches = jax.device_put(
+                    batches,
+                    shd.batch_shardings(cfg.mesh, batches, cfg.plan,
+                                        chunk_axis=True))
+                return jitted(state, batches, active)
+
+            return call
+        # only reached with jit enabled (validate() rejects sharded+eager,
+        # and the eager path never builds a chunked call)
+        return jax.jit(chunk_fn, donate_argnums=donate_argnums)
+
+    def _invoke_chunk(self, state, per_round_batches, active):
+        """Run ``len(per_round_batches)`` rounds in one compiled call."""
+        if self.config.backend == "protocol" or not self.config.jit:
+            stacked: dict[str, list] = {}
+            for i, b in enumerate(per_round_batches):
+                if self._use_active:
+                    state, info = self._round_fn(
+                        state, b, active=jnp.asarray(active[i]))
+                else:
+                    state, info = self._round_fn(state, b)
+                for k, v in info.items():
+                    stacked.setdefault(k, []).append(v)
+            return state, {k: np.asarray(v) for k, v in stacked.items()}
+        if self._chunked_call is None:
+            self._chunked_call = self._build_chunked_call(state)
+        batches = _stack_batches(per_round_batches)
+        act = jnp.asarray(active) if self._use_active else None
+        state, infos = self._chunked_call(state, batches, act)
+        return state, jax.device_get(infos)  # the chunk's ONE host sync
+
+    # -- public API -------------------------------------------------------
+
+    def run(
+        self,
+        state,
+        batch_supplier: BatchSupplier,
+        rounds: int,
+        *,
+        rng: Optional[np.random.Generator] = None,
+        seed: int = 0,
+        start_round: int = 0,
+        metrics_cb: Optional[Callable[[int, dict], None]] = None,
+    ):
+        """Run ``rounds`` rounds from ``state``; returns (state, metrics).
+
+        ``batch_supplier(round_idx, rng)`` must return a pytree with leading
+        dims ``(n_clients, tau, ...)`` -- the same contract as the historical
+        simulator loop.  ``metrics`` maps metric name -> list with one float
+        per executed round.  ``metrics_cb(round_idx, round_metrics)``, if
+        given, fires per round (from per-chunk host fetches).
+        """
+        if rng is None:
+            rng = np.random.default_rng(seed)
+        metrics: dict[str, list] = {}
+        chunk = self.config.chunk_rounds if self.config.jit else 1
+        done = 0
+        while done < rounds:
+            c = min(chunk, rounds - done)
+            # interleave batch and mask draws per round (not per chunk) so an
+            # rng-consuming supplier sees a chunk-size-invariant rng stream:
+            # the trajectory must not depend on chunk_rounds
+            per_round, masks = [], []
+            for i in range(c):
+                per_round.append(batch_supplier(start_round + done + i, rng))
+                if self._use_active:
+                    masks.append(sample_active_masks(
+                        self.n_clients, 1, self.config.participation, rng)[0])
+            active = np.stack(masks) if self._use_active else None
+            state, infos = self._invoke_chunk(state, per_round, active)
+            per_round_infos = [{} for _ in range(c)]
+            for k, v in infos.items():
+                arr = np.asarray(v)
+                for i in range(c):
+                    x = arr[i]
+                    per_round_infos[i][k] = float(x) if np.ndim(x) == 0 else x
+                    metrics.setdefault(k, []).append(per_round_infos[i][k])
+            if metrics_cb is not None:
+                for i in range(c):
+                    metrics_cb(start_round + done + i, per_round_infos[i])
+            done += c
+        return state, metrics
+
+    def step(self, state, batches, active=None):
+        """One round (the historical ``round_fn(state, batches)`` surface).
+
+        Runs through the same compiled chunk path with chunk length 1, so a
+        ``step`` trajectory is the chunked trajectory.
+        """
+        if active is not None and not self._accepts_active:
+            raise ValueError("this algorithm's round_fn takes no active mask")
+        if (active is not None and not self._use_active
+                and self.config.jit and self.config.backend != "protocol"):
+            raise ValueError(
+                "engine compiled without participation support; set "
+                "EngineConfig.participation to thread active masks")
+        if self.config.backend == "protocol" or not self.config.jit:
+            if active is not None:
+                return self._round_fn(state, batches, active=active)
+            return self._round_fn(state, batches)
+        if self._use_active and active is None:
+            raise ValueError("engine configured with participation; pass the "
+                             "active mask explicitly to step()")
+        if self._chunked_call is None:
+            self._chunked_call = self._build_chunked_call(state)
+        per_chunk = _stack_batches([batches])
+        act = None
+        if self._use_active:
+            act = jnp.asarray(np.asarray(active)[None])
+        state, infos = self._chunked_call(state, per_chunk, act)
+        return state, {k: v[0] for k, v in infos.items()}
+
+    def global_params(self, state):
+        return self.algorithm.global_params(state)

@@ -1,20 +1,19 @@
 """Sharded federated execution: place Algorithm 1 rounds on a device mesh.
 
-Reuses the same logical-axis rules as the production dry-run, but with
-concrete arrays on whatever mesh exists (8 forced-host CPU devices in the
-integration tests, a real TPU slice in deployment).  The math is bitwise the
-single-device simulator's -- tests/test_distributed.py asserts it.
+Since the exec refactor this is a thin compatibility surface over the
+unified round-execution engine (:mod:`repro.exec`) with
+``backend="sharded"``: the engine owns the jit, the explicit in/out
+shardings, buffer donation and (optionally) multi-round chunking.  The math
+is bitwise the single-device simulator's -- tests/test_distributed.py
+asserts it.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
-
 import jax
-import jax.numpy as jnp
 
 from repro.core import algorithm as A
 from repro.core.prox import Regularizer
+from repro.exec import EngineConfig, RoundEngine
 from repro.launch import sharding as shd
 
 
@@ -25,22 +24,29 @@ def shard_fed_state(mesh, state: A.DProxState, param_specs, plan: str):
     return jax.device_put(state, sh), sh
 
 
+def make_sharded_engine(mesh, fed_cfg: A.DProxConfig, reg: Regularizer,
+                        grad_fn, param_specs, plan: str, n_clients: int,
+                        *, chunk_rounds: int = 1) -> RoundEngine:
+    """A sharded-backend RoundEngine for Algorithm 1 on ``mesh``."""
+    from repro.fed.simulator import DProxAlgorithm
+
+    return RoundEngine(
+        DProxAlgorithm(reg, fed_cfg), grad_fn, n_clients,
+        EngineConfig(backend="sharded", chunk_rounds=chunk_rounds,
+                     mesh=mesh, param_specs=param_specs, plan=plan))
+
+
 def make_sharded_round_fn(mesh, fed_cfg: A.DProxConfig, reg: Regularizer,
                           grad_fn, param_specs, plan: str, n_clients: int,
                           params_template):
-    """jit'd round_fn with explicit in/out shardings and donated state."""
-    round_fn = A.make_round_fn(fed_cfg, reg, grad_fn)
+    """Historical surface: jit'd round_fn with explicit shardings + donation.
+
+    Returns ``(step, state_shardings)`` where ``step(state, batches)`` runs
+    one round through the engine's compiled chunk path.
+    """
+    engine = make_sharded_engine(mesh, fed_cfg, reg, grad_fn, param_specs,
+                                 plan, n_clients)
     state_sh = shd.fed_state_shardings(mesh, params_template, param_specs,
                                        plan, n_clients)
-
-    def batch_sharding(batches):
-        return shd.batch_shardings(mesh, batches, plan)
-
-    jitted = jax.jit(round_fn, out_shardings=(state_sh, None),
-                     donate_argnums=(0,))
-
-    def step(state, batches):
-        batches = jax.device_put(batches, batch_sharding(batches))
-        return jitted(state, batches)
-
-    return step, state_sh
+    engine.set_state_shardings(state_sh)
+    return engine.step, state_sh

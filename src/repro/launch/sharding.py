@@ -178,12 +178,19 @@ def fed_state_shardings(mesh, param_tree, param_specs, plan: str, n_clients: int
     return DProxState(x_bar=xb, c=c, round=scalar)
 
 
-def batch_shardings(mesh, batches, plan: str):
-    """Shardings for fed-round batches: leaves (client, tau, b, ...)."""
+def batch_shardings(mesh, batches, plan: str, *, chunk_axis: bool = False):
+    """Shardings for fed-round batches: leaves (client, tau, b, ...).
+
+    ``chunk_axis=True`` handles the round-execution engine's chunked batches,
+    whose leaves carry an extra leading (rounds-per-chunk) axis that is never
+    sharded (rounds are sequential under the engine's ``lax.scan``).
+    """
     rules = batch_rules(plan)
+    lead = ("none",) if chunk_axis else ()
 
     def one(x):
-        axes = ("client", "tau", "batch") + ("seq",) * (x.ndim - 3)
+        axes = lead + ("client", "tau", "batch")
+        axes = axes + ("seq",) * (x.ndim - len(axes))
         return NamedSharding(mesh, spec_for(x.shape, axes, rules, mesh))
 
     return jax.tree_util.tree_map(one, batches)

@@ -4,6 +4,10 @@ Trains any registry architecture (reduced "smoke" scale by default; the full
 configs are exercised via the dry-run) with Algorithm 1 over heterogeneous
 per-client token streams, with checkpointing and optional mesh sharding.
 
+Execution goes through the unified round engine (:mod:`repro.exec`):
+``--chunk N`` fuses N rounds per compiled call (one host sync per chunk) and
+``--participation f`` subsamples a fraction of clients each round.
+
     PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
         --scale smoke --rounds 50 --tau 4 --clients 4 --ckpt out/ck.npz
 
@@ -29,6 +33,7 @@ from repro.core.algorithm import DProxConfig
 from repro.core.baselines import FedAvg, FedDA, FedMid, Scaffold
 from repro.core.prox import L1
 from repro.data.synthetic import token_stream_heterogeneous
+from repro.exec import EngineConfig, RoundEngine, rounds_to_boundary
 from repro.fed.simulator import DProxAlgorithm
 from repro.models import transformer as T
 from repro.models.layers import AttnCfg
@@ -82,6 +87,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="rounds fused per compiled engine call")
+    ap.add_argument("--participation", type=float, default=None,
+                    help="fraction of clients active per round (dprox only)")
     args = ap.parse_args(argv)
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
@@ -101,36 +110,52 @@ def main(argv=None):
     reg = L1(lam=args.lam)
     alg = make_algorithm(args.algorithm, reg, args.tau, args.eta, args.eta_g)
     grad_fn = T.make_grad_fn(cfg)
-    state = alg.init(params, args.clients)
-    round_fn = jax.jit(alg.make_round_fn(grad_fn))
+    engine = RoundEngine(
+        alg, grad_fn, args.clients,
+        EngineConfig(backend="inline", chunk_rounds=args.chunk,
+                     participation=args.participation))
+    state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 
-    def sample_batches():
+    def sample_batches(round_idx, rng):
         idx = rng.integers(0, streams.shape[1],
                            size=(args.clients, args.tau, args.batch))
         toks = streams[np.arange(args.clients)[:, None, None], idx]
-        return {"tokens": jnp.asarray(toks, jnp.int32)}
+        return {"tokens": np.asarray(toks, np.int32)}
 
     t0 = time.time()
-    for r in range(args.rounds):
-        state, info = round_fn(state, sample_batches())
-        if r % args.log_every == 0 or r == args.rounds - 1:
-            loss = float(info["train_loss"])
-            print(f"round {r:5d}  loss {loss:.4f}  "
-                  f"({(time.time()-t0)/(r+1):.2f}s/round)", flush=True)
-        if args.ckpt and (r + 1) % args.ckpt_every == 0:
+    last_loss = float("nan")
+
+    def log_cb(ri, info):
+        # fires per chunk (not per block), so logs stream every --chunk rounds
+        if ri % args.log_every == 0 or ri == args.rounds - 1:
+            print(f"round {ri:5d}  loss {info.get('train_loss', np.nan):.4f}  "
+                  f"({(time.time()-t0)/(ri+1):.2f}s/round)", flush=True)
+
+    # checkpoint cadence only matters when checkpointing is on
+    ckpt_every = (args.ckpt_every if args.ckpt and args.ckpt_every > 0
+                  else args.rounds)
+    r = 0
+    while r < args.rounds:
+        # align engine segments to the checkpoint cadence
+        k = rounds_to_boundary(r, ckpt_every, args.rounds)
+        state, metrics = engine.run(state, sample_batches, k,
+                                    rng=rng, start_round=r,
+                                    metrics_cb=log_cb)
+        losses = metrics.get("train_loss", [])
+        if losses:
+            last_loss = losses[-1]
+        r += k
+        if args.ckpt and (r % ckpt_every == 0 or r == args.rounds):
             ckpt.save(state, args.ckpt,
-                      metadata={"round": r + 1, "arch": cfg.name,
+                      metadata={"round": r, "arch": cfg.name,
                                 "algorithm": args.algorithm})
-    final = alg.global_params(state)
+    final = engine.global_params(state)
     if args.ckpt:
-        ckpt.save(state, args.ckpt, metadata={"round": args.rounds,
-                                              "arch": cfg.name,
-                                              "algorithm": args.algorithm})
         print(f"checkpoint -> {args.ckpt}")
     from repro.core.metrics import sparsity
 
-    print(f"done: final loss {float(info['train_loss']):.4f}, "
+    print(f"done: final loss {last_loss:.4f}, "
           f"global-model sparsity {float(sparsity(final)):.3f}")
     return state
 

@@ -1,0 +1,115 @@
+"""Optional-``hypothesis`` compat layer for the property-based tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``strategies``
+are re-exported unchanged.  When it is NOT (clean CI boxes, the pinned
+accelerator image), a minimal deterministic stand-in runs each ``@given``
+test over a fixed edge-case grid instead of aborting collection with an
+ImportError:
+
+  * ``st.integers(lo, hi)``  -> bounds, midpoint, near-bound values;
+  * ``st.floats(lo, hi)``    -> bounds, midpoint, and (when the range allows)
+    +/-0.0, a subnormal, and large magnitudes -- the inputs that break
+    soft-threshold/prox implementations;
+  * ``.map(f)``              -> applies f to the grid;
+  * ``@settings(...)``       -> no-op.
+
+Example lists are zipped with co-prime strides (not a full cartesian
+product), so a test with three strategies still runs a handful of times with
+varied combinations rather than exploding.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fall back to the fixed grid
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+
+    class _Strategy:
+        def __init__(self, examples):
+            # dedupe preserving order (0.0 == -0.0: key on the repr too)
+            seen, out = set(), []
+            for x in examples:
+                k = (type(x).__name__, repr(x))
+                if k not in seen:
+                    seen.add(k)
+                    out.append(x)
+            self.examples = out
+
+        def map(self, f):
+            return _Strategy([f(x) for x in self.examples])
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            return _Strategy([
+                min_value, max_value, mid,
+                min(min_value + 1, max_value),
+                max(max_value - 1, min_value),
+                min(min_value + 12345, max_value),
+                min(min_value + 4999, max_value),
+            ])
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            mid = 0.5 * (min_value + max_value)
+            cand = [min_value, max_value, mid,
+                    0.75 * min_value + 0.25 * max_value]
+            if min_value <= 0.0 <= max_value:
+                cand += [0.0, 5e-324, 1e-308]  # zero + subnormal + tiny
+            if min_value < 0.0:
+                cand.append(-0.0)
+            cand.append(min(max_value, 1e30))  # large magnitude
+            return _Strategy([min(max(c, min_value), max_value)
+                              for c in cand])
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(list(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    # co-prime strides so zipped grids vary together instead of in lockstep
+    _STRIDES = (1, 3, 5, 7, 11, 13)
+
+    def given(*args, **kwargs):
+        if args:
+            raise TypeError(
+                "the hypothesis fallback supports keyword-form @given only")
+        names = list(kwargs)
+        grids = [kwargs[n].examples for n in names]
+        n_runs = max((len(g) for g in grids), default=0)
+
+        def deco(test):
+            @functools.wraps(test)
+            def wrapper(*targs, **tkw):
+                for i in range(n_runs):
+                    ex = {
+                        n: g[(i * _STRIDES[j % len(_STRIDES)]) % len(g)]
+                        for j, (n, g) in enumerate(zip(names, grids))
+                    }
+                    test(*targs, **tkw, **ex)
+
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (hypothesis does the same)
+            sig = inspect.signature(test)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for n, p in sig.parameters.items() if n not in kwargs])
+            return wrapper
+
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(test):
+            return test
+
+        return deco
+
+
+st = strategies

@@ -1,0 +1,338 @@
+"""Round-execution engine (repro.exec) correctness.
+
+Pins the engine's core contract: backends and chunking change HOW rounds
+execute, never WHAT they compute.
+
+  * chunked (lax.scan over rounds) == round-at-a-time, same trajectory;
+  * inline == sharded (mesh-placed) == protocol (literal per-client message
+    passing), on the synthetic heterogeneous logreg problem;
+  * partial participation: a full mask reproduces the dense path exactly;
+    subsampled clients keep non-participants' state frozen;
+  * every baseline FedAlgorithm runs through the engine unchanged.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypo import HAVE_HYPOTHESIS  # noqa: F401  (imports must not require it)
+from repro.core import algorithm as A
+from repro.core.baselines import (FastFedDA, FedAvg, FedDA, FedMid, FedProx,
+                                  Scaffold)
+from repro.core.prox import L1
+from repro.data.synthetic import logistic_heterogeneous, make_round_batches
+from repro.exec import EngineConfig, RoundEngine, sample_active_masks
+from repro.fed.simulator import DProxAlgorithm, run
+from repro.models import logreg
+from repro.utils import tree as tu
+
+
+def _problem(n=6, m=30, d=10, seed=0, lam=0.01):
+    data = logistic_heterogeneous(
+        n_clients=n, m_per_client=m, d=d, alpha=5, beta=5, seed=seed)
+    s = np.linalg.norm(data.features.reshape(-1, d), axis=1).max()
+    data.features = (data.features / s).astype(np.float64)
+    data.labels = data.labels.astype(np.float64)
+    reg = L1(lam=lam)
+    grad_fn = logreg.make_grad_fn()
+    params0 = {"w": jnp.zeros(d, jnp.float64), "b": jnp.zeros((), jnp.float64)}
+    return data, reg, grad_fn, params0
+
+
+def _dprox(reg, tau=3, eta=0.05, eta_g=2.0):
+    return DProxAlgorithm(reg, A.DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
+
+
+def _supplier(data, tau, batch):
+    """Deterministic per-round batches: immune to rng interleaving across
+    chunk boundaries / participation mask draws."""
+
+    def supplier(r, rng):
+        return make_round_batches(data, tau, batch,
+                                  np.random.default_rng(10_000 + r))
+
+    return supplier
+
+
+def _run_engine(engine, params0, supplier, rounds):
+    state = engine.init(params0)
+    state, metrics = engine.run(state, supplier, rounds, seed=0)
+    return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# chunked == unchunked
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_matches_round_at_a_time():
+    data, reg, grad_fn, params0 = _problem()
+    supplier = _supplier(data, 3, 8)
+    alg = _dprox(reg)
+    rounds = 11  # not a multiple of the chunk: exercises the remainder chunk
+    s1, m1 = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(chunk_rounds=1)), params0, supplier, rounds)
+    s4, m4 = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(chunk_rounds=4)), params0, supplier, rounds)
+    np.testing.assert_allclose(np.asarray(s1.x_bar["w"]),
+                               np.asarray(s4.x_bar["w"]), rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(s1.c["w"]),
+                               np.asarray(s4.c["w"]), rtol=1e-10, atol=1e-12)
+    assert len(m1["train_loss"]) == len(m4["train_loss"]) == rounds
+    np.testing.assert_allclose(m1["train_loss"], m4["train_loss"], rtol=1e-6)
+
+
+def test_simulator_history_invariant_to_chunking():
+    data, reg, grad_fn, params0 = _problem(seed=3)
+    supplier = _supplier(data, 3, 8)
+    alg = _dprox(reg)
+    hists = [
+        run(alg, params0, grad_fn, supplier, data.n_clients, 10,
+            eval_every=4, chunk_rounds=ch)
+        for ch in (1, 8)
+    ]
+    assert hists[0].rounds == hists[1].rounds
+    np.testing.assert_allclose(hists[0].loss, hists[1].loss, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(hists[0].extra["final_params"]["w"]),
+        np.asarray(hists[1].extra["final_params"]["w"]), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# backend parity
+# ---------------------------------------------------------------------------
+
+
+def test_protocol_backend_matches_inline():
+    data, reg, grad_fn, params0 = _problem(seed=1)
+    supplier = _supplier(data, 4, 8)
+    alg = _dprox(reg, tau=4)
+    s_in, _ = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(backend="inline", chunk_rounds=2)),
+        params0, supplier, 4)
+    s_pr, _ = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(backend="protocol")),
+        params0, supplier, 4)
+    np.testing.assert_allclose(np.asarray(s_in.x_bar["w"]),
+                               np.asarray(s_pr.x_bar["w"]),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(s_in.c["w"]),
+                               np.asarray(s_pr.c["w"]),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_sharded_backend_matches_inline_single_device():
+    from repro.launch.mesh import make_mesh_compat
+
+    data, reg, grad_fn, params0 = _problem(seed=2)
+    supplier = _supplier(data, 3, 8)
+    alg = _dprox(reg)
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
+    pspecs = {"w": ("mlp",), "b": ()}
+    s_in, _ = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(backend="inline", chunk_rounds=3)),
+        params0, supplier, 6)
+    s_sh, m_sh = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(backend="sharded", chunk_rounds=3,
+                                 mesh=mesh, param_specs=pspecs, plan="A")),
+        params0, supplier, 6)
+    np.testing.assert_allclose(np.asarray(s_in.x_bar["w"]),
+                               np.asarray(s_sh.x_bar["w"]), rtol=1e-12)
+    assert len(m_sh["train_loss"]) == 6
+
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 4
+from repro.core.algorithm import DProxConfig
+from repro.core.prox import L1
+from repro.data.synthetic import logistic_heterogeneous, make_round_batches
+from repro.exec import EngineConfig, RoundEngine
+from repro.fed.simulator import DProxAlgorithm
+from repro.launch.mesh import make_mesh_compat
+from repro.models import logreg
+
+data = logistic_heterogeneous(n_clients=8, m_per_client=30, d=10,
+                              alpha=5, beta=5, seed=0)
+data.features = data.features.astype(np.float64)
+data.labels = data.labels.astype(np.float64)
+reg = L1(lam=0.01)
+grad_fn = logreg.make_grad_fn()
+params0 = {"w": jnp.zeros(10, jnp.float64), "b": jnp.zeros((), jnp.float64)}
+alg = DProxAlgorithm(reg, DProxConfig(tau=3, eta=0.02, eta_g=2.0))
+sup = lambda r, rng: make_round_batches(data, 3, 8,
+                                        np.random.default_rng(10_000 + r))
+
+inline = RoundEngine(alg, grad_fn, 8, EngineConfig(chunk_rounds=2))
+s_in, _ = inline.run(inline.init(params0), sup, 6, seed=0)
+
+mesh = make_mesh_compat((2, 2), ("data", "model"))
+sharded = RoundEngine(alg, grad_fn, 8, EngineConfig(
+    backend="sharded", chunk_rounds=2, mesh=mesh,
+    param_specs={"w": ("mlp",), "b": ()}, plan="A"))
+s_sh, _ = sharded.run(sharded.init(params0), sup, 6, seed=0)
+
+diff = float(np.abs(np.asarray(s_in.x_bar["w"]) -
+                    np.asarray(s_sh.x_bar["w"])).max())
+print("maxdiff", diff)
+assert diff < 1e-12, diff
+print("EXEC_SHARDED_OK")
+"""
+
+
+def test_sharded_backend_matches_inline_multi_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "EXEC_SHARDED_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# partial participation
+# ---------------------------------------------------------------------------
+
+
+def test_full_participation_mask_equals_dense_path():
+    data, reg, grad_fn, params0 = _problem(seed=4)
+    supplier = _supplier(data, 3, 8)
+    alg = _dprox(reg)
+    s_dense, _ = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(chunk_rounds=2)), params0, supplier, 6)
+    s_full, _ = _run_engine(
+        RoundEngine(alg, grad_fn, data.n_clients,
+                    EngineConfig(chunk_rounds=2, participation=1.0)),
+        params0, supplier, 6)
+    np.testing.assert_allclose(np.asarray(s_dense.x_bar["w"]),
+                               np.asarray(s_full.x_bar["w"]),
+                               rtol=1e-12, atol=1e-14)
+
+
+def test_partial_participation_freezes_inactive_clients():
+    data, reg, grad_fn, params0 = _problem(seed=5)
+    alg = _dprox(reg)
+    engine = RoundEngine(alg, grad_fn, data.n_clients,
+                         EngineConfig(participation=0.5))
+    state = engine.init(params0)
+    rng = np.random.default_rng(0)
+    # warm up so corrections are non-zero, then apply an explicit mask
+    state, _ = engine.run(state, _supplier(data, 3, 8), 3, rng=rng)
+    c_before = np.asarray(state.c["w"])
+    active = np.zeros(data.n_clients, bool)
+    active[:2] = True
+    batches = make_round_batches(data, 3, 8, rng)
+    state, _ = engine.step(state, batches, active=active)
+    c_after = np.asarray(state.c["w"])
+    np.testing.assert_array_equal(c_before[2:], c_after[2:])  # frozen
+    assert np.abs(c_before[:2] - c_after[:2]).max() > 0  # participants moved
+
+
+def test_partial_participation_trains():
+    data, reg, grad_fn, params0 = _problem(seed=6)
+    supplier = _supplier(data, 3, 8)
+    alg = _dprox(reg, eta=0.05, eta_g=2.0)
+    engine = RoundEngine(alg, grad_fn, data.n_clients,
+                         EngineConfig(chunk_rounds=5, participation=0.5))
+    state, metrics = _run_engine(engine, params0, supplier, 30)
+    losses = metrics["train_loss"]
+    assert len(losses) == 30
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert bool(tu.tree_isfinite(state.x_bar))
+
+
+def test_participation_trajectory_invariant_to_chunking():
+    """Mask draws interleave with batch draws per ROUND, so an rng-consuming
+    supplier sees the same rng stream whatever the chunk size (regression:
+    per-chunk mask sampling made the trajectory depend on chunk_rounds)."""
+    data, reg, grad_fn, params0 = _problem(seed=8)
+    alg = _dprox(reg)
+
+    def rng_supplier(r, rng):  # consumes the SHARED rng, unlike _supplier
+        return make_round_batches(data, 3, 8, rng)
+
+    states = []
+    for ch in (1, 4):
+        engine = RoundEngine(alg, grad_fn, data.n_clients,
+                             EngineConfig(chunk_rounds=ch, participation=0.5))
+        state = engine.init(params0)
+        state, _ = engine.run(state, rng_supplier, 6,
+                              rng=np.random.default_rng(42))
+        states.append(state)
+    np.testing.assert_allclose(np.asarray(states[0].x_bar["w"]),
+                               np.asarray(states[1].x_bar["w"]),
+                               rtol=1e-12, atol=1e-14)
+
+
+def test_sample_active_masks_shape_and_count():
+    rng = np.random.default_rng(0)
+    masks = sample_active_masks(10, 7, 0.3, rng)
+    assert masks.shape == (7, 10) and masks.dtype == bool
+    assert (masks.sum(axis=1) == 3).all()
+    # at least one client participating even for tiny fractions
+    assert (sample_active_masks(10, 5, 0.01, rng).sum(axis=1) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# baselines + config validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alg_factory", [
+    lambda reg: FedAvg(tau=3, eta=0.05),
+    lambda reg: FedMid(reg, tau=3, eta=0.05),
+    lambda reg: FedDA(reg, tau=3, eta=0.05, eta_g=2.0),
+    lambda reg: FastFedDA(reg, tau=3, eta0=0.05),
+    lambda reg: Scaffold(reg, tau=3, eta=0.05),
+    lambda reg: FedProx(reg, tau=3, eta=0.05),
+], ids=["fedavg", "fedmid", "fedda", "fast_fedda", "scaffold", "fedprox"])
+def test_baselines_run_through_engine_chunked(alg_factory):
+    data, reg, grad_fn, params0 = _problem(seed=7)
+    supplier = _supplier(data, 3, 8)
+    alg = alg_factory(reg)
+    engine = RoundEngine(alg, grad_fn, data.n_clients,
+                         EngineConfig(chunk_rounds=3))
+    state, metrics = _run_engine(engine, params0, supplier, 6)
+    assert len(metrics["train_loss"]) == 6
+    assert np.isfinite(metrics["train_loss"]).all()
+    assert bool(tu.tree_isfinite(engine.global_params(state)))
+
+
+def test_engine_config_validation():
+    data, reg, grad_fn, params0 = _problem()
+    with pytest.raises(ValueError, match="backend"):
+        EngineConfig(backend="warp").validate()
+    with pytest.raises(ValueError, match="participation"):
+        EngineConfig(participation=1.5).validate()
+    with pytest.raises(ValueError, match="mesh"):
+        EngineConfig(backend="sharded").validate()
+    with pytest.raises(ValueError, match="partial participation"):
+        EngineConfig(backend="protocol", participation=0.5).validate()
+    # baselines have no active-mask support -> constructing the engine fails
+    with pytest.raises(ValueError, match="partial participation"):
+        RoundEngine(FedAvg(tau=2, eta=0.1), grad_fn, data.n_clients,
+                    EngineConfig(participation=0.5))
+    # and no protocol form either
+    with pytest.raises(ValueError, match="protocol"):
+        RoundEngine(FedAvg(tau=2, eta=0.1), grad_fn, data.n_clients,
+                    EngineConfig(backend="protocol"))

@@ -13,7 +13,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or fixed-grid fallback
 
 from repro.core.prox import L1, ElasticNet, GroupL2, LinfBall, Zero, soft_threshold
 
