@@ -2,8 +2,17 @@
 
 Per communication round and client, every algorithm exchanges some number of
 d-dimensional vectors.  Ours matches FedAvg/FedDA (1 up + 1 down) while ALSO
-correcting client drift; Scaffold/Mime pay 2x for their control variates and
+correcting client drift; Scaffold pays 2x for its control variates and
 Fast-FedDA pays an extra uplink for its gradient memory.
+
+Since the comm refactor, the **uplink** column is measured from the actual
+uplink message pytree each algorithm's ``make_local_fn`` emits
+(``repro.comm.uplink_message_spec``, eval_shape only -- no FLOPs), instead
+of hand-maintained per-algorithm constants: elements-per-client divided by
+the model dimension gives the vectors/round, which then scales to the target
+model sizes.  Downlink stays declared (it is the broadcast global state, not
+part of the uplink message).  A second block reports the compressed-uplink
+bytes for Algorithm 1 under the repro.comm transports.
 
 We report bytes/round/client for the paper's CNN (d=112,458 fp32) and the
 assigned stablelm-1.6b (d=1.64e9 bf16) to show the production-scale stakes.
@@ -13,12 +22,36 @@ from __future__ import annotations
 from benchmarks.common import emit
 
 
+def measured_uplink_vectors(alg, grad_fn, params0, n_clients, tau, d_model):
+    """Vectors/round/client from the algorithm's actual message pytree."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm import message_elements_per_client, uplink_message_spec
+
+    state = alg.init(params0, n_clients)
+    batch = {"a": jax.ShapeDtypeStruct((n_clients, tau, 2, d_model - 1),
+                                       jnp.float32),
+             "y": jax.ShapeDtypeStruct((n_clients, tau, 2), jnp.float32)}
+    spec = uplink_message_spec(alg, grad_fn, state, batch)
+    elements = message_elements_per_client(spec)
+    vectors = elements / d_model
+    assert vectors == int(vectors), (
+        f"{alg.name}: message elements {elements} not a multiple of the "
+        f"model dimension {d_model}")
+    return int(vectors)
+
+
 def main():
+    import jax.numpy as jnp
+
+    from repro.comm import Dense, Quantize, RandK, TopK
     from repro.core.algorithm import DProxConfig
     from repro.core.baselines import (FastFedDA, FedAvg, FedDA, FedMid,
                                       FedProx, Scaffold)
     from repro.core.prox import L1
     from repro.fed.simulator import DProxAlgorithm
+    from repro.models import logreg
 
     reg = L1(lam=1e-4)
     algs = [
@@ -30,12 +63,33 @@ def main():
         Scaffold(reg, 10, 0.01),
         FedProx(reg, 10, 0.01),
     ]
-    for d, dtype_bytes, tag in [(112_458, 4, "cnn"), (1_644_804_096, 2, "stablelm1.6b")]:
+    # probe problem: tiny logreg (d_probe params) -- message SHAPES only
+    d_probe = 21
+    grad_fn = logreg.make_grad_fn()
+    params0 = {"w": jnp.zeros(d_probe - 1, jnp.float32),
+               "b": jnp.zeros((), jnp.float32)}
+    vectors = {alg.name: measured_uplink_vectors(alg, grad_fn, params0,
+                                                 n_clients=4, tau=10,
+                                                 d_model=d_probe)
+               for alg in algs}
+
+    for d, dtype_bytes, tag in [(112_458, 4, "cnn"),
+                                (1_644_804_096, 2, "stablelm1.6b")]:
         for alg in algs:
-            up = alg.uplink_vectors * d * dtype_bytes
+            up = vectors[alg.name] * d * dtype_bytes
             down = alg.downlink_vectors * d * dtype_bytes
             emit(f"comm/{tag}/{alg.name}/uplink_bytes_per_round", 0.0, up)
             emit(f"comm/{tag}/{alg.name}/total_bytes_per_round", 0.0, up + down)
+
+    # compressed uplinks for Algorithm 1: what each transport actually ships
+    # for one d-dim fp32 message (values+indices for sparsifiers, packed
+    # levels+scale for the quantizer)
+    for d, tag in [(112_458, "cnn")]:
+        msg = {"x": jnp.zeros((1, d), jnp.float32)}
+        for tr in [Dense(), TopK(ratio=0.1), RandK(ratio=0.1),
+                   Quantize(bits=8)]:
+            emit(f"comm/{tag}/dprox+{tr.name}/uplink_bytes_per_round", 0.0,
+                 tr.uplink_bytes(msg))
 
 
 if __name__ == "__main__":

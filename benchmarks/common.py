@@ -47,18 +47,21 @@ def logreg_problem(n_clients=30, m=100, d=20, alpha=50.0, beta=50.0, seed=0,
 
 
 def make_engine(algorithm, grad_fn, n_clients, *, backend="inline",
-                chunk_rounds=16, participation=None, jit=True):
+                chunk_rounds=16, participation=None, jit=True,
+                transport=None):
     """RoundEngine with benchmark defaults (chunked inline backend).
 
     Benchmarks that drive the engine directly (exec_bench) build it here;
     the fig* benchmarks go through ``repro.fed.simulator.run``, which builds
-    its own inline engine internally."""
+    its own inline engine internally.  ``transport`` (a repro.comm
+    compressor) pairs with backend="compressed"."""
     from repro.exec import EngineConfig, RoundEngine
 
     return RoundEngine(
         algorithm, grad_fn, n_clients,
         EngineConfig(backend=backend, chunk_rounds=chunk_rounds,
-                     participation=participation, jit=jit))
+                     participation=participation, jit=jit,
+                     transport=transport))
 
 
 class Timer:

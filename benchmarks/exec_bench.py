@@ -1,54 +1,147 @@
-"""Round-loop throughput: chunked engine vs the historical per-round loop.
+"""Round-loop throughput: chunking, batch supply, and compressed uplinks.
 
-Measures wall-clock seconds/round for the paper's sparse-logreg problem
-(tau=10) under the unified round engine with chunk_rounds in {1, 8, 32}.
-chunk_rounds=1 IS the historical loop (one jitted call + one host sync per
-round); larger chunks fuse rounds under one lax.scan and fetch metrics once
-per chunk, so the delta isolates Python dispatch + host-sync overhead.  The
-batch is pre-sampled once so data-generation cost (identical in both modes,
-and pipelined off the round loop in production) doesn't mask the delta.
+Three experiments on the paper's sparse-logreg problem (tau=10):
 
-Emits:  exec/chunk<k>,us_per_round,<speedup vs chunk1>
+  * ``exec/chunk<k>``      -- chunked engine vs the historical per-round
+    loop.  chunk_rounds=1 IS the historical loop (one jitted call + one host
+    sync per round); larger chunks fuse rounds under one lax.scan, so the
+    delta isolates Python dispatch + host-sync overhead.  Batches are
+    pre-sampled once so data-generation cost doesn't mask the delta.
+  * ``exec/supplier_*``    -- per-round host sampling + np.stack (the
+    historical batch assembly) vs the chunk-aware ArraySupplier (one
+    vectorized gather per chunk, host- or device-resident).  Sampling is
+    live here: the supplier IS what's being measured.
+  * ``exec/compressed_*``  -- backend="compressed" at ratio 1.0 (dense
+    transport: the overhead of the local/server split + identity compressor)
+    and with top-k 10% (sparsified uplink; derived column = uplink
+    bytes/client/round).
+
+Emits CSV lines ``name,us_per_round,derived`` AND a machine-readable
+``BENCH_exec.json`` (path override: REPRO_BENCH_JSON) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
+
 from benchmarks.common import QUICK, Timer, emit, logreg_problem, make_engine
+
+ROWS: list[dict] = []
+
+
+def record(name: str, us_per_round: float, derived) -> None:
+    emit(name, us_per_round, derived)
+    ROWS.append({"name": name, "us_per_round": round(us_per_round, 3),
+                 "derived": derived})
+
+
+def _time_run(engine, state, supplier, rounds) -> float:
+    """Best of 3 reps of ``rounds`` rounds, in us/round."""
+    best = float("inf")
+    for _ in range(3):
+        with Timer() as t:
+            state, metrics = engine.run(state, supplier, rounds, seed=2)
+        assert len(metrics["train_loss"]) == rounds
+        best = min(best, t.seconds / rounds * 1e6)
+    return best
+
+
+def bench_chunking(alg, grad_fn, data, params0, rounds, tau) -> None:
+    import numpy as np
+
+    from repro.data.synthetic import make_round_batches
+
+    # small stochastic batches (the paper's Fig. 3 regime): per-round compute
+    # is tiny, so the round loop's dispatch + host-sync overhead dominates --
+    # exactly what chunking removes
+    fixed = make_round_batches(data, tau, 4, np.random.default_rng(0))
+    supplier = lambda r, rng: fixed
+    base_us = None
+    for chunk in (1, 8, 32):
+        engine = make_engine(alg, grad_fn, data.n_clients, chunk_rounds=chunk)
+        state = engine.init(params0)
+        state, _ = engine.run(state, supplier, chunk, seed=1)  # warmup
+        best = _time_run(engine, state, supplier, rounds)
+        if base_us is None:
+            base_us = best
+        record(f"exec/chunk{chunk}", best, f"{base_us / best:.2f}x")
+
+
+def bench_suppliers(alg, grad_fn, data, params0, rounds, tau) -> None:
+    """Host per-round stack vs the chunk-aware vectorized supplier."""
+    from repro.data.synthetic import make_round_batches
+    from repro.exec import ArraySupplier
+
+    import numpy as np
+
+    batch, chunk = 4, 32
+
+    def host_stack(r, rng):  # the historical per-round assembly
+        return make_round_batches(data, tau, batch,
+                                  np.random.default_rng((3, r)))
+
+    suppliers = [
+        ("supplier_host_stack", host_stack),
+        ("supplier_chunk", ArraySupplier.from_dataset(data, tau, batch,
+                                                      seed=3)),
+        ("supplier_chunk_dev", ArraySupplier.from_dataset(
+            data, tau, batch, seed=3, device_cache=True)),
+    ]
+    base_us = None
+    for name, sup in suppliers:
+        engine = make_engine(alg, grad_fn, data.n_clients, chunk_rounds=chunk)
+        state = engine.init(params0)
+        state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
+        best = _time_run(engine, state, sup, rounds)
+        if base_us is None:
+            base_us = best
+        record(f"exec/{name}", best, f"{base_us / best:.2f}x")
+
+
+def bench_compressed(alg, grad_fn, data, params0, rounds, tau) -> None:
+    from repro.comm import Dense, TopK
+    from repro.exec import ArraySupplier
+
+    chunk = 32
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    inline = make_engine(alg, grad_fn, data.n_clients, chunk_rounds=chunk)
+    state = inline.init(params0)
+    state, _ = inline.run(state, sup, chunk, seed=1)
+    base_us = _time_run(inline, state, sup, rounds)
+
+    for name, tr in [("compressed_dense", Dense()),
+                     ("compressed_topk10", TopK(ratio=0.1))]:
+        engine = make_engine(alg, grad_fn, data.n_clients, backend="compressed",
+                             chunk_rounds=chunk, transport=tr)
+        state = engine.init(params0)
+        state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
+        best = _time_run(engine, state, sup, rounds)
+        record(f"exec/{name}", best,
+               f"{base_us / best:.2f}x,"
+               f"{engine.uplink_bytes_per_client_round}B/client")
 
 
 def main() -> None:
-    import numpy as np
-
     from repro.core.algorithm import DProxConfig
-    from repro.data.synthetic import make_round_batches
     from repro.fed.simulator import DProxAlgorithm
 
     data, reg, grad_fn, full_g, params0, L = logreg_problem()
     tau, eta_g = 10, 3.0
     eta = (0.5 / L) / (eta_g * tau)
     alg = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
-    # small stochastic batches (the paper's Fig. 3 regime): per-round compute
-    # is tiny, so the round loop's dispatch + host-sync overhead dominates --
-    # exactly what chunking removes
-    fixed = make_round_batches(data, tau, 4, np.random.default_rng(0))
-    supplier = lambda r, rng: fixed
-
     rounds = 128 if QUICK else 512
-    base_us = None
-    for chunk in (1, 8, 32):
-        engine = make_engine(alg, grad_fn, data.n_clients,
-                             chunk_rounds=chunk)
-        state = engine.init(params0)
-        # warmup: compile + first chunk
-        state, _ = engine.run(state, supplier, chunk, seed=1)
-        best = float("inf")
-        for rep in range(3):
-            with Timer() as t:
-                state, metrics = engine.run(state, supplier, rounds, seed=2)
-            assert len(metrics["train_loss"]) == rounds
-            best = min(best, t.seconds / rounds * 1e6)
-        if base_us is None:
-            base_us = best
-        emit(f"exec/chunk{chunk}", best, f"{base_us / best:.2f}x")
+
+    bench_chunking(alg, grad_fn, data, params0, rounds, tau)
+    bench_suppliers(alg, grad_fn, data, params0, rounds, tau)
+    bench_compressed(alg, grad_fn, data, params0, rounds, tau)
+
+    out = os.environ.get("REPRO_BENCH_JSON", "BENCH_exec.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "exec", "quick": QUICK, "rounds": rounds,
+                   "rows": ROWS}, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}", flush=True)
 
 
 if __name__ == "__main__":

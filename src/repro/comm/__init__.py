@@ -1,0 +1,24 @@
+"""Pluggable communication layer for the round-execution engine.
+
+The paper's algorithms all share one communication shape: each client sends
+an *uplink message* (one or two d-dimensional vectors) once per round, and
+the server broadcasts the updated global state back.  This package makes
+that exchange a first-class, swappable layer:
+
+  * algorithms expose the exchange explicitly by splitting their round into
+    ``make_local_fn`` (client compute -> uplink message + client-resident
+    aux) and ``make_server_fn`` (aggregate message -> next state), see
+    :mod:`repro.core.algorithm` / :mod:`repro.core.baselines`;
+  * :mod:`repro.comm.transport` provides compressors (dense, top-k, rand-k,
+    quantize) with error-feedback state that the engine threads through its
+    ``lax.scan`` chunk loop under ``EngineConfig(backend="compressed")``;
+  * :func:`uplink_message_spec` recovers the exact wire shape of any
+    algorithm's uplink via ``jax.eval_shape`` for byte accounting.
+"""
+from repro.comm.transport import (Dense, Quantize, RandK, TopK, Transport,
+                                  get_transport, message_elements_per_client,
+                                  uplink_message_spec)
+
+__all__ = ["Transport", "Dense", "TopK", "RandK", "Quantize",
+           "get_transport", "message_elements_per_client",
+           "uplink_message_spec"]

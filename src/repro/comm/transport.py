@@ -1,0 +1,251 @@
+"""Uplink compressors behind one ``Transport`` interface.
+
+A *transport* decides what actually crosses the network when a client sends
+its per-round uplink message (the pytree produced by an algorithm's
+``make_local_fn``; every leaf carries a leading client axis).  Messages are
+*innovations* -- deltas relative to the broadcast reference -- so zeroing or
+coarsening their coordinates degrades gracefully instead of truncating the
+model itself.  The round math never sees the transport: the engine
+compresses the message between the local-compute half and the
+server-aggregate half of a round
+(``EngineConfig(backend="compressed", transport=...)``).
+
+Implemented transports:
+
+  * :class:`Dense`    -- identity (the paper's full d-dim vector per round);
+  * :class:`TopK`     -- magnitude top-k sparsification per client (a biased
+    *contraction*:  ||C(x) - x||^2 <= (1 - k/d) ||x||^2);
+  * :class:`RandK`    -- uniform random-k sparsification with the d/k
+    rescaling that makes it *unbiased*:  E[C(x)] = x;
+  * :class:`Quantize` -- per-client stochastic uniform quantization to
+    ``2^bits - 1`` levels (unbiased given the per-leaf scale).
+
+All compressing transports carry **error-feedback** state (Qiu et al.,
+Compressed Proximal Federated Learning; Seide et al. 2014): the residual
+``e`` of what compression dropped is added back before the next compression,
+
+    m_hat_t = C(e_t + m_t),    e_{t+1} = e_t + m_t - m_hat_t,
+
+so the telescoping identity  sum_t m_hat_t = sum_t m_t - e_T  holds exactly
+and the long-run average uplink is undistorted.  ``tests/test_comm.py`` pins
+these contracts.
+
+Compression is applied per client and per message leaf (leaves are flattened
+to ``(n_clients, d_leaf)``), so the same transport works for any parameter
+pytree.  ``uplink_bytes`` reports the per-client wire cost of one message --
+values plus indices for sparsifiers, packed levels plus a scale for the
+quantizer -- which benchmarks/comm_table.py uses instead of hand-maintained
+constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree as tu
+
+Message = Any  # pytree whose leaves have a leading client axis
+
+
+def _k_of(ratio: float, d: int) -> int:
+    """Coordinates kept per client for one flattened leaf of size d."""
+    return max(1, min(d, int(round(ratio * d))))
+
+
+def _leaf_elements(leaf) -> int:
+    """Elements per client: the leaf's size without its client axis."""
+    shape = tuple(leaf.shape)
+    n = 1
+    for s in shape[1:]:
+        n *= s
+    return n
+
+
+def message_elements_per_client(msg_template) -> int:
+    """Uplink coordinates per client per round (sums over message leaves)."""
+    return sum(_leaf_elements(l) for l in jax.tree_util.tree_leaves(msg_template))
+
+
+class Transport:
+    """Interface: ``init_state`` -> per-run compressor state (error-feedback
+    residuals, or an empty pytree), ``compress`` -> (what the server receives,
+    next compressor state).  ``key`` is a jax PRNG key; deterministic
+    transports ignore it."""
+
+    name: str = "base"
+    error_feedback: bool = False
+
+    def init_state(self, msg_template):
+        if not self.error_feedback:
+            return ()
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros(tuple(l.shape), l.dtype), msg_template)
+
+    def compress(self, comm_state, msg: Message, key) -> tuple[Message, Any]:
+        target = tu.tree_add(comm_state, msg) if self.error_feedback else msg
+        msg_hat = self.apply(target, key)
+        new_state = (tu.tree_sub(target, msg_hat)
+                     if self.error_feedback else ())
+        return msg_hat, new_state
+
+    def apply(self, msg: Message, key) -> Message:
+        raise NotImplementedError
+
+    def uplink_bytes(self, msg_template) -> int:
+        """Bytes on the wire per client per round for this message."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Dense(Transport):
+    """Identity transport: the full message is sent (ratio 1.0)."""
+
+    name: str = "dense"
+    error_feedback: bool = False
+
+    def apply(self, msg, key):
+        return msg
+
+    def uplink_bytes(self, msg_template):
+        return sum(_leaf_elements(l) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree_util.tree_leaves(msg_template))
+
+
+@dataclass(frozen=True)
+class TopK(Transport):
+    """Keep the ``ratio`` fraction of largest-magnitude coordinates per
+    client per leaf.  Biased but a contraction; error feedback recovers the
+    dropped mass over rounds.  ``ratio=1.0`` is exactly the identity."""
+
+    ratio: float = 0.1
+    error_feedback: bool = True
+    name: str = "topk"
+
+    def apply(self, msg, key):
+        def one(x):
+            flat = x.reshape(x.shape[0], -1)
+            d = flat.shape[1]
+            k = _k_of(self.ratio, d)
+            if k >= d:
+                return x
+            mag = jnp.abs(flat)
+            kth = jax.lax.top_k(mag, k)[0][:, -1:]
+            return jnp.where(mag >= kth, flat, 0).reshape(x.shape)
+
+        return jax.tree_util.tree_map(one, msg)
+
+    def uplink_bytes(self, msg_template):
+        total = 0
+        for l in jax.tree_util.tree_leaves(msg_template):
+            d = _leaf_elements(l)
+            k = _k_of(self.ratio, d)
+            total += k * (jnp.dtype(l.dtype).itemsize + 4)  # value + int32 idx
+        return total
+
+
+@dataclass(frozen=True)
+class RandK(Transport):
+    """Keep ``ratio * d`` uniformly random coordinates per client per leaf,
+    rescaled by d/k so the compressor is unbiased: E_key[C(x)] = x."""
+
+    ratio: float = 0.1
+    error_feedback: bool = True
+    rescale: bool = True
+    name: str = "randk"
+
+    def apply(self, msg, key):
+        leaves, treedef = jax.tree_util.tree_flatten(msg)
+        keys = jax.random.split(key, len(leaves))
+        return jax.tree_util.tree_unflatten(
+            treedef, [self._one(x, k) for x, k in zip(leaves, keys)])
+
+    def _one(self, x, key):
+        flat = x.reshape(x.shape[0], -1)
+        n, d = flat.shape
+        k = _k_of(self.ratio, d)
+        if k >= d:
+            return x
+
+        def row_mask(ki):
+            idx = jax.random.permutation(ki, d)[:k]
+            return jnp.zeros((d,), flat.dtype).at[idx].set(1)
+
+        mask = jax.vmap(row_mask)(jax.random.split(key, n))
+        scale = jnp.asarray(d / k if self.rescale else 1.0, flat.dtype)
+        return (flat * mask * scale).reshape(x.shape)
+
+    def uplink_bytes(self, msg_template):
+        total = 0
+        for l in jax.tree_util.tree_leaves(msg_template):
+            d = _leaf_elements(l)
+            k = _k_of(self.ratio, d)
+            # indices are derivable from a shared seed: values only
+            total += k * jnp.dtype(l.dtype).itemsize
+        return total
+
+
+@dataclass(frozen=True)
+class Quantize(Transport):
+    """Per-client stochastic uniform quantization to ``2^bits - 1`` levels,
+    scaled by the per-(client, leaf) max magnitude.  Unbiased given the scale
+    (the stochastic rounding satisfies E[q] = x)."""
+
+    bits: int = 8
+    error_feedback: bool = True
+    name: str = "quantize"
+
+    def apply(self, msg, key):
+        leaves, treedef = jax.tree_util.tree_flatten(msg)
+        keys = jax.random.split(key, len(leaves))
+        levels = (1 << self.bits) - 1
+
+        def one(x, k):
+            flat = x.reshape(x.shape[0], -1)
+            s = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+            s = jnp.where(s == 0, jnp.ones_like(s), s)
+            y = flat / s * levels
+            lo = jnp.floor(y)
+            u = jax.random.uniform(k, flat.shape, dtype=flat.dtype)
+            q = lo + (u < (y - lo)).astype(flat.dtype)
+            return (q / levels * s).reshape(x.shape)
+
+        return jax.tree_util.tree_unflatten(
+            treedef, [one(x, k) for x, k in zip(leaves, keys)])
+
+    def uplink_bytes(self, msg_template):
+        total = 0
+        for l in jax.tree_util.tree_leaves(msg_template):
+            d = _leaf_elements(l)
+            # signed levels in [-levels, +levels]: bits for the magnitude
+            # plus a sign bit per coordinate, plus the per-leaf fp scale
+            total += -(-d * (self.bits + 1) // 8) + jnp.dtype(l.dtype).itemsize
+        return total
+
+
+_TRANSPORTS = {"dense": Dense, "topk": TopK, "randk": RandK,
+               "quantize": Quantize}
+
+
+def get_transport(name: str, **kwargs) -> Transport:
+    """Build a transport by name ('dense', 'topk', 'randk', 'quantize')."""
+    try:
+        cls = _TRANSPORTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {name!r}; available: {sorted(_TRANSPORTS)}")
+    return cls(**kwargs)
+
+
+def uplink_message_spec(algorithm, grad_fn, state_template, batch_template):
+    """ShapeDtypeStruct pytree of an algorithm's uplink message.
+
+    Uses ``jax.eval_shape`` over the algorithm's local half, so no FLOPs are
+    spent: this is how benchmarks account bytes/round from the actual message
+    instead of hand-maintained per-algorithm constants.
+    """
+    local_fn = algorithm.make_local_fn(grad_fn)
+    return jax.eval_shape(lambda s, b: local_fn(s, b)[0],
+                          state_template, batch_template)

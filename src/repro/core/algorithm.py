@@ -132,7 +132,7 @@ def local_update_step(
     return z_hat_next, z_next
 
 
-def make_round_fn(
+def make_local_fn(
     cfg: DProxConfig,
     reg: Regularizer,
     grad_fn: GradFn,
@@ -140,15 +140,18 @@ def make_round_fn(
     use_fused_kernel: bool = False,
     unroll: bool = False,
 ):
-    """Build the compact-form round function (Eq. 2).
+    """Client half of the compact-form round (Lines 5-12, clients stacked).
 
-    Returns ``round_fn(state, batches) -> (state, metrics)`` where ``batches``
-    is a pytree whose leaves have leading dims ``(n_clients, tau, ...)``.
-
-    The function is jit/pjit friendly: the client axis can be sharded over the
-    mesh and the only cross-client collective is the mean over ``z_hat_tau``
-    (plus loss metrics), matching the paper's single d-dimensional
-    uplink/downlink per round.
+    Returns ``local_fn(state, batches) -> (msg, aux)`` where ``msg`` is the
+    uplink message pytree -- the per-client *innovation*
+    ``z_hat_tau - P(x_bar)`` (leading client axis), i.e. the accumulated
+    local update relative to the broadcast reference both ends already know.
+    This is the ONLY tensor that crosses the network and hence the only
+    thing a :mod:`repro.comm` transport may compress; innovation encoding is
+    what makes sparsifying/quantizing it meaningful (compressing the raw
+    iterate would zero model coordinates).  ``aux`` holds client-resident
+    values that never leave the client (the retained average gradient for
+    the correction rebuild, loss metrics).
     """
     step_impl = local_update_step
     if use_fused_kernel:
@@ -156,14 +159,7 @@ def make_round_fn(
 
         step_impl = partial(kops.fused_local_update_step, interpret_ok=True)
 
-    def round_fn(state: DProxState, batches: Batch, active=None):
-        """``active``: optional (n_clients,) bool mask -- PARTIAL CLIENT
-        PARTICIPATION (beyond-paper extension; see DESIGN.md section 8).
-        Participating clients run the round with their (possibly stale)
-        correction terms, the server averages over participants only, and
-        non-participants keep their state.  The exact mean-zero correction
-        invariant holds only in expectation under uniform sampling; the
-        benchmark/test quantify the induced residual."""
+    def local_fn(state: DProxState, batches: Batch):
         # numpy batch leaves must become jnp before traced-index selection
         batches = jax.tree_util.tree_map(jnp.asarray, batches)
         n_clients = jax.tree_util.tree_leaves(batches)[0].shape[0]
@@ -210,11 +206,45 @@ def make_round_fn(
             jnp.arange(cfg.tau),
             unroll=True if unroll else 1,
         )
+        msg = jax.tree_util.tree_map(
+            lambda zh, pp: zh - pp[None], z_hat_tau, p)
+        aux = {
+            "avg_grad": tu.tree_scale(gsum, 1.0 / cfg.tau),  # (n, ...)
+            "loss_sum": loss_sum,
+        }
+        return msg, aux
+
+    return local_fn
+
+
+def make_server_fn(cfg: DProxConfig, reg: Regularizer):
+    """Server half (Lines 14-15) plus the local correction rebuild (Line 18).
+
+    ``server_fn(state, msg, aux, active=None) -> (state, metrics)``.  ``msg``
+    is whatever arrived on the uplink (possibly transport-compressed
+    innovations ``z_hat_tau - P(x_bar)``); the downlink is the new ``x_bar``
+    carried in the returned state.  The correction update uses only
+    broadcast values and the client-resident ``aux`` -- it stays exact under
+    uplink compression.
+    """
+
+    def server_fn(state: DProxState, msg, aux, active=None):
+        """``active``: optional (n_clients,) bool mask -- PARTIAL CLIENT
+        PARTICIPATION (beyond-paper extension; see DESIGN.md section 8).
+        Participating clients run the round with their (possibly stale)
+        correction terms, the server averages over participants only, and
+        non-participants keep their state.  The exact mean-zero correction
+        invariant holds only in expectation under uniform sampling; the
+        benchmark/test quantify the induced residual."""
+        delta = msg  # per-client innovations z_hat_tau - P(x_bar)
+        p = reg.prox(state.x_bar, cfg.eta_tilde)
 
         # --- Server (Lines 14-15): the ONLY communication of the round.
-        # mean over the client axis == all-reduce of one d-dim vector/client.
+        # mean over the client axis == all-reduce of one d-dim vector/client;
+        # x_bar update in innovation form:  x_bar+ = P + eta_g mean_i delta_i
+        # == P + eta_g (mean_i z_hat_i - P), Line 14.
         if active is None:
-            mean_z_hat = tu.tree_mean_over_axis0(z_hat_tau)
+            mean_delta = tu.tree_mean_over_axis0(delta)
         else:
             w = active.astype(jnp.float32)
             denom = jnp.maximum(jnp.sum(w), 1.0)
@@ -223,20 +253,19 @@ def make_round_fn(
                 wb = w.reshape((-1,) + (1,) * (z.ndim - 1)).astype(z.dtype)
                 return jnp.sum(z * wb, axis=0) / denom.astype(z.dtype)
 
-            mean_z_hat = jax.tree_util.tree_map(_wmean, z_hat_tau)
+            mean_delta = jax.tree_util.tree_map(_wmean, delta)
         x_bar_next = jax.tree_util.tree_map(
-            lambda pp, mz: pp + cfg.eta_g * (mz - pp), p, mean_z_hat
+            lambda pp, md: pp + cfg.eta_g * md, p, mean_delta
         )
 
         # --- Client correction update (Line 18), reconstructed locally from
         # the broadcast x_bar^{r+1}; no extra communication.
-        avg_grad = tu.tree_scale(gsum, 1.0 / cfg.tau)  # (n, ...)
         scale = 1.0 / (cfg.eta_g * cfg.eta * cfg.tau)
         c_next = jax.tree_util.tree_map(
             lambda pp, xn, ag: scale * (pp - xn)[None] - ag,
             p,
             x_bar_next,
-            avg_grad,
+            aux["avg_grad"],
         )
         if active is not None:
             # non-participants keep their stale correction terms
@@ -246,10 +275,12 @@ def make_round_fn(
                 c_next, state.c)
 
         metrics = {
-            "train_loss": loss_sum / cfg.tau,
+            "train_loss": aux["loss_sum"] / cfg.tau,
+            # drift is shift-invariant: spread of the innovations == spread
+            # of the raw iterates around their mean
             "drift": tu.tree_norm(
                 jax.tree_util.tree_map(
-                    lambda zh, mz: zh - mz[None], z_hat_tau, mean_z_hat
+                    lambda dl, md: dl - md[None], delta, mean_delta
                 )
             ),
         }
@@ -257,6 +288,38 @@ def make_round_fn(
             x_bar=x_bar_next, c=c_next, round=state.round + 1
         )
         return new_state, metrics
+
+    return server_fn
+
+
+def make_round_fn(
+    cfg: DProxConfig,
+    reg: Regularizer,
+    grad_fn: GradFn,
+    *,
+    use_fused_kernel: bool = False,
+    unroll: bool = False,
+):
+    """Build the compact-form round function (Eq. 2).
+
+    Returns ``round_fn(state, batches) -> (state, metrics)`` where ``batches``
+    is a pytree whose leaves have leading dims ``(n_clients, tau, ...)``.
+
+    Since the comm refactor this is literally the composition of
+    :func:`make_local_fn` and :func:`make_server_fn` with a dense (identity)
+    uplink -- the round's communication is the ``msg`` pytree flowing between
+    the two halves.  The function stays jit/pjit friendly: the client axis
+    can be sharded over the mesh and the only cross-client collective is the
+    mean over ``z_hat_tau`` (plus loss metrics), matching the paper's single
+    d-dimensional uplink/downlink per round.
+    """
+    local_fn = make_local_fn(cfg, reg, grad_fn,
+                             use_fused_kernel=use_fused_kernel, unroll=unroll)
+    server_fn = make_server_fn(cfg, reg)
+
+    def round_fn(state: DProxState, batches: Batch, active=None):
+        msg, aux = local_fn(state, batches)
+        return server_fn(state, msg, aux, active=active)
 
     return round_fn
 

@@ -57,6 +57,36 @@ def _scan_local(body, carry0, tau):
 
 
 class FedAlgorithm:
+    """Common algorithm interface (see module docstring).
+
+    Every algorithm factors one round into a *local-compute* half and a
+    *server-aggregate* half joined by an explicit uplink message pytree:
+
+        local_fn(state, batches)      -> (msg, aux)
+        server_fn(state, msg, aux)    -> (state, metrics)
+
+    ``msg`` leaves carry a leading client axis and are the ONLY tensors that
+    cross the network -- a :mod:`repro.comm` transport may compress them
+    between the halves (``EngineConfig(backend="compressed")``).  Messages
+    are *innovation-encoded*: each client uplinks its delta relative to the
+    broadcast reference (``z_tau - x`` etc.), which is what makes
+    sparsification/quantization meaningful and is how every server update
+    here is naturally written (``x + eta_g * mean(delta)``).  ``aux`` stays
+    client-resident (loss metrics, retained gradients, control-variate
+    copies) and is never compressed.  ``make_round_fn`` is the dense
+    composition of the two halves; subclasses implement the halves, not the
+    composition.
+
+    ``state_roles`` declares the mesh placement of every federated-state
+    field so the sharded engine backend can place ANY algorithm's state
+    (``launch.sharding.fed_state_shardings_from_roles``):
+
+        'server' -- params-shaped, sharded like the global model;
+        'client' -- params-shaped with a leading client axis, client axis
+                    mapped to the mesh data/pod axis;
+        'scalar' -- replicated (round counters etc.).
+    """
+
     name: str = "base"
     uplink_vectors: int = 1
     downlink_vectors: int = 1
@@ -64,7 +94,27 @@ class FedAlgorithm:
     def init(self, params0: Params, n_clients: int):
         raise NotImplementedError
 
+    def make_local_fn(self, grad_fn: GradFn):
+        """Client half: ``local_fn(state, batches) -> (msg, aux)``."""
+        raise NotImplementedError
+
+    def make_server_fn(self):
+        """Server half: ``server_fn(state, msg, aux) -> (state, metrics)``."""
+        raise NotImplementedError
+
     def make_round_fn(self, grad_fn: GradFn):
+        """One full round: the dense composition of the two halves."""
+        local_fn = self.make_local_fn(grad_fn)
+        server_fn = self.make_server_fn()
+
+        def round_fn(state, batches):
+            msg, aux = local_fn(state, batches)
+            return server_fn(state, msg, aux)
+
+        return round_fn
+
+    def state_roles(self) -> dict:
+        """Placement role per state field: 'server' | 'client' | 'scalar'."""
         raise NotImplementedError
 
     def global_params(self, state) -> Params:
@@ -79,6 +129,30 @@ class _XState(NamedTuple):
     round: jax.Array
 
 
+_X_STATE_ROLES = {"x": "server", "round": "scalar"}
+
+
+def _innovation(z_stacked, ref):
+    """Uplink delta of per-client iterates against the broadcast reference."""
+    return jax.tree_util.tree_map(lambda z, r: z - r[None], z_stacked, ref)
+
+
+def _x_state_server_fn(eta_g: float, tau: int):
+    """Shared server half of the single-vector x-state algorithms
+    (FedAvg/FedMid/FedProx):  x+ = x + eta_g * mean_i delta_i."""
+
+    def server_fn(state, msg, aux):
+        mean_delta = tu.tree_mean_over_axis0(msg)
+        x_next = jax.tree_util.tree_map(
+            lambda x, md: x + eta_g * md, state.x, mean_delta
+        )
+        return _XState(x_next, state.round + 1), {
+            "train_loss": aux["loss_sum"] / tau
+        }
+
+    return server_fn
+
+
 @dataclass
 class FedAvg(FedAlgorithm):
     """Local SGD on f only; plain averaging.  The smooth-FL reference point."""
@@ -91,8 +165,8 @@ class FedAvg(FedAlgorithm):
     def init(self, params0, n_clients):
         return _XState(x=params0, round=jnp.zeros((), jnp.int32))
 
-    def make_round_fn(self, grad_fn):
-        def round_fn(state, batches):
+    def make_local_fn(self, grad_fn):
+        def local_fn(state, batches):
             n = _client_axis(batches)
             z0 = tu.tree_broadcast_axis0(state.x, n)
 
@@ -104,13 +178,15 @@ class FedAvg(FedAlgorithm):
                 return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
 
             (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
-            mean_z = tu.tree_mean_over_axis0(z_tau)
-            x_next = jax.tree_util.tree_map(
-                lambda x, mz: x + self.eta_g * (mz - x), state.x, mean_z
-            )
-            return _XState(x_next, state.round + 1), {"train_loss": loss_sum / self.tau}
+            return _innovation(z_tau, state.x), {"loss_sum": loss_sum}
 
-        return round_fn
+        return local_fn
+
+    def make_server_fn(self):
+        return _x_state_server_fn(self.eta_g, self.tau)
+
+    def state_roles(self):
+        return _X_STATE_ROLES
 
     def global_params(self, state):
         return state.x
@@ -129,8 +205,8 @@ class FedMid(FedAlgorithm):
     def init(self, params0, n_clients):
         return _XState(x=params0, round=jnp.zeros((), jnp.int32))
 
-    def make_round_fn(self, grad_fn):
-        def round_fn(state, batches):
+    def make_local_fn(self, grad_fn):
+        def local_fn(state, batches):
             n = _client_axis(batches)
             z0 = tu.tree_broadcast_axis0(state.x, n)
 
@@ -143,15 +219,17 @@ class FedMid(FedAlgorithm):
                 return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
 
             (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
-            # Primal averaging of post-proximal models: the step that destroys
-            # sparsity ("curse of primal averaging").
-            mean_z = tu.tree_mean_over_axis0(z_tau)
-            x_next = jax.tree_util.tree_map(
-                lambda x, mz: x + self.eta_g * (mz - x), state.x, mean_z
-            )
-            return _XState(x_next, state.round + 1), {"train_loss": loss_sum / self.tau}
+            return _innovation(z_tau, state.x), {"loss_sum": loss_sum}
 
-        return round_fn
+        return local_fn
+
+    def make_server_fn(self):
+        # Primal averaging of post-proximal models: the step that destroys
+        # sparsity ("curse of primal averaging").
+        return _x_state_server_fn(self.eta_g, self.tau)
+
+    def state_roles(self):
+        return _X_STATE_ROLES
 
     def global_params(self, state):
         return state.x
@@ -185,8 +263,8 @@ class FedDA(FedAlgorithm):
     def init(self, params0, n_clients):
         return _DualState(x_bar=params0, round=jnp.zeros((), jnp.int32))
 
-    def make_round_fn(self, grad_fn):
-        def round_fn(state, batches):
+    def make_local_fn(self, grad_fn):
+        def local_fn(state, batches):
             n = _client_axis(batches)
             p = self.reg.prox(state.x_bar, self.eta_tilde)
             z_hat0 = tu.tree_broadcast_axis0(p, n)
@@ -204,15 +282,25 @@ class FedDA(FedAlgorithm):
             (z_hat_tau, _, loss_sum), _ = _scan_local(
                 body, (z_hat0, z_hat0, jnp.float32(0.0)), self.tau
             )
-            mean_z_hat = tu.tree_mean_over_axis0(z_hat_tau)
+            return _innovation(z_hat_tau, p), {"loss_sum": loss_sum}
+
+        return local_fn
+
+    def make_server_fn(self):
+        def server_fn(state, msg, aux):
+            p = self.reg.prox(state.x_bar, self.eta_tilde)
+            mean_delta = tu.tree_mean_over_axis0(msg)
             x_bar_next = jax.tree_util.tree_map(
-                lambda pp, mz: pp + self.eta_g * (mz - pp), p, mean_z_hat
+                lambda pp, md: pp + self.eta_g * md, p, mean_delta
             )
             return _DualState(x_bar_next, state.round + 1), {
-                "train_loss": loss_sum / self.tau
+                "train_loss": aux["loss_sum"] / self.tau
             }
 
-        return round_fn
+        return server_fn
+
+    def state_roles(self):
+        return {"x_bar": "server", "round": "scalar"}
 
     def global_params(self, state):
         return self.reg.prox(state.x_bar, self.eta_tilde)
@@ -242,8 +330,8 @@ class FastFedDA(FedAlgorithm):
             round=jnp.zeros((), jnp.int32),
         )
 
-    def make_round_fn(self, grad_fn):
-        def round_fn(state, batches):
+    def make_local_fn(self, grad_fn):
+        def local_fn(state, batches):
             n = _client_axis(batches)
             r = state.round.astype(jnp.float32)
             p = self.reg.prox(state.x_bar, self.eta0 * self.tau)
@@ -269,16 +357,35 @@ class FastFedDA(FedAlgorithm):
             (z_hat_tau, _, mem_tau, loss_sum), _ = _scan_local(
                 body, (z_hat0, z_hat0, mem0, jnp.float32(0.0)), self.tau
             )
-            mean_z_hat = tu.tree_mean_over_axis0(z_hat_tau)
-            mean_mem = tu.tree_mean_over_axis0(mem_tau)  # 2nd uplink vector
+            # TWO uplink vectors per client: the model innovation AND the
+            # gradient-memory innovation (the extra cost Table `comm`
+            # charges Fast-FedDA)
+            msg = {
+                "z_hat": _innovation(z_hat_tau, p),
+                "mem": _innovation(mem_tau, state.grad_mem),
+            }
+            return msg, {"loss_sum": loss_sum}
+
+        return local_fn
+
+    def make_server_fn(self):
+        def server_fn(state, msg, aux):
+            p = self.reg.prox(state.x_bar, self.eta0 * self.tau)
+            mean_delta = tu.tree_mean_over_axis0(msg["z_hat"])
             x_bar_next = jax.tree_util.tree_map(
-                lambda pp, mz: pp + self.eta_g * (mz - pp), p, mean_z_hat
+                lambda pp, md: pp + self.eta_g * md, p, mean_delta
             )
-            return _FastDAState(x_bar_next, mean_mem, state.round + 1), {
-                "train_loss": loss_sum / self.tau
+            mem_next = jax.tree_util.tree_map(  # 2nd uplink vector
+                lambda gm, md: gm + md, state.grad_mem,
+                tu.tree_mean_over_axis0(msg["mem"]))
+            return _FastDAState(x_bar_next, mem_next, state.round + 1), {
+                "train_loss": aux["loss_sum"] / self.tau
             }
 
-        return round_fn
+        return server_fn
+
+    def state_roles(self):
+        return {"x_bar": "server", "grad_mem": "server", "round": "scalar"}
 
     def global_params(self, state):
         return self.reg.prox(state.x_bar, self.eta0 * self.tau)
@@ -317,8 +424,8 @@ class Scaffold(FedAlgorithm):
             round=jnp.zeros((), jnp.int32),
         )
 
-    def make_round_fn(self, grad_fn):
-        def round_fn(state, batches):
+    def make_local_fn(self, grad_fn):
+        def local_fn(state, batches):
             n = _client_axis(batches)
             y0 = tu.tree_broadcast_axis0(state.x, n)
 
@@ -346,17 +453,39 @@ class Scaffold(FedAlgorithm):
                 state.x,
                 y_tau,
             )
-            mean_y = tu.tree_mean_over_axis0(y_tau)
+            # TWO uplink vectors: the model delta and the control-variate
+            # delta (the literal Scaffold wire protocol).  The client keeps
+            # its own exact ci_next in aux (it is local state); the server's
+            # c update integrates the uplinked deltas, using the invariant
+            # c == mean_i ci.
+            msg = {
+                "y": _innovation(y_tau, state.x),
+                "ci": jax.tree_util.tree_map(  # ci is already per-client
+                    lambda cn, co: cn - co, ci_next, state.ci),
+            }
+            return msg, {"ci": ci_next, "loss_sum": loss_sum}
+
+        return local_fn
+
+    def make_server_fn(self):
+        def server_fn(state, msg, aux):
+            mean_dy = tu.tree_mean_over_axis0(msg["y"])
             x_next = jax.tree_util.tree_map(
-                lambda x, my: x + self.eta_g * (my - x), state.x, mean_y
+                lambda x, md: x + self.eta_g * md, state.x, mean_dy
             )
             x_next = self.reg.prox(x_next, self.eta * self.tau)  # heuristic prox
-            c_next = tu.tree_mean_over_axis0(ci_next)
-            return _ScaffoldState(x_next, c_next, ci_next, state.round + 1), {
-                "train_loss": loss_sum / self.tau
+            c_next = jax.tree_util.tree_map(
+                lambda c, md: c + md, state.c,
+                tu.tree_mean_over_axis0(msg["ci"]))
+            return _ScaffoldState(x_next, c_next, aux["ci"], state.round + 1), {
+                "train_loss": aux["loss_sum"] / self.tau
             }
 
-        return round_fn
+        return server_fn
+
+    def state_roles(self):
+        return {"x": "server", "c": "server", "ci": "client",
+                "round": "scalar"}
 
     def global_params(self, state):
         return state.x
@@ -376,8 +505,8 @@ class FedProx(FedAlgorithm):
     def init(self, params0, n_clients):
         return _XState(x=params0, round=jnp.zeros((), jnp.int32))
 
-    def make_round_fn(self, grad_fn):
-        def round_fn(state, batches):
+    def make_local_fn(self, grad_fn):
+        def local_fn(state, batches):
             n = _client_axis(batches)
             z0 = tu.tree_broadcast_axis0(state.x, n)
 
@@ -395,13 +524,15 @@ class FedProx(FedAlgorithm):
                 return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
 
             (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
-            mean_z = tu.tree_mean_over_axis0(z_tau)
-            x_next = jax.tree_util.tree_map(
-                lambda x, mz: x + self.eta_g * (mz - x), state.x, mean_z
-            )
-            return _XState(x_next, state.round + 1), {"train_loss": loss_sum / self.tau}
+            return _innovation(z_tau, state.x), {"loss_sum": loss_sum}
 
-        return round_fn
+        return local_fn
+
+    def make_server_fn(self):
+        return _x_state_server_fn(self.eta_g, self.tau)
+
+    def state_roles(self):
+        return _X_STATE_ROLES
 
     def global_params(self, state):
         return state.x

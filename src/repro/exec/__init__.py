@@ -1,30 +1,50 @@
-"""Unified round-execution engine.
+"""Unified round-execution engine with a pluggable communication layer.
 
 One engine runs every federated algorithm in the repo (Algorithm 1 and all
 :mod:`repro.core.baselines`) on every execution substrate:
 
-  * ``inline``   -- single-device ``jax.jit`` (replaces the hand-rolled loop
-    of the old ``fed.simulator.run``);
-  * ``sharded``  -- mesh-placed with explicit state/batch shardings and
-    donated buffers (absorbs ``fed.distributed.make_sharded_round_fn``);
-  * ``protocol`` -- the literal per-client message-passing form of
+  * ``inline``     -- single-device ``jax.jit`` (replaces the hand-rolled
+    loop of the old ``fed.simulator.run``);
+  * ``sharded``    -- mesh-placed with explicit state/batch shardings and
+    donated buffers.  Any algorithm that declares its per-field placement
+    via ``FedAlgorithm.state_roles`` (all seven do) can be mesh-placed, not
+    just DProxState;
+  * ``compressed`` -- the round is executed as the algorithm's explicit
+    local-compute / server-aggregate halves with a :mod:`repro.comm`
+    transport (dense, top-k, rand-k, quantize; error feedback) compressing
+    the uplink message pytree in between.  Compressor state and PRNG key
+    thread through the compiled scan carry, so compression composes with
+    chunking and donation;
+  * ``protocol``   -- the literal per-client message-passing form of
     Algorithm 1, kept for equivalence testing.
 
 On top of the backend, the engine owns device-resident *multi-round
 chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with
 pre-sampled batches, metrics accumulated on device and fetched once per
 chunk -- so Python dispatch and the device->host sync are paid once per
-chunk instead of once per round.  Client subsampling (partial participation)
-is a first-class engine option (``EngineConfig.participation``).
+chunk instead of once per round.  Batches come from *chunk-aware suppliers*
+(:mod:`repro.exec.suppliers`): a supplier can produce a whole chunk in one
+vectorized call (optionally gathering from a device-resident cache),
+replacing the historical host-side per-round ``np.stack``; plain
+``supplier(round_idx, rng)`` callables keep working.  Client subsampling
+(partial participation) is a first-class engine option
+(``EngineConfig.participation``).
 
-    from repro.exec import EngineConfig, RoundEngine
+    from repro.comm import TopK
+    from repro.exec import ArraySupplier, EngineConfig, RoundEngine
+
     eng = RoundEngine(alg, grad_fn, n_clients,
-                      EngineConfig(backend="inline", chunk_rounds=16))
+                      EngineConfig(backend="compressed", chunk_rounds=16,
+                                   transport=TopK(ratio=0.1)))
     state = eng.init(params0)
-    state, metrics = eng.run(state, batch_supplier, rounds=100, rng=rng)
+    supplier = ArraySupplier.from_dataset(data, tau, batch, device_cache=True)
+    state, metrics = eng.run(state, supplier, rounds=100, rng=rng)
 """
 from repro.exec.engine import (EngineConfig, RoundEngine,
                                rounds_to_boundary, sample_active_masks)
+from repro.exec.suppliers import (ArraySupplier, BatchSupplier,
+                                  CallableSupplier, as_supplier)
 
 __all__ = ["EngineConfig", "RoundEngine", "rounds_to_boundary",
-           "sample_active_masks"]
+           "sample_active_masks", "ArraySupplier", "BatchSupplier",
+           "CallableSupplier", "as_supplier"]

@@ -4,7 +4,8 @@ Execution model
 ---------------
 
 ``RoundEngine`` wraps any :class:`repro.core.baselines.FedAlgorithm`.  The
-algorithm contributes the *math* of one round (``make_round_fn``); the engine
+algorithm contributes the *math* of one round (the local-compute /
+server-aggregate halves, or the fused ``make_round_fn``); the engine
 contributes the *execution*:
 
   * **chunking** -- ``chunk_rounds`` rounds are fused into one compiled call
@@ -12,19 +13,29 @@ contributes the *execution*:
     chunk axis).  Metrics come back as ``(chunk,)`` device arrays and are
     fetched with a single ``device_get``, so the host round-trip that
     dominated the old per-round loops is paid once per chunk;
+  * **batch supply** -- chunk-aware suppliers (:mod:`repro.exec.suppliers`)
+    hand the engine a whole chunk of batches in one vectorized call (host or
+    device resident), replacing the per-round ``np.stack`` assembly; plain
+    ``supplier(round_idx, rng)`` callables keep working;
   * **donation** -- the (potentially n_clients x d sized) federated state is
     donated into the compiled call on accelerator backends, so x_bar/c update
     in place instead of doubling peak memory;
   * **placement** -- the ``sharded`` backend installs the mesh shardings of
-    :mod:`repro.launch.sharding` on state and batches (plan A/B), exactly as
-    ``fed.distributed.make_sharded_round_fn`` used to;
+    :mod:`repro.launch.sharding` on state and batches (plan A/B) for ANY
+    algorithm that declares ``state_roles`` (all seven in the repo do);
+  * **communication** -- the ``compressed`` backend splits each round into
+    the algorithm's local/server halves and pushes the uplink message pytree
+    through a :mod:`repro.comm` transport, threading the compressor's
+    error-feedback state and PRNG key through the ``lax.scan`` carry;
   * **participation** -- optional client subsampling: the engine samples an
     ``(chunk, n_clients)`` participation mask per chunk and threads it into
     round functions that accept an ``active`` argument (Algorithm 1's
     compact form does; see ``core.algorithm.make_round_fn``).
 
 Backends never change the math: ``tests/test_exec.py`` pins trajectory
-parity between inline/sharded/protocol and chunked/unchunked execution.
+parity between inline/sharded/protocol and chunked/unchunked execution, and
+``tests/test_comm.py`` pins ``compressed`` at compression ratio 1.0 against
+``inline``.
 """
 from __future__ import annotations
 
@@ -36,12 +47,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import Dense
 from repro.core.baselines import FedAlgorithm
+from repro.exec.suppliers import BatchSupplier, as_supplier
 
 Batch = Any
-BatchSupplier = Callable[[int, np.random.Generator], Batch]
 
-BACKENDS = ("inline", "sharded", "protocol")
+BACKENDS = ("inline", "sharded", "protocol", "compressed")
+PLANS = ("A", "A_dp", "B")
 
 
 @dataclass(frozen=True)
@@ -49,8 +62,10 @@ class EngineConfig:
     """Execution options -- orthogonal to the algorithm being run.
 
     backend        : "inline" (single-device jit), "sharded" (mesh-placed,
-                     DProxState only) or "protocol" (literal per-client
-                     message passing; equivalence testing).
+                     any algorithm with ``state_roles``), "protocol" (literal
+                     per-client message passing; equivalence testing) or
+                     "compressed" (local/server split with a
+                     :mod:`repro.comm` transport on the uplink).
     chunk_rounds   : rounds fused per compiled call (lax.scan).  1 reproduces
                      the historical round-at-a-time loops exactly.
     jit            : disable to run the round function eagerly (debugging);
@@ -62,7 +77,11 @@ class EngineConfig:
                      Requires a round function with an ``active`` argument.
     mesh/param_specs/plan : sharded backend only -- the device mesh, the
                      logical-axis spec tree of the parameters, and the
-                     federated placement plan ("A" or "B").
+                     federated placement plan ("A", "A_dp" or "B").
+    transport      : compressed backend only -- the uplink compressor
+                     (defaults to :class:`repro.comm.Dense`).
+    comm_seed      : seed of the compressor's PRNG key stream (rand-k /
+                     stochastic quantization draws).
     """
 
     backend: str = "inline"
@@ -73,6 +92,8 @@ class EngineConfig:
     mesh: Any = None
     param_specs: Any = None
     plan: str = "A"
+    transport: Any = None
+    comm_seed: int = 0
 
     def validate(self) -> None:
         if self.backend not in BACKENDS:
@@ -81,17 +102,40 @@ class EngineConfig:
         if self.chunk_rounds < 1:
             raise ValueError(f"chunk_rounds must be >= 1, got "
                              f"{self.chunk_rounds}")
+        if self.plan not in PLANS:
+            raise ValueError(f"plan must be one of {PLANS}, got "
+                             f"{self.plan!r}")
         if self.participation is not None and not (0.0 < self.participation <= 1.0):
             raise ValueError(f"participation must be in (0, 1], got "
                              f"{self.participation}")
         if self.backend == "sharded" and self.mesh is None:
             raise ValueError("sharded backend requires a mesh")
+        if self.backend == "sharded" and self.param_specs is None:
+            raise ValueError(
+                "sharded backend requires param_specs: the logical-axis spec "
+                "tree of the parameters, matching the params pytree leaf for "
+                "leaf (e.g. {'w': ('mlp',), 'b': ()}; model init returns it, "
+                "see repro.models.transformer.init_model)")
         if self.backend == "sharded" and not self.jit:
             raise ValueError("sharded backend requires jit (the eager path "
                              "performs no mesh placement)")
         if self.backend == "protocol" and self.participation is not None:
             raise ValueError("protocol backend does not support partial "
                              "participation")
+        if self.backend == "compressed" and not self.jit:
+            raise ValueError("compressed backend requires jit (the "
+                             "compressor state threads through the compiled "
+                             "scan carry)")
+        if self.transport is not None and self.backend != "compressed":
+            raise ValueError(
+                f"transport is only honored by backend='compressed' (got "
+                f"backend={self.backend!r}); a transport on any other "
+                "backend would be silently ignored")
+        if self.transport is not None and not hasattr(self.transport,
+                                                      "compress"):
+            raise ValueError(
+                f"transport must implement the repro.comm.Transport "
+                f"interface, got {type(self.transport).__name__}")
 
 
 def rounds_to_boundary(r: int, every: int, total: int) -> int:
@@ -118,6 +162,8 @@ def _stack_batches(per_round: list) -> Batch:
 
     Device-resident (jax) leaves stay on device -- no host round-trip; host
     (numpy/scalar) leaves stack on host and transfer once at the jit call.
+    Chunk-aware suppliers bypass this entirely (they produce the stacked
+    chunk directly, see :mod:`repro.exec.suppliers`).
     """
 
     def lead1(x):
@@ -153,6 +199,10 @@ class RoundEngine:
         self.grad_fn = grad_fn
         self.n_clients = n_clients
         self.config = config
+        self.transport = None
+        # per-client wire bytes of one uplink message; filled in lazily by
+        # the compressed backend once the message shape is known
+        self.uplink_bytes_per_client_round: Optional[int] = None
 
         if config.backend == "protocol":
             if not hasattr(algorithm, "make_protocol_round_fn"):
@@ -161,6 +211,21 @@ class RoundEngine:
                     "(make_protocol_round_fn); use the inline backend")
             self._round_fn = algorithm.make_protocol_round_fn(grad_fn)
             self._accepts_active = False
+        elif config.backend == "compressed":
+            try:
+                self._local_fn = algorithm.make_local_fn(grad_fn)
+                self._server_fn = algorithm.make_server_fn()
+            except NotImplementedError as e:
+                raise ValueError(
+                    f"algorithm {algorithm.name!r} has no local/server split "
+                    "(make_local_fn/make_server_fn); run it on the inline "
+                    "backend instead") from e
+            self._round_fn = None
+            self._accepts_active = (
+                "active" in inspect.signature(self._server_fn).parameters
+            )
+            self.transport = (config.transport if config.transport is not None
+                              else Dense())
         else:
             self._round_fn = algorithm.make_round_fn(grad_fn)
             self._accepts_active = (
@@ -174,6 +239,9 @@ class RoundEngine:
         self._use_active = config.participation is not None
         self._chunked_call = None  # compiled lazily (needs a state template)
         self._state_shardings = None
+        self._comm_state = None  # compressed backend: error-feedback pytree
+        self._comm_key = (jax.random.PRNGKey(config.comm_seed)
+                          if config.backend == "compressed" else None)
 
     # -- state ------------------------------------------------------------
 
@@ -189,24 +257,64 @@ class RoundEngine:
         self._state_shardings = shardings
 
     def state_shardings(self, state):
-        """Mesh shardings for the federated state (sharded backend)."""
-        from repro.core.algorithm import DProxState
+        """Mesh shardings for the federated state (sharded backend).
+
+        Every algorithm declares the placement of its state fields via
+        :meth:`FedAlgorithm.state_roles`; the rule tables of
+        :mod:`repro.launch.sharding` turn that into NamedShardings.
+        """
         from repro.launch import sharding as shd
 
         if self._state_shardings is None:
-            if not isinstance(state, DProxState):
+            try:
+                roles = self.algorithm.state_roles()
+            except NotImplementedError as e:
                 raise ValueError(
-                    "the sharded backend currently places DProxState only; "
-                    f"got {type(state).__name__} (run baselines inline)")
-            self._state_shardings = shd.fed_state_shardings(
-                self.config.mesh, state.x_bar, self.config.param_specs,
-                self.config.plan, self.n_clients)
+                    f"algorithm {self.algorithm.name!r} declares no state "
+                    "placement (implement FedAlgorithm.state_roles to run "
+                    "on the sharded backend)") from e
+            self._state_shardings = shd.fed_state_shardings_from_roles(
+                self.config.mesh, roles, state, self.config.param_specs,
+                self.config.plan)
         return self._state_shardings
 
     # -- compiled chunk ---------------------------------------------------
 
     def _make_chunk_fn(self):
-        round_fn, with_active = self._round_fn, self._use_active
+        with_active = self._use_active
+        if self.config.backend == "compressed":
+            local_fn, server_fn = self._local_fn, self._server_fn
+            transport = self.transport
+
+            def chunk_fn(carry, batches, active):
+                def body(c, xs):
+                    st, cs, key = c
+                    b, a = xs if with_active else (xs, None)
+                    key, sub = jax.random.split(key)
+                    msg, aux = local_fn(st, b)
+                    msg_hat, cs_new = transport.compress(cs, msg, sub)
+                    if with_active:
+                        # inactive clients transmit nothing, so their
+                        # error-feedback residuals must not advance -- else
+                        # the telescoping identity (sent = produced - e_T)
+                        # breaks per skipped round
+                        cs = jax.tree_util.tree_map(
+                            lambda new, old: jnp.where(
+                                a.reshape((-1,) + (1,) * (new.ndim - 1)),
+                                new, old),
+                            cs_new, cs)
+                        st, info = server_fn(st, msg_hat, aux, active=a)
+                    else:
+                        cs = cs_new
+                        st, info = server_fn(st, msg_hat, aux)
+                    return (st, cs, key), info
+
+                xs = (batches, active) if with_active else batches
+                return jax.lax.scan(body, carry, xs)
+
+            return chunk_fn
+
+        round_fn = self._round_fn
 
         def chunk_fn(state, batches, active):
             def body(st, xs):
@@ -248,6 +356,31 @@ class RoundEngine:
         # and the eager path never builds a chunked call)
         return jax.jit(chunk_fn, donate_argnums=donate_argnums)
 
+    def _init_comm_state(self, state, batches_stacked):
+        """Build the transport's error-feedback state (and byte accounting)
+        from the uplink message shape -- eval_shape only, no FLOPs."""
+        one_round = jax.tree_util.tree_map(lambda x: x[0], batches_stacked)
+        msg_spec = jax.eval_shape(
+            lambda s, b: self._local_fn(s, b)[0], state, one_round)
+        self._comm_state = self.transport.init_state(msg_spec)
+        self.uplink_bytes_per_client_round = (
+            self.transport.uplink_bytes(msg_spec))
+
+    def _invoke_stacked(self, state, batches, active):
+        """Run one chunk of already-stacked batches through the compiled
+        call; returns (state, device-resident infos)."""
+        if self._chunked_call is None:
+            self._chunked_call = self._build_chunked_call(state)
+        if self.config.backend == "compressed":
+            if self._comm_state is None:
+                self._init_comm_state(state, batches)
+            carry = (state, self._comm_state, self._comm_key)
+            (state, cs, key), infos = self._chunked_call(carry, batches,
+                                                         active)
+            self._comm_state, self._comm_key = cs, key
+            return state, infos
+        return self._chunked_call(state, batches, active)
+
     def _invoke_chunk(self, state, per_round_batches, active):
         """Run ``len(per_round_batches)`` rounds in one compiled call."""
         if self.config.backend == "protocol" or not self.config.jit:
@@ -261,11 +394,9 @@ class RoundEngine:
                 for k, v in info.items():
                     stacked.setdefault(k, []).append(v)
             return state, {k: np.asarray(v) for k, v in stacked.items()}
-        if self._chunked_call is None:
-            self._chunked_call = self._build_chunked_call(state)
         batches = _stack_batches(per_round_batches)
         act = jnp.asarray(active) if self._use_active else None
-        state, infos = self._chunked_call(state, batches, act)
+        state, infos = self._invoke_stacked(state, batches, act)
         return state, jax.device_get(infos)  # the chunk's ONE host sync
 
     # -- public API -------------------------------------------------------
@@ -273,7 +404,7 @@ class RoundEngine:
     def run(
         self,
         state,
-        batch_supplier: BatchSupplier,
+        batch_supplier,
         rounds: int,
         *,
         rng: Optional[np.random.Generator] = None,
@@ -283,30 +414,48 @@ class RoundEngine:
     ):
         """Run ``rounds`` rounds from ``state``; returns (state, metrics).
 
-        ``batch_supplier(round_idx, rng)`` must return a pytree with leading
-        dims ``(n_clients, tau, ...)`` -- the same contract as the historical
-        simulator loop.  ``metrics`` maps metric name -> list with one float
-        per executed round.  ``metrics_cb(round_idx, round_metrics)``, if
-        given, fires per round (from per-chunk host fetches).
+        ``batch_supplier`` is either a plain callable ``(round_idx, rng) ->
+        batch`` or a :class:`repro.exec.suppliers.BatchSupplier`; batches are
+        pytrees with leading dims ``(n_clients, tau, ...)``.  Chunk-aware
+        suppliers feed whole chunks through ``sample_chunk`` (vectorized, no
+        host re-stack); the engine falls back to per-round sampling under
+        partial participation, where mask draws must interleave with batch
+        draws.  ``metrics`` maps metric name -> list with one float per
+        executed round.  ``metrics_cb(round_idx, round_metrics)``, if given,
+        fires per round (from per-chunk host fetches).
         """
         if rng is None:
             rng = np.random.default_rng(seed)
+        supplier = as_supplier(batch_supplier)
+        # the vectorized chunk path cannot interleave rng-consuming batch and
+        # mask draws per round, so participation keeps the per-round path
+        use_stacked = (
+            type(supplier).sample_chunk is not BatchSupplier.sample_chunk
+            and not self._use_active and self.config.jit
+            and self.config.backend != "protocol")
         metrics: dict[str, list] = {}
         chunk = self.config.chunk_rounds if self.config.jit else 1
         done = 0
         while done < rounds:
             c = min(chunk, rounds - done)
-            # interleave batch and mask draws per round (not per chunk) so an
-            # rng-consuming supplier sees a chunk-size-invariant rng stream:
-            # the trajectory must not depend on chunk_rounds
-            per_round, masks = [], []
-            for i in range(c):
-                per_round.append(batch_supplier(start_round + done + i, rng))
-                if self._use_active:
-                    masks.append(sample_active_masks(
-                        self.n_clients, 1, self.config.participation, rng)[0])
-            active = np.stack(masks) if self._use_active else None
-            state, infos = self._invoke_chunk(state, per_round, active)
+            if use_stacked:
+                batches = supplier.sample_chunk(start_round + done, c, rng)
+                state, infos = self._invoke_stacked(state, batches, None)
+                infos = jax.device_get(infos)  # the chunk's ONE host sync
+            else:
+                # interleave batch and mask draws per round (not per chunk)
+                # so an rng-consuming supplier sees a chunk-size-invariant
+                # rng stream: the trajectory must not depend on chunk_rounds
+                per_round, masks = [], []
+                for i in range(c):
+                    per_round.append(
+                        supplier.sample_round(start_round + done + i, rng))
+                    if self._use_active:
+                        masks.append(sample_active_masks(
+                            self.n_clients, 1, self.config.participation,
+                            rng)[0])
+                active = np.stack(masks) if self._use_active else None
+                state, infos = self._invoke_chunk(state, per_round, active)
             per_round_infos = [{} for _ in range(c)]
             for k, v in infos.items():
                 arr = np.asarray(v)
@@ -340,13 +489,11 @@ class RoundEngine:
         if self._use_active and active is None:
             raise ValueError("engine configured with participation; pass the "
                              "active mask explicitly to step()")
-        if self._chunked_call is None:
-            self._chunked_call = self._build_chunked_call(state)
         per_chunk = _stack_batches([batches])
         act = None
         if self._use_active:
             act = jnp.asarray(np.asarray(active)[None])
-        state, infos = self._chunked_call(state, per_chunk, act)
+        state, infos = self._invoke_stacked(state, per_chunk, act)
         return state, {k: v[0] for k, v in infos.items()}
 
     def global_params(self, state):

@@ -1,0 +1,155 @@
+"""Chunk-aware batch suppliers for the round-execution engine.
+
+The engine historically accepted only a callable ``supplier(round_idx, rng)``
+returning one round's batches ``(n_clients, tau, ...)``; for a chunk of C
+rounds it called it C times and ``np.stack``-ed the results on the host --
+a full copy of every batch before each compiled call.  The supplier protocol
+here removes that copy:
+
+  * :class:`BatchSupplier` -- ``sample_round(r, rng)`` plus
+    ``sample_chunk(start, n_rounds, rng)`` returning the whole chunk with a
+    leading rounds axis (the default implementation falls back to
+    per-round + stack, so any supplier is chunk-safe);
+  * :class:`ArraySupplier` -- vectorized sampling from per-client example
+    arrays ``{name: (n_clients, n_examples, ...)}``: the chunk path draws the
+    (cheap) index arrays per round and performs ONE fancy-gather for the
+    whole chunk.  With ``device_cache=True`` the example arrays live on
+    device and the gather happens there, so batches never round-trip through
+    host memory at all (a win on accelerator backends; on CPU the host
+    gather is already cheap -- see BENCH_exec.json);
+  * plain callables keep working everywhere (the engine wraps them in
+    :class:`CallableSupplier`).
+
+rng contract: :class:`ArraySupplier` derives a fresh generator per round from
+``(seed, round_idx)`` instead of consuming the engine's shared stream, which
+makes trajectories trivially invariant to ``chunk_rounds`` (the engine's core
+contract, pinned in tests/test_exec.py).  The chunk path is only used when
+partial participation is off -- mask draws must interleave with batch draws
+per round for rng-stream invariance, so the engine falls back to the
+per-round path under ``EngineConfig.participation``.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+Batch = Any
+
+
+class BatchSupplier:
+    """Protocol: per-round sampling plus an optional vectorized chunk path."""
+
+    def sample_round(self, round_idx: int, rng: np.random.Generator) -> Batch:
+        raise NotImplementedError
+
+    def sample_chunk(self, start_round: int, n_rounds: int,
+                     rng: np.random.Generator) -> Batch:
+        """Batches for ``n_rounds`` rounds, leaves gaining a leading rounds
+        axis.  Default: per-round sampling + host stack (correct everywhere;
+        subclasses override with a vectorized path)."""
+        from repro.exec.engine import _stack_batches
+
+        return _stack_batches([self.sample_round(start_round + i, rng)
+                               for i in range(n_rounds)])
+
+
+class CallableSupplier(BatchSupplier):
+    """Adapter giving a plain ``fn(round_idx, rng)`` the supplier surface."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def sample_round(self, round_idx, rng):
+        return self.fn(round_idx, rng)
+
+
+def as_supplier(supplier) -> BatchSupplier:
+    """Coerce a callable or BatchSupplier to the supplier protocol."""
+    if isinstance(supplier, BatchSupplier):
+        return supplier
+    if callable(supplier):
+        return CallableSupplier(supplier)
+    raise TypeError(f"not a batch supplier: {type(supplier).__name__}")
+
+
+class ArraySupplier(BatchSupplier):
+    """Vectorized i.i.d. minibatch supplier over per-client example arrays.
+
+    ``arrays`` maps batch keys to arrays of shape ``(n_clients, n_examples,
+    ...)``; every round draws, per client and local step, ``batch_size``
+    examples with replacement (matching ``data.synthetic.make_round_batches``).
+    ``batch_size=None`` is full-batch mode: every local step sees all
+    examples (the paper's Fig. 2 full-gradient regime) via a broadcast view,
+    no copy.
+
+    Per-round index draws come from ``np.random.default_rng((seed, r))`` --
+    deterministic in the round index, so chunked and per-round execution see
+    identical data whatever ``chunk_rounds`` is.
+    """
+
+    def __init__(self, arrays: Mapping[str, np.ndarray], tau: int,
+                 batch_size: Optional[int], *, seed: int = 0,
+                 device_cache: bool = False):
+        arrays = dict(arrays)
+        if not arrays:
+            raise ValueError("ArraySupplier needs at least one array")
+        shapes = {k: v.shape[:2] for k, v in arrays.items()}
+        if len(set(shapes.values())) != 1:
+            raise ValueError(f"arrays disagree on (n_clients, n_examples): "
+                             f"{shapes}")
+        self.n_clients, self.n_examples = next(iter(shapes.values()))
+        self.tau = tau
+        self.batch_size = batch_size
+        self.seed = seed
+        self.device_cache = device_cache
+        self._arrays = ({k: jnp.asarray(v) for k, v in arrays.items()}
+                        if device_cache else arrays)
+
+    @classmethod
+    def from_dataset(cls, data, tau: int, batch_size: Optional[int], *,
+                     seed: int = 0, device_cache: bool = False):
+        """Supplier over a :class:`repro.data.synthetic.FederatedDataset`
+        producing the engine's standard ``{"a": ..., "y": ...}`` batches."""
+        return cls({"a": data.features, "y": data.labels}, tau, batch_size,
+                   seed=seed, device_cache=device_cache)
+
+    # -- internals --------------------------------------------------------
+
+    def _round_idx(self, r: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, r))
+        return rng.integers(0, self.n_examples,
+                            size=(self.n_clients, self.tau, self.batch_size))
+
+    def _gather(self, idx: np.ndarray) -> Batch:
+        # idx: (..., n_clients, tau, b); result leaves (..., n_clients, tau,
+        # b, *example_shape) -- one fancy-gather per array, on device when
+        # the cache is device-resident
+        cidx = np.arange(self.n_clients).reshape(
+            (1,) * (idx.ndim - 3) + (self.n_clients, 1, 1))
+        return {k: v[cidx, idx] for k, v in self._arrays.items()}
+
+    def _full_batch(self, lead: tuple) -> Batch:
+        xp = jnp if self.device_cache else np
+
+        def one(v):
+            shape = lead + (self.n_clients, self.tau) + tuple(v.shape[1:])
+            src = v[:, None] if not lead else v[None, :, None]
+            return xp.broadcast_to(src, shape)
+
+        return {k: one(v) for k, v in self._arrays.items()}
+
+    # -- supplier protocol ------------------------------------------------
+
+    def sample_round(self, round_idx, rng=None):
+        if self.batch_size is None:
+            return self._full_batch(())
+        return self._gather(self._round_idx(round_idx))
+
+    def sample_chunk(self, start_round, n_rounds, rng=None):
+        if self.batch_size is None:
+            return self._full_batch((n_rounds,))
+        idx = np.stack([self._round_idx(start_round + i)
+                        for i in range(n_rounds)])
+        return self._gather(idx)

@@ -1,4 +1,4 @@
-"""Sharded federated execution: place Algorithm 1 rounds on a device mesh.
+"""Sharded federated execution: place federated rounds on a device mesh.
 
 Since the exec refactor this is a thin compatibility surface over the
 unified round-execution engine (:mod:`repro.exec`) with
@@ -24,16 +24,27 @@ def shard_fed_state(mesh, state: A.DProxState, param_specs, plan: str):
     return jax.device_put(state, sh), sh
 
 
+def make_sharded_algorithm_engine(mesh, algorithm, grad_fn, param_specs,
+                                  plan: str, n_clients: int,
+                                  *, chunk_rounds: int = 1) -> RoundEngine:
+    """A sharded-backend RoundEngine for ANY algorithm declaring
+    ``state_roles`` (all of :mod:`repro.core.baselines` do) -- baselines are
+    no longer restricted to inline execution."""
+    return RoundEngine(
+        algorithm, grad_fn, n_clients,
+        EngineConfig(backend="sharded", chunk_rounds=chunk_rounds,
+                     mesh=mesh, param_specs=param_specs, plan=plan))
+
+
 def make_sharded_engine(mesh, fed_cfg: A.DProxConfig, reg: Regularizer,
                         grad_fn, param_specs, plan: str, n_clients: int,
                         *, chunk_rounds: int = 1) -> RoundEngine:
     """A sharded-backend RoundEngine for Algorithm 1 on ``mesh``."""
     from repro.fed.simulator import DProxAlgorithm
 
-    return RoundEngine(
-        DProxAlgorithm(reg, fed_cfg), grad_fn, n_clients,
-        EngineConfig(backend="sharded", chunk_rounds=chunk_rounds,
-                     mesh=mesh, param_specs=param_specs, plan=plan))
+    return make_sharded_algorithm_engine(
+        mesh, DProxAlgorithm(reg, fed_cfg), grad_fn, param_specs, plan,
+        n_clients, chunk_rounds=chunk_rounds)
 
 
 def make_sharded_round_fn(mesh, fed_cfg: A.DProxConfig, reg: Regularizer,

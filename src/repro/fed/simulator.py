@@ -12,8 +12,14 @@ round-execution engine (:mod:`repro.exec`): ``run`` builds a
 the paper-metric bookkeeping here.  Between eval points the engine fuses up
 to ``chunk_rounds`` rounds into one compiled call, so long runs (the 4000+
 round Fig. 2/3 trajectories) no longer pay a Python dispatch + host sync per
-round.  Pass ``engine=`` to run the same loop on the sharded or protocol
-backend, or ``participation=`` for client subsampling.
+round.  Pass ``engine=`` to run the same loop on the sharded, protocol or
+compressed backend, or ``participation=`` for client subsampling.
+``batch_supplier`` may be a plain callable or a chunk-aware
+:class:`repro.exec.BatchSupplier` (e.g. ``ArraySupplier.from_dataset``),
+which feeds whole chunks without the host-side per-round stack.  When the
+engine carries a :mod:`repro.comm` transport, the recorded
+``uplink_mbytes_per_round`` reflects the transport's actual wire bytes
+instead of the algorithm's declared dense vector count.
 """
 from __future__ import annotations
 
@@ -45,8 +51,17 @@ class DProxAlgorithm(FedAlgorithm):
         self.cfg.validate(n_clients)
         return alg_mod.init_state(params0, n_clients)
 
+    def make_local_fn(self, grad_fn):
+        return alg_mod.make_local_fn(self.cfg, self.reg, grad_fn)
+
+    def make_server_fn(self):
+        return alg_mod.make_server_fn(self.cfg, self.reg)
+
     def make_round_fn(self, grad_fn):
         return alg_mod.make_round_fn(self.cfg, self.reg, grad_fn)
+
+    def state_roles(self):
+        return {"x_bar": "server", "c": "client", "round": "scalar"}
 
     def make_protocol_round_fn(self, grad_fn):
         """The literal per-client message-passing round (engine backend
@@ -153,6 +168,10 @@ def run(
         # per-eval-point cadence of eval_fn (zip-able with hist.rounds)
         hist.loss.extend(metrics.get("train_loss", []))
         r += k
+    if engine.uplink_bytes_per_client_round is not None:
+        # compressed backend: account the transport's actual wire bytes
+        hist.uplink_mbytes_per_round = (
+            engine.uplink_bytes_per_client_round * n_clients / 1e6)
     # final eval
     x, g0 = evaluate(state, g0)
     hist.rounds.append(rounds)

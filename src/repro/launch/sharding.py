@@ -162,20 +162,68 @@ def request_rules() -> dict[str, Rule]:
             "none": ((), 9)}
 
 
-def fed_state_shardings(mesh, param_tree, param_specs, plan: str, n_clients: int):
-    """Shardings for a DProxState(x_bar, c, round)."""
-    from repro.core.algorithm import DProxState
+STATE_ROLES = ("server", "client", "scalar")
 
-    xb = tree_shardings(param_tree, param_specs, server_param_rules(plan), mesh)
-    crules = client_state_rules(plan)
+
+def fed_state_shardings_from_roles(mesh, roles: Mapping[str, str], state,
+                                   param_specs, plan: str):
+    """Shardings for ANY algorithm's federated state from its declared roles.
+
+    ``roles`` maps each field of the (NamedTuple) state to a placement role
+    (see :meth:`repro.core.baselines.FedAlgorithm.state_roles`):
+
+      * ``server`` -- params-shaped field, sharded like the global model;
+      * ``client`` -- params-shaped field with a leading client axis; the
+        client axis claims the mesh data/pod axis per ``plan``;
+      * ``scalar`` -- replicated (round counters and other bookkeeping).
+
+    ``state`` may hold concrete arrays or ShapeDtypeStructs.  This is what
+    lets the sharded engine backend place Scaffold/FedDA/... states, not just
+    DProxState.
+    """
+    fields = getattr(state, "_fields", None)
+    if fields is None:
+        raise TypeError(
+            f"state must be a NamedTuple of fields, got {type(state).__name__}")
+    missing = [f for f in fields if f not in roles]
+    if missing:
+        raise ValueError(f"state_roles is missing fields {missing} of "
+                         f"{type(state).__name__}")
+    scalar = NamedSharding(mesh, PartitionSpec())
     is_spec = lambda x: isinstance(x, tuple) and all(isinstance(a, str) for a in x)
     client_specs = jax.tree_util.tree_map(
         lambda ax: ("client",) + ax, param_specs, is_leaf=is_spec)
+
+    def one(role, sub):
+        if role == "server":
+            return tree_shardings(sub, param_specs,
+                                  server_param_rules(plan), mesh)
+        if role == "client":
+            return tree_shardings(sub, client_specs,
+                                  client_state_rules(plan), mesh)
+        if role == "scalar":
+            return jax.tree_util.tree_map(lambda _: scalar, sub)
+        raise ValueError(f"unknown state role {role!r}; expected one of "
+                         f"{STATE_ROLES}")
+
+    return type(state)(**{f: one(roles[f], getattr(state, f))
+                          for f in fields})
+
+
+def fed_state_shardings(mesh, param_tree, param_specs, plan: str, n_clients: int):
+    """Shardings for a DProxState(x_bar, c, round) -- the historical surface,
+    now a thin wrapper over :func:`fed_state_shardings_from_roles`."""
+    from repro.core.algorithm import DProxState
+
     c_tree = jax.tree_util.tree_map(
-        lambda x: jax.ShapeDtypeStruct((n_clients,) + x.shape, x.dtype), param_tree)
-    c = tree_shardings(c_tree, client_specs, crules, mesh)
-    scalar = NamedSharding(mesh, PartitionSpec())
-    return DProxState(x_bar=xb, c=c, round=scalar)
+        lambda x: jax.ShapeDtypeStruct((n_clients,) + tuple(x.shape), x.dtype),
+        param_tree)
+    state = DProxState(
+        x_bar=param_tree, c=c_tree,
+        round=jax.ShapeDtypeStruct((), np.int32))
+    return fed_state_shardings_from_roles(
+        mesh, {"x_bar": "server", "c": "client", "round": "scalar"},
+        state, param_specs, plan)
 
 
 def batch_shardings(mesh, batches, plan: str, *, chunk_axis: bool = False):

@@ -5,8 +5,12 @@ configs are exercised via the dry-run) with Algorithm 1 over heterogeneous
 per-client token streams, with checkpointing and optional mesh sharding.
 
 Execution goes through the unified round engine (:mod:`repro.exec`):
-``--chunk N`` fuses N rounds per compiled call (one host sync per chunk) and
-``--participation f`` subsamples a fraction of clients each round.
+``--chunk N`` fuses N rounds per compiled call (one host sync per chunk),
+``--participation f`` subsamples a fraction of clients each round,
+``--transport {dense,topk,randk,quantize}`` (+ ``--compress-ratio``) runs the
+compressed-uplink backend, and batches come from a chunk-aware
+:class:`repro.exec.ArraySupplier` over the token streams (``--device-cache``
+keeps them device-resident, skipping the host stack entirely).
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
         --scale smoke --rounds 50 --tau 4 --clients 4 --ckpt out/ck.npz
@@ -33,7 +37,8 @@ from repro.core.algorithm import DProxConfig
 from repro.core.baselines import FedAvg, FedDA, FedMid, Scaffold
 from repro.core.prox import L1
 from repro.data.synthetic import token_stream_heterogeneous
-from repro.exec import EngineConfig, RoundEngine, rounds_to_boundary
+from repro.exec import (ArraySupplier, EngineConfig, RoundEngine,
+                        rounds_to_boundary)
 from repro.fed.simulator import DProxAlgorithm
 from repro.models import transformer as T
 from repro.models.layers import AttnCfg
@@ -91,6 +96,14 @@ def main(argv=None):
                     help="rounds fused per compiled engine call")
     ap.add_argument("--participation", type=float, default=None,
                     help="fraction of clients active per round (dprox only)")
+    ap.add_argument("--transport", default=None,
+                    choices=["dense", "topk", "randk", "quantize"],
+                    help="compress uplinks through this repro.comm transport")
+    ap.add_argument("--compress-ratio", type=float, default=0.1,
+                    help="kept-coordinate fraction for topk/randk")
+    ap.add_argument("--device-cache", action="store_true",
+                    help="keep token streams device-resident (batches are "
+                         "gathered on device, no host stack)")
     args = ap.parse_args(argv)
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
@@ -110,18 +123,26 @@ def main(argv=None):
     reg = L1(lam=args.lam)
     alg = make_algorithm(args.algorithm, reg, args.tau, args.eta, args.eta_g)
     grad_fn = T.make_grad_fn(cfg)
+    backend, transport = "inline", None
+    if args.transport is not None:
+        from repro.comm import get_transport
+
+        backend = "compressed"
+        kw = ({"ratio": args.compress_ratio}
+              if args.transport in ("topk", "randk") else {})
+        transport = get_transport(args.transport, **kw)
     engine = RoundEngine(
         alg, grad_fn, args.clients,
-        EngineConfig(backend="inline", chunk_rounds=args.chunk,
-                     participation=args.participation))
+        EngineConfig(backend=backend, chunk_rounds=args.chunk,
+                     participation=args.participation, transport=transport))
     state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 
-    def sample_batches(round_idx, rng):
-        idx = rng.integers(0, streams.shape[1],
-                           size=(args.clients, args.tau, args.batch))
-        toks = streams[np.arange(args.clients)[:, None, None], idx]
-        return {"tokens": np.asarray(toks, np.int32)}
+    # chunk-aware supplier over the token streams: the whole chunk is
+    # gathered in one vectorized call (on device with --device-cache)
+    sample_batches = ArraySupplier(
+        {"tokens": streams.astype(np.int32)}, args.tau, args.batch,
+        seed=args.seed, device_cache=args.device_cache)
 
     t0 = time.time()
     last_loss = float("nan")
@@ -157,6 +178,11 @@ def main(argv=None):
 
     print(f"done: final loss {last_loss:.4f}, "
           f"global-model sparsity {float(sparsity(final)):.3f}")
+    if engine.uplink_bytes_per_client_round is not None:
+        dense = n_params * 4
+        print(f"uplink: {engine.uplink_bytes_per_client_round/1e6:.2f} "
+              f"MB/client/round ({args.transport}; dense would be "
+              f"{dense/1e6:.2f} MB)")
     return state
 
 
