@@ -10,9 +10,12 @@ uplink message pytree each algorithm's ``make_local_fn`` emits
 (``repro.comm.uplink_message_spec``, eval_shape only -- no FLOPs), instead
 of hand-maintained per-algorithm constants: elements-per-client divided by
 the model dimension gives the vectors/round, which then scales to the target
-model sizes.  Downlink stays declared (it is the broadcast global state, not
-part of the uplink message).  A second block reports the compressed-uplink
-bytes for Algorithm 1 under the repro.comm transports.
+model sizes.  The **downlink** column is likewise measured from the real
+broadcast pytree -- the 'server'-role fields of each algorithm's state
+(``FedAlgorithm.state_roles``), which is exactly what the engine broadcasts
+and what a :class:`repro.comm.DownlinkCompressor` compresses.  A second
+block reports the compressed uplink AND downlink bytes for Algorithm 1
+under the repro.comm transports.
 
 We report bytes/round/client for the paper's CNN (d=112,458 fp32) and the
 assigned stablelm-1.6b (d=1.64e9 bf16) to show the production-scale stakes.
@@ -42,10 +45,28 @@ def measured_uplink_vectors(alg, grad_fn, params0, n_clients, tau, d_model):
     return int(vectors)
 
 
+def measured_downlink_vectors(alg, params0, n_clients, d_model):
+    """Vectors/round/client from the real broadcast pytree: the
+    'server'-role state fields every client receives each round -- the
+    same pytree the engine's downlink compressor operates on."""
+    from repro.comm import broadcast_elements
+    from repro.exec import server_state_fields
+
+    state = alg.init(params0, n_clients)
+    fields = server_state_fields(alg, state)
+    elements = broadcast_elements(fields)
+    vectors = elements / d_model
+    assert vectors == int(vectors), (
+        f"{alg.name}: broadcast elements {elements} not a multiple of the "
+        f"model dimension {d_model}")
+    return int(vectors)
+
+
 def main():
     import jax.numpy as jnp
 
-    from repro.comm import Dense, Quantize, RandK, TopK
+    from repro.comm import (Dense, DownlinkCompressor, Quantize, RandK,
+                            TopK)
     from repro.core.algorithm import DProxConfig
     from repro.core.baselines import (FastFedDA, FedAvg, FedDA, FedMid,
                                       FedProx, Scaffold)
@@ -72,24 +93,33 @@ def main():
                                                  n_clients=4, tau=10,
                                                  d_model=d_probe)
                for alg in algs}
+    down_vectors = {alg.name: measured_downlink_vectors(alg, params0,
+                                                        n_clients=4,
+                                                        d_model=d_probe)
+                    for alg in algs}
 
     for d, dtype_bytes, tag in [(112_458, 4, "cnn"),
                                 (1_644_804_096, 2, "stablelm1.6b")]:
         for alg in algs:
             up = vectors[alg.name] * d * dtype_bytes
-            down = alg.downlink_vectors * d * dtype_bytes
+            down = down_vectors[alg.name] * d * dtype_bytes
             emit(f"comm/{tag}/{alg.name}/uplink_bytes_per_round", 0.0, up)
+            emit(f"comm/{tag}/{alg.name}/downlink_bytes_per_round", 0.0, down)
             emit(f"comm/{tag}/{alg.name}/total_bytes_per_round", 0.0, up + down)
 
-    # compressed uplinks for Algorithm 1: what each transport actually ships
-    # for one d-dim fp32 message (values+indices for sparsifiers, packed
-    # levels+scale for the quantizer)
+    # compressed wire bytes for Algorithm 1: what each transport actually
+    # ships for one d-dim fp32 message in each direction (values+indices
+    # for sparsifiers, packed levels+scale for the quantizer); downlink is
+    # measured on the broadcast pytree shape (one sender)
     for d, tag in [(112_458, "cnn")]:
         msg = {"x": jnp.zeros((1, d), jnp.float32)}
+        broadcast = {"x_bar": jnp.zeros((d,), jnp.float32)}
         for tr in [Dense(), TopK(ratio=0.1), RandK(ratio=0.1),
                    Quantize(bits=8)]:
             emit(f"comm/{tag}/dprox+{tr.name}/uplink_bytes_per_round", 0.0,
                  tr.uplink_bytes(msg))
+            emit(f"comm/{tag}/dprox+{tr.name}/downlink_bytes_per_round", 0.0,
+                 DownlinkCompressor(tr).downlink_bytes(broadcast))
 
 
 if __name__ == "__main__":

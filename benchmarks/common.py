@@ -48,20 +48,24 @@ def logreg_problem(n_clients=30, m=100, d=20, alpha=50.0, beta=50.0, seed=0,
 
 def make_engine(algorithm, grad_fn, n_clients, *, backend="inline",
                 chunk_rounds=16, participation=None, jit=True,
-                transport=None):
+                transport=None, clock=None, buffer_size=None,
+                staleness=None):
     """RoundEngine with benchmark defaults (chunked inline backend).
 
-    Benchmarks that drive the engine directly (exec_bench) build it here;
-    the fig* benchmarks go through ``repro.fed.simulator.run``, which builds
-    its own inline engine internally.  ``transport`` (a repro.comm
-    compressor) pairs with backend="compressed"."""
+    Benchmarks that drive the engine directly (exec_bench, sched_sweep)
+    build it here; the fig* benchmarks go through
+    ``repro.fed.simulator.run``, which builds its own inline engine
+    internally.  ``transport`` (a repro.comm compressor) pairs with
+    backend="compressed" or "async"; ``clock``/``buffer_size``/``staleness``
+    (repro.sched) with backend="async"."""
     from repro.exec import EngineConfig, RoundEngine
 
     return RoundEngine(
         algorithm, grad_fn, n_clients,
         EngineConfig(backend=backend, chunk_rounds=chunk_rounds,
                      participation=participation, jit=jit,
-                     transport=transport))
+                     transport=transport, clock=clock,
+                     buffer_size=buffer_size, staleness=staleness))
 
 
 class Timer:

@@ -1,6 +1,7 @@
-"""Round-loop throughput: chunking, batch supply, and compressed uplinks.
+"""Round-loop throughput: chunking, batch supply, compressed uplinks, and
+the async backend.
 
-Three experiments on the paper's sparse-logreg problem (tau=10):
+Four experiments on the paper's sparse-logreg problem (tau=10):
 
   * ``exec/chunk<k>``      -- chunked engine vs the historical per-round
     loop.  chunk_rounds=1 IS the historical loop (one jitted call + one host
@@ -9,12 +10,20 @@ Three experiments on the paper's sparse-logreg problem (tau=10):
     pre-sampled once so data-generation cost doesn't mask the delta.
   * ``exec/supplier_*``    -- per-round host sampling + np.stack (the
     historical batch assembly) vs the chunk-aware ArraySupplier (one
-    vectorized gather per chunk, host- or device-resident).  Sampling is
-    live here: the supplier IS what's being measured.
+    vectorized gather per chunk, host- or device-resident) vs the
+    double-buffered prefetch supplier (next chunk's gather overlaps the
+    current compiled call).  Sampling is live here: the supplier IS what's
+    being measured.
   * ``exec/compressed_*``  -- backend="compressed" at ratio 1.0 (dense
     transport: the overhead of the local/server split + identity compressor)
     and with top-k 10% (sparsified uplink; derived column = uplink
     bytes/client/round).
+  * ``exec/async_*``       -- backend="async" at equal work: zero-delay
+    deterministic clock + full buffer (trajectory-identical to inline, so
+    the ratio isolates the buffered-aggregation overhead: clock draws,
+    top-k selection, ledger) and a straggler clock with a half buffer
+    (derived column = mean report age).  The acceptance bar is chunked
+    async within 1.5x of synchronous round throughput.
 
 Emits CSV lines ``name,us_per_round,derived`` AND a machine-readable
 ``BENCH_exec.json`` (path override: REPRO_BENCH_JSON) so the perf
@@ -87,6 +96,8 @@ def bench_suppliers(alg, grad_fn, data, params0, rounds, tau) -> None:
                                                       seed=3)),
         ("supplier_chunk_dev", ArraySupplier.from_dataset(
             data, tau, batch, seed=3, device_cache=True)),
+        ("supplier_chunk_prefetch", ArraySupplier.from_dataset(
+            data, tau, batch, seed=3, prefetch=True)),
     ]
     base_us = None
     for name, sup in suppliers:
@@ -122,6 +133,43 @@ def bench_compressed(alg, grad_fn, data, params0, rounds, tau) -> None:
                f"{engine.uplink_bytes_per_client_round}B/client")
 
 
+def bench_async(alg, grad_fn, data, params0, rounds, tau) -> None:
+    import numpy as np
+
+    from repro.exec import ArraySupplier
+    from repro.sched import Staleness, StragglerClock
+
+    chunk = 32
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    inline = make_engine(alg, grad_fn, data.n_clients, chunk_rounds=chunk)
+    state = inline.init(params0)
+    state, _ = inline.run(state, sup, chunk, seed=1)
+    base_us = _time_run(inline, state, sup, rounds)
+
+    # equal work: zero-delay + full buffer is trajectory-identical to the
+    # inline run above, so the ratio is pure backend overhead
+    cases = [
+        ("async_dense", dict()),
+        ("async_straggler_halfbuf",
+         dict(clock=StragglerClock(slowdown=4.0),
+              buffer_size=data.n_clients // 2,
+              staleness=Staleness("poly", correct=True))),
+    ]
+    for name, kw in cases:
+        engine = make_engine(alg, grad_fn, data.n_clients, backend="async",
+                             chunk_rounds=chunk, **kw)
+        state = engine.init(params0)
+        state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
+        best = _time_run(engine, state, sup, rounds)
+        engine2 = make_engine(alg, grad_fn, data.n_clients, backend="async",
+                              chunk_rounds=chunk, **kw)
+        st = engine2.init(params0)
+        _, m = engine2.run(st, sup, chunk, seed=1)
+        record(f"exec/{name}", best,
+               f"{base_us / best:.2f}x,"
+               f"mean_age={np.mean(m.get('staleness_mean', [0.0])):.2f}")
+
+
 def main() -> None:
     from repro.core.algorithm import DProxConfig
     from repro.fed.simulator import DProxAlgorithm
@@ -135,6 +183,7 @@ def main() -> None:
     bench_chunking(alg, grad_fn, data, params0, rounds, tau)
     bench_suppliers(alg, grad_fn, data, params0, rounds, tau)
     bench_compressed(alg, grad_fn, data, params0, rounds, tau)
+    bench_async(alg, grad_fn, data, params0, rounds, tau)
 
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_exec.json")
     with open(out, "w") as f:

@@ -14,7 +14,7 @@ import traceback
 def main() -> None:
     from benchmarks import (ablation_schedule, comm_table, exec_bench,
                             fig2_fullgrad, fig3_stochastic, fig4_cnn,
-                            kernel_bench, roofline_table)
+                            kernel_bench, roofline_table, sched_sweep)
 
     modules = [
         ("fig2", fig2_fullgrad),
@@ -25,6 +25,7 @@ def main() -> None:
         ("kernels", kernel_bench),
         ("roofline", roofline_table),
         ("exec", exec_bench),
+        ("sched", sched_sweep),
     ]
     print("name,us_per_call,derived")
     failed = []

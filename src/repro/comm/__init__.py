@@ -13,12 +13,19 @@ that exchange a first-class, swappable layer:
     quantize) with error-feedback state that the engine threads through its
     ``lax.scan`` chunk loop under ``EngineConfig(backend="compressed")``;
   * :func:`uplink_message_spec` recovers the exact wire shape of any
-    algorithm's uplink via ``jax.eval_shape`` for byte accounting.
+    algorithm's uplink via ``jax.eval_shape`` for byte accounting;
+  * :class:`DownlinkCompressor` compresses the *broadcast* direction: the
+    server-state innovation (new state minus what clients currently hold)
+    goes through any transport with its own error-feedback stream, so
+    total wire bytes shrink in both directions
+    (``EngineConfig(downlink=...)``).
 """
-from repro.comm.transport import (Dense, Quantize, RandK, TopK, Transport,
+from repro.comm.transport import (Dense, DownlinkCompressor, Quantize, RandK,
+                                  TopK, Transport, broadcast_elements,
                                   get_transport, message_elements_per_client,
                                   uplink_message_spec)
 
 __all__ = ["Transport", "Dense", "TopK", "RandK", "Quantize",
-           "get_transport", "message_elements_per_client",
-           "uplink_message_spec"]
+           "DownlinkCompressor", "get_transport",
+           "message_elements_per_client", "uplink_message_spec",
+           "broadcast_elements"]

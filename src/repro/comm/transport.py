@@ -73,10 +73,12 @@ class Transport:
     """Interface: ``init_state`` -> per-run compressor state (error-feedback
     residuals, or an empty pytree), ``compress`` -> (what the server receives,
     next compressor state).  ``key`` is a jax PRNG key; deterministic
-    transports ignore it."""
+    transports ignore it (``stochastic = False`` lets the engine skip the
+    per-round key split, which is measurable on µs-scale rounds)."""
 
     name: str = "base"
     error_feedback: bool = False
+    stochastic: bool = False
 
     def init_state(self, msg_template):
         if not self.error_feedback:
@@ -155,6 +157,7 @@ class RandK(Transport):
     error_feedback: bool = True
     rescale: bool = True
     name: str = "randk"
+    stochastic: bool = True
 
     def apply(self, msg, key):
         leaves, treedef = jax.tree_util.tree_flatten(msg)
@@ -196,6 +199,7 @@ class Quantize(Transport):
     bits: int = 8
     error_feedback: bool = True
     name: str = "quantize"
+    stochastic: bool = True
 
     def apply(self, msg, key):
         leaves, treedef = jax.tree_util.tree_flatten(msg)
@@ -223,6 +227,84 @@ class Quantize(Transport):
             # plus a sign bit per coordinate, plus the per-leaf fp scale
             total += -(-d * (self.bits + 1) // 8) + jnp.dtype(l.dtype).itemsize
         return total
+
+
+@dataclass(frozen=True)
+class DownlinkCompressor:
+    """Server-side compression of the broadcast (downlink) innovation.
+
+    Transports above compress the *uplink*; the broadcast of the updated
+    server state back to the clients is the other half of every round's
+    wire bytes, and for 1-uplink/1-downlink algorithms it is exactly half
+    the total.  This wrapper applies any :class:`Transport` to the
+    *server-state innovation* -- the delta between the server's new state
+    and the shadow state ``seen`` the clients currently hold:
+
+        m_r      = x_{r+1} - seen_r          (innovation vs the shadow)
+        seen_{r+1} = x_{r+1} - (m_r - C(m_r))
+
+    The shadow IS the error-feedback state: because ``seen`` accumulates
+    only what was actually broadcast, the next innovation automatically
+    contains every coordinate earlier rounds dropped (``x - seen`` is the
+    standing residual), giving the same telescoping guarantee as the
+    uplink's explicit residual stream -- the long-run broadcast is
+    undistorted.  ``seen`` is written in the subtractive form above so that
+    at ratio 1.0 (``C = id``) the shadow equals the true state *bitwise*
+    and the trajectory is unchanged (pinned in tests/test_comm.py).
+
+    The engine's compressed backend threads ``{"seen": ...}`` through its
+    scan carry and hands the clients ``seen`` in place of the true server
+    fields (``EngineConfig(downlink=...)``); the server state itself stays
+    authoritative.  Leaves are lifted to a leading axis of one ("one
+    sender"), so the same per-client transport kernels serve the
+    single-server broadcast; ``downlink_bytes`` is the per-receiver wire
+    cost of one broadcast.
+    """
+
+    transport: Transport
+    name: str = "downlink"
+
+    def _lift(self, tree):
+        return jax.tree_util.tree_map(lambda l: l[None], tree)
+
+    def init_state(self, server_fields):
+        """``server_fields``: pytree of the broadcast server state (e.g. the
+        'server'-role fields of an algorithm's state)."""
+        return {"seen": self._lift(
+            jax.tree_util.tree_map(jnp.asarray, server_fields))}
+
+    def broadcast(self, dl_state, server_fields, key):
+        """Compress ``server_fields - seen``; returns (what the clients now
+        hold, next downlink state)."""
+        new = self._lift(server_fields)
+        innov = tu.tree_sub(new, dl_state["seen"])
+        innov_hat = self.transport.apply(innov, key)
+        # seen = seen + innov_hat, written as new - (dropped mass) so the
+        # identity transport reproduces the true state bitwise
+        seen = tu.tree_sub(new, tu.tree_sub(innov, innov_hat))
+        visible = jax.tree_util.tree_map(lambda l: l[0], seen)
+        return visible, {"seen": seen}
+
+    def downlink_bytes(self, server_template) -> int:
+        """Bytes on the wire per receiver for one broadcast."""
+        spec = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((1,) + tuple(l.shape), l.dtype),
+            server_template)
+        return self.transport.uplink_bytes(spec)
+
+
+def broadcast_elements(server_template) -> int:
+    """Coordinates per receiver of one broadcast pytree -- how benchmarks
+    account the downlink from the real server state instead of declared
+    vector counts (the dense byte count is
+    ``DownlinkCompressor(Dense()).downlink_bytes``)."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(server_template):
+        n = 1
+        for s in tuple(l.shape):
+            n *= int(s)
+        total += n
+    return total
 
 
 _TRANSPORTS = {"dense": Dense, "topk": TopK, "randk": RandK,

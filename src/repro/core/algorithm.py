@@ -151,7 +151,10 @@ def make_local_fn(
     what makes sparsifying/quantizing it meaningful (compressing the raw
     iterate would zero model coordinates).  ``aux`` holds client-resident
     values that never leave the client (the retained average gradient for
-    the correction rebuild, loss metrics).
+    the correction rebuild, per-client loss metrics) plus the per-client
+    report-round tag ``aux["round"]`` -- the round this report was computed
+    at, which the async engine backend reads to age buffered stale reports
+    (:mod:`repro.sched`); the synchronous server half ignores it.
     """
     step_impl = local_update_step
     if use_fused_kernel:
@@ -174,7 +177,7 @@ def make_local_fn(
         def body(carry, t):
             z_hat, z, gsum, loss_sum = carry
             batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
-            losses, grads = jax.vmap(per_client_grad)(z, batch_t)
+            losses, grads = jax.vmap(per_client_grad)(z, batch_t)  # (n,)
             # keep the federated state arithmetic in the params dtype (the
             # microbatched grad path accumulates in fp32)
             grads = jax.tree_util.tree_map(
@@ -197,12 +200,12 @@ def make_local_fn(
                 z_hat_next,
                 z_next,
                 tu.tree_add(gsum, grads),
-                loss_sum + jnp.mean(losses).astype(jnp.float32),
+                loss_sum + losses.astype(jnp.float32),
             ), None
 
         (z_hat_tau, _, gsum, loss_sum), _ = jax.lax.scan(
             body,
-            (z_hat0, z0, gsum0, jnp.float32(0.0)),
+            (z_hat0, z0, gsum0, jnp.zeros((n_clients,), jnp.float32)),
             jnp.arange(cfg.tau),
             unroll=True if unroll else 1,
         )
@@ -210,7 +213,8 @@ def make_local_fn(
             lambda zh, pp: zh - pp[None], z_hat_tau, p)
         aux = {
             "avg_grad": tu.tree_scale(gsum, 1.0 / cfg.tau),  # (n, ...)
-            "loss_sum": loss_sum,
+            "loss_sum": loss_sum,  # (n,) per-client tau-summed mean loss
+            "round": jnp.broadcast_to(state.round, (n_clients,)),
         }
         return msg, aux
 
@@ -275,7 +279,7 @@ def make_server_fn(cfg: DProxConfig, reg: Regularizer):
                 c_next, state.c)
 
         metrics = {
-            "train_loss": aux["loss_sum"] / cfg.tau,
+            "train_loss": jnp.mean(aux["loss_sum"]) / cfg.tau,
             # drift is shift-invariant: spread of the innovations == spread
             # of the raw iterates around their mean
             "drift": tu.tree_norm(

@@ -72,10 +72,14 @@ class FedAlgorithm:
     broadcast reference (``z_tau - x`` etc.), which is what makes
     sparsification/quantization meaningful and is how every server update
     here is naturally written (``x + eta_g * mean(delta)``).  ``aux`` stays
-    client-resident (loss metrics, retained gradients, control-variate
-    copies) and is never compressed.  ``make_round_fn`` is the dense
-    composition of the two halves; subclasses implement the halves, not the
-    composition.
+    client-resident (per-client loss metrics, retained gradients,
+    control-variate copies) and is never compressed; every aux leaf carries
+    a leading client axis, and ``aux["round"]`` is the per-client
+    *report-round tag* -- the round the report was computed at.  The
+    synchronous server halves ignore the tag; the async engine backend
+    (:mod:`repro.sched`) reads it to age buffered stale reports.
+    ``make_round_fn`` is the dense composition of the two halves;
+    subclasses implement the halves, not the composition.
 
     ``state_roles`` declares the mesh placement of every federated-state
     field so the sharded engine backend can place ANY algorithm's state
@@ -137,6 +141,12 @@ def _innovation(z_stacked, ref):
     return jax.tree_util.tree_map(lambda z, r: z - r[None], z_stacked, ref)
 
 
+def _base_aux(state, loss_sum, n_clients, **extra):
+    """Client-resident aux: per-client loss + the report-round tag."""
+    return {"loss_sum": loss_sum,
+            "round": jnp.broadcast_to(state.round, (n_clients,)), **extra}
+
+
 def _x_state_server_fn(eta_g: float, tau: int):
     """Shared server half of the single-vector x-state algorithms
     (FedAvg/FedMid/FedProx):  x+ = x + eta_g * mean_i delta_i."""
@@ -147,7 +157,7 @@ def _x_state_server_fn(eta_g: float, tau: int):
             lambda x, md: x + eta_g * md, state.x, mean_delta
         )
         return _XState(x_next, state.round + 1), {
-            "train_loss": aux["loss_sum"] / tau
+            "train_loss": jnp.mean(aux["loss_sum"]) / tau
         }
 
     return server_fn
@@ -175,10 +185,10 @@ class FedAvg(FedAlgorithm):
                 batch_t = jax.tree_util.tree_map(lambda x: x[:, t], batches)
                 losses, grads = jax.vmap(grad_fn)(z, batch_t)
                 z = jax.tree_util.tree_map(lambda zi, g: zi - self.eta * g, z, grads)
-                return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+                return (z, loss_sum + losses.astype(jnp.float32)), None
 
-            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
-            return _innovation(z_tau, state.x), {"loss_sum": loss_sum}
+            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.zeros((n,), jnp.float32)), self.tau)
+            return _innovation(z_tau, state.x), _base_aux(state, loss_sum, n)
 
         return local_fn
 
@@ -216,10 +226,10 @@ class FedMid(FedAlgorithm):
                 losses, grads = jax.vmap(grad_fn)(z, batch_t)
                 z = jax.tree_util.tree_map(lambda zi, g: zi - self.eta * g, z, grads)
                 z = self.reg.prox(z, self.eta)  # prox INSIDE the local loop
-                return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+                return (z, loss_sum + losses.astype(jnp.float32)), None
 
-            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
-            return _innovation(z_tau, state.x), {"loss_sum": loss_sum}
+            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.zeros((n,), jnp.float32)), self.tau)
+            return _innovation(z_tau, state.x), _base_aux(state, loss_sum, n)
 
         return local_fn
 
@@ -277,12 +287,12 @@ class FedDA(FedAlgorithm):
                     lambda zh, g: zh - self.eta * g, z_hat, grads
                 )
                 z = self.reg.prox(z_hat, (t + 1) * self.eta)
-                return (z_hat, z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+                return (z_hat, z, loss_sum + losses.astype(jnp.float32)), None
 
             (z_hat_tau, _, loss_sum), _ = _scan_local(
-                body, (z_hat0, z_hat0, jnp.float32(0.0)), self.tau
+                body, (z_hat0, z_hat0, jnp.zeros((n,), jnp.float32)), self.tau
             )
-            return _innovation(z_hat_tau, p), {"loss_sum": loss_sum}
+            return _innovation(z_hat_tau, p), _base_aux(state, loss_sum, n)
 
         return local_fn
 
@@ -294,7 +304,7 @@ class FedDA(FedAlgorithm):
                 lambda pp, md: pp + self.eta_g * md, p, mean_delta
             )
             return _DualState(x_bar_next, state.round + 1), {
-                "train_loss": aux["loss_sum"] / self.tau
+                "train_loss": jnp.mean(aux["loss_sum"]) / self.tau
             }
 
         return server_fn
@@ -352,10 +362,11 @@ class FastFedDA(FedAlgorithm):
                     lambda zh, m: zh - eta_k * m, z_hat, mem
                 )
                 z = self.reg.prox(z_hat, (t + 1) * self.eta0)
-                return (z_hat, z, mem, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+                return (z_hat, z, mem, loss_sum + losses.astype(jnp.float32)), None
 
             (z_hat_tau, _, mem_tau, loss_sum), _ = _scan_local(
-                body, (z_hat0, z_hat0, mem0, jnp.float32(0.0)), self.tau
+                body, (z_hat0, z_hat0, mem0, jnp.zeros((n,), jnp.float32)),
+                self.tau
             )
             # TWO uplink vectors per client: the model innovation AND the
             # gradient-memory innovation (the extra cost Table `comm`
@@ -364,7 +375,7 @@ class FastFedDA(FedAlgorithm):
                 "z_hat": _innovation(z_hat_tau, p),
                 "mem": _innovation(mem_tau, state.grad_mem),
             }
-            return msg, {"loss_sum": loss_sum}
+            return msg, _base_aux(state, loss_sum, n)
 
         return local_fn
 
@@ -379,7 +390,7 @@ class FastFedDA(FedAlgorithm):
                 lambda gm, md: gm + md, state.grad_mem,
                 tu.tree_mean_over_axis0(msg["mem"]))
             return _FastDAState(x_bar_next, mem_next, state.round + 1), {
-                "train_loss": aux["loss_sum"] / self.tau
+                "train_loss": jnp.mean(aux["loss_sum"]) / self.tau
             }
 
         return server_fn
@@ -440,9 +451,10 @@ class Scaffold(FedAlgorithm):
                     state.ci,
                     state.c,
                 )
-                return (y, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+                return (y, loss_sum + losses.astype(jnp.float32)), None
 
-            (y_tau, loss_sum), _ = _scan_local(body, (y0, jnp.float32(0.0)), self.tau)
+            (y_tau, loss_sum), _ = _scan_local(
+                body, (y0, jnp.zeros((n,), jnp.float32)), self.tau)
             # ci+ = ci - c + (x - y_tau)/(tau*eta)   (Scaffold option II)
             ci_next = jax.tree_util.tree_map(
                 lambda cii, cc, x, y: cii
@@ -463,7 +475,7 @@ class Scaffold(FedAlgorithm):
                 "ci": jax.tree_util.tree_map(  # ci is already per-client
                     lambda cn, co: cn - co, ci_next, state.ci),
             }
-            return msg, {"ci": ci_next, "loss_sum": loss_sum}
+            return msg, _base_aux(state, loss_sum, n, ci=ci_next)
 
         return local_fn
 
@@ -478,7 +490,7 @@ class Scaffold(FedAlgorithm):
                 lambda c, md: c + md, state.c,
                 tu.tree_mean_over_axis0(msg["ci"]))
             return _ScaffoldState(x_next, c_next, aux["ci"], state.round + 1), {
-                "train_loss": aux["loss_sum"] / self.tau
+                "train_loss": jnp.mean(aux["loss_sum"]) / self.tau
             }
 
         return server_fn
@@ -521,10 +533,10 @@ class FedProx(FedAlgorithm):
                     state.x,
                 )
                 z = self.reg.prox(z, self.eta)
-                return (z, loss_sum + jnp.mean(losses).astype(jnp.float32)), None
+                return (z, loss_sum + losses.astype(jnp.float32)), None
 
-            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.float32(0.0)), self.tau)
-            return _innovation(z_tau, state.x), {"loss_sum": loss_sum}
+            (z_tau, loss_sum), _ = _scan_local(body, (z0, jnp.zeros((n,), jnp.float32)), self.tau)
+            return _innovation(z_tau, state.x), _base_aux(state, loss_sum, n)
 
         return local_fn
 

@@ -1,22 +1,35 @@
-"""Unified round-execution engine with a pluggable communication layer.
+"""Unified round-execution engine with pluggable communication + asynchrony.
 
 One engine runs every federated algorithm in the repo (Algorithm 1 and all
 :mod:`repro.core.baselines`) on every execution substrate:
 
-  * ``inline``     -- single-device ``jax.jit`` (replaces the hand-rolled
-    loop of the old ``fed.simulator.run``);
-  * ``sharded``    -- mesh-placed with explicit state/batch shardings and
-    donated buffers.  Any algorithm that declares its per-field placement
-    via ``FedAlgorithm.state_roles`` (all seven do) can be mesh-placed, not
-    just DProxState;
-  * ``compressed`` -- the round is executed as the algorithm's explicit
-    local-compute / server-aggregate halves with a :mod:`repro.comm`
-    transport (dense, top-k, rand-k, quantize; error feedback) compressing
-    the uplink message pytree in between.  Compressor state and PRNG key
-    thread through the compiled scan carry, so compression composes with
-    chunking and donation;
-  * ``protocol``   -- the literal per-client message-passing form of
-    Algorithm 1, kept for equivalence testing.
+  ============ ========================================================
+  backend      execution substrate
+  ============ ========================================================
+  inline       single-device ``jax.jit`` (replaces the hand-rolled loop
+               of the old ``fed.simulator.run``)
+  sharded      mesh-placed with explicit state/batch shardings and
+               donated buffers; any algorithm that declares per-field
+               placement via ``FedAlgorithm.state_roles`` (all seven do)
+  compressed   the algorithm's local/server halves with a
+               :mod:`repro.comm` transport (dense/top-k/rand-k/quantize;
+               error feedback) on the uplink message pytree, and
+               optionally a ``DownlinkCompressor`` on the broadcast;
+               compressor state + PRNG key thread through the scan carry
+  async        simulated asynchrony (:mod:`repro.sched`): a virtual-time
+               clock model staggers client report arrivals, the server
+               commits per ``buffer_size`` arrivals (FedBuff-style) with
+               staleness-weighted / re-anchored mixing, and the
+               in-flight report buffer + staleness ledger ride in the
+               scan carry; composes with ``transport=``
+  protocol     the literal per-client message-passing form of
+               Algorithm 1, kept for equivalence testing
+  ============ ========================================================
+
+Parity contracts: chunked == unchunked and inline == sharded == protocol
+(tests/test_exec.py), compressed at ratio 1.0 == inline bitwise
+(tests/test_comm.py), async under a zero-delay clock + full buffer ==
+inline bitwise (tests/test_sched.py).
 
 On top of the backend, the engine owns device-resident *multi-round
 chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with
@@ -32,19 +45,27 @@ replacing the historical host-side per-round ``np.stack``; plain
 
     from repro.comm import TopK
     from repro.exec import ArraySupplier, EngineConfig, RoundEngine
+    from repro.sched import Staleness, StragglerClock
 
     eng = RoundEngine(alg, grad_fn, n_clients,
-                      EngineConfig(backend="compressed", chunk_rounds=16,
+                      EngineConfig(backend="async", chunk_rounds=16,
+                                   clock=StragglerClock(slowdown=4.0),
+                                   buffer_size=n_clients // 2,
+                                   staleness=Staleness("poly", correct=True),
                                    transport=TopK(ratio=0.1)))
     state = eng.init(params0)
-    supplier = ArraySupplier.from_dataset(data, tau, batch, device_cache=True)
+    supplier = ArraySupplier.from_dataset(data, tau, batch, device_cache=True,
+                                          prefetch=True)
     state, metrics = eng.run(state, supplier, rounds=100, rng=rng)
+    # metrics now also carries the staleness ledger: per-commit virtual
+    # wall-clock, mean/max report age and the report-age histogram
 """
 from repro.exec.engine import (EngineConfig, RoundEngine,
-                               rounds_to_boundary, sample_active_masks)
+                               rounds_to_boundary, sample_active_masks,
+                               server_state_fields)
 from repro.exec.suppliers import (ArraySupplier, BatchSupplier,
                                   CallableSupplier, as_supplier)
 
 __all__ = ["EngineConfig", "RoundEngine", "rounds_to_boundary",
-           "sample_active_masks", "ArraySupplier", "BatchSupplier",
-           "CallableSupplier", "as_supplier"]
+           "sample_active_masks", "server_state_fields", "ArraySupplier",
+           "BatchSupplier", "CallableSupplier", "as_supplier"]

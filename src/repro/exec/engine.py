@@ -26,16 +26,28 @@ contributes the *execution*:
   * **communication** -- the ``compressed`` backend splits each round into
     the algorithm's local/server halves and pushes the uplink message pytree
     through a :mod:`repro.comm` transport, threading the compressor's
-    error-feedback state and PRNG key through the ``lax.scan`` carry;
+    error-feedback state and PRNG key through the ``lax.scan`` carry; an
+    optional :class:`repro.comm.DownlinkCompressor` additionally compresses
+    the broadcast direction (clients compute against the compressed
+    ``seen`` server state, the server stays authoritative);
+  * **asynchrony** -- the ``async`` backend simulates heterogeneous client
+    speeds (:mod:`repro.sched`): a virtual-time clock model schedules each
+    client's report arrival, the server commits once ``buffer_size``
+    reports have arrived (FedBuff-style), stale reports are
+    staleness-weighted (optionally with an error-feedback residual that
+    defers rather than drops the downweighted mass), and the in-flight
+    report buffer rides in the scan carry as a fixed-size pytree -- so
+    async composes with chunking, donation and uplink compression;
   * **participation** -- optional client subsampling: the engine samples an
     ``(chunk, n_clients)`` participation mask per chunk and threads it into
     round functions that accept an ``active`` argument (Algorithm 1's
     compact form does; see ``core.algorithm.make_round_fn``).
 
 Backends never change the math: ``tests/test_exec.py`` pins trajectory
-parity between inline/sharded/protocol and chunked/unchunked execution, and
+parity between inline/sharded/protocol and chunked/unchunked execution,
 ``tests/test_comm.py`` pins ``compressed`` at compression ratio 1.0 against
-``inline``.
+``inline``, and ``tests/test_sched.py`` pins ``async`` under a zero-delay
+clock and full buffer bitwise against ``inline``.
 """
 from __future__ import annotations
 
@@ -53,8 +65,16 @@ from repro.exec.suppliers import BatchSupplier, as_supplier
 
 Batch = Any
 
-BACKENDS = ("inline", "sharded", "protocol", "compressed")
+BACKENDS = ("inline", "sharded", "protocol", "compressed", "async")
 PLANS = ("A", "A_dp", "B")
+
+
+def server_state_fields(algorithm, state) -> dict:
+    """The 'server'-role fields of an algorithm's state: the broadcast
+    pytree a :class:`repro.comm.DownlinkCompressor` operates on, and the
+    wire shape benchmarks account downlink bytes from."""
+    roles = algorithm.state_roles()
+    return {k: getattr(state, k) for k, r in roles.items() if r == "server"}
 
 
 @dataclass(frozen=True)
@@ -63,9 +83,10 @@ class EngineConfig:
 
     backend        : "inline" (single-device jit), "sharded" (mesh-placed,
                      any algorithm with ``state_roles``), "protocol" (literal
-                     per-client message passing; equivalence testing) or
+                     per-client message passing; equivalence testing),
                      "compressed" (local/server split with a
-                     :mod:`repro.comm` transport on the uplink).
+                     :mod:`repro.comm` transport on the uplink) or "async"
+                     (simulated asynchrony via :mod:`repro.sched`).
     chunk_rounds   : rounds fused per compiled call (lax.scan).  1 reproduces
                      the historical round-at-a-time loops exactly.
     jit            : disable to run the round function eagerly (debugging);
@@ -78,10 +99,28 @@ class EngineConfig:
     mesh/param_specs/plan : sharded backend only -- the device mesh, the
                      logical-axis spec tree of the parameters, and the
                      federated placement plan ("A", "A_dp" or "B").
-    transport      : compressed backend only -- the uplink compressor
-                     (defaults to :class:`repro.comm.Dense`).
+    transport      : compressed/async backends only -- the uplink
+                     compressor (defaults to :class:`repro.comm.Dense`).
     comm_seed      : seed of the compressor's PRNG key stream (rand-k /
                      stochastic quantization draws).
+    downlink       : compressed backend only -- a
+                     :class:`repro.comm.DownlinkCompressor` (or a plain
+                     Transport, which gets wrapped) compressing the
+                     broadcast server-state innovation with its own
+                     error-feedback stream.
+    clock          : async backend only -- a :mod:`repro.sched` ClockModel
+                     (or its registry name), the virtual-time per-client
+                     round durations.  Defaults to the zero-delay
+                     DeterministicClock.
+    buffer_size    : async backend only -- reports the server waits for
+                     before committing an update (FedBuff's K).  Defaults
+                     to n_clients (every pending report, zero-staleness
+                     with a deterministic clock).
+    staleness      : async backend only -- a :class:`repro.sched.Staleness`
+                     policy (or a weighting name: "uniform", "poly")
+                     controlling stale-report downweighting and the
+                     optional error-feedback correction.
+    clock_seed     : seed of the clock model's PRNG key stream.
     """
 
     backend: str = "inline"
@@ -94,6 +133,11 @@ class EngineConfig:
     plan: str = "A"
     transport: Any = None
     comm_seed: int = 0
+    downlink: Any = None
+    clock: Any = None
+    buffer_size: Optional[int] = None
+    staleness: Any = None
+    clock_seed: int = 0
 
     def validate(self) -> None:
         if self.backend not in BACKENDS:
@@ -122,20 +166,46 @@ class EngineConfig:
         if self.backend == "protocol" and self.participation is not None:
             raise ValueError("protocol backend does not support partial "
                              "participation")
-        if self.backend == "compressed" and not self.jit:
-            raise ValueError("compressed backend requires jit (the "
-                             "compressor state threads through the compiled "
-                             "scan carry)")
-        if self.transport is not None and self.backend != "compressed":
+        if self.backend in ("compressed", "async") and not self.jit:
             raise ValueError(
-                f"transport is only honored by backend='compressed' (got "
-                f"backend={self.backend!r}); a transport on any other "
-                "backend would be silently ignored")
+                f"{self.backend} backend requires jit (the compressor/"
+                "scheduler state threads through the compiled scan carry)")
+        if self.transport is not None and self.backend not in ("compressed",
+                                                               "async"):
+            raise ValueError(
+                f"transport is only honored by backend='compressed' or "
+                f"'async' (got backend={self.backend!r}); a transport on "
+                "any other backend would be silently ignored")
         if self.transport is not None and not hasattr(self.transport,
                                                       "compress"):
             raise ValueError(
                 f"transport must implement the repro.comm.Transport "
                 f"interface, got {type(self.transport).__name__}")
+        if self.downlink is not None and self.backend != "compressed":
+            raise ValueError(
+                f"downlink compression is only honored by "
+                f"backend='compressed' (got backend={self.backend!r}); a "
+                "downlink compressor on any other backend would be "
+                "silently ignored")
+        # async-only options are rejected elsewhere for the same reason the
+        # transport guard exists: silently ignoring them would mask typos
+        for opt, val in (("clock", self.clock),
+                         ("buffer_size", self.buffer_size),
+                         ("staleness", self.staleness)):
+            if val is not None and self.backend != "async":
+                raise ValueError(
+                    f"{opt} is only honored by backend='async' (got "
+                    f"backend={self.backend!r}); set "
+                    f"EngineConfig(backend='async') to run the simulated-"
+                    "asynchrony subsystem, or drop the option")
+        if self.backend == "async" and self.participation is not None:
+            raise ValueError(
+                "async backend does not compose with participation: client "
+                "subsampling is implicit in buffered aggregation (set "
+                "buffer_size < n_clients instead)")
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got "
+                             f"{self.buffer_size}")
 
 
 def rounds_to_boundary(r: int, every: int, total: int) -> int:
@@ -200,9 +270,12 @@ class RoundEngine:
         self.n_clients = n_clients
         self.config = config
         self.transport = None
-        # per-client wire bytes of one uplink message; filled in lazily by
-        # the compressed backend once the message shape is known
+        self.downlink = None
+        # per-client wire bytes of one uplink message / one broadcast;
+        # filled in lazily by the compressed/async backends once the
+        # message shape is known
         self.uplink_bytes_per_client_round: Optional[int] = None
+        self.downlink_bytes_per_client_round: Optional[int] = None
 
         if config.backend == "protocol":
             if not hasattr(algorithm, "make_protocol_round_fn"):
@@ -211,7 +284,7 @@ class RoundEngine:
                     "(make_protocol_round_fn); use the inline backend")
             self._round_fn = algorithm.make_protocol_round_fn(grad_fn)
             self._accepts_active = False
-        elif config.backend == "compressed":
+        elif config.backend in ("compressed", "async"):
             try:
                 self._local_fn = algorithm.make_local_fn(grad_fn)
                 self._server_fn = algorithm.make_server_fn()
@@ -226,6 +299,15 @@ class RoundEngine:
             )
             self.transport = (config.transport if config.transport is not None
                               else Dense())
+            if config.backend == "async":
+                self._setup_async()
+            elif config.downlink is not None:
+                dl = config.downlink
+                if not hasattr(dl, "broadcast"):  # plain Transport
+                    from repro.comm import DownlinkCompressor
+
+                    dl = DownlinkCompressor(dl)
+                self.downlink = dl
         else:
             self._round_fn = algorithm.make_round_fn(grad_fn)
             self._accepts_active = (
@@ -239,9 +321,41 @@ class RoundEngine:
         self._use_active = config.participation is not None
         self._chunked_call = None  # compiled lazily (needs a state template)
         self._state_shardings = None
-        self._comm_state = None  # compressed backend: error-feedback pytree
+        self._comm_state = None  # compressed/async: error-feedback pytree
         self._comm_key = (jax.random.PRNGKey(config.comm_seed)
-                          if config.backend == "compressed" else None)
+                          if config.backend in ("compressed", "async")
+                          else None)
+        self._sched_state = None  # async: in-flight report buffer + ledger
+        self._dl_state = None  # compressed+downlink: client-visible shadow
+
+    def _setup_async(self) -> None:
+        """Resolve clock/staleness/buffer and build the async round step."""
+        from repro.sched import (DeterministicClock, as_staleness, get_clock,
+                                 make_async_round)
+
+        cfg = self.config
+        clock = cfg.clock
+        if clock is None:
+            clock = DeterministicClock()
+        elif isinstance(clock, str):
+            clock = get_clock(clock)
+        if not hasattr(clock, "durations"):
+            raise ValueError(
+                f"clock must implement the repro.sched.ClockModel interface "
+                f"(durations), got {type(clock).__name__}")
+        staleness = as_staleness(cfg.staleness)
+        buffer_size = (cfg.buffer_size if cfg.buffer_size is not None
+                       else self.n_clients)
+        if not 1 <= buffer_size <= self.n_clients:
+            raise ValueError(
+                f"buffer_size must be in [1, n_clients={self.n_clients}], "
+                f"got {buffer_size}")
+        self.clock, self.staleness, self.buffer_size = (clock, staleness,
+                                                        buffer_size)
+        self._async_round = make_async_round(
+            self._local_fn, self._server_fn, self.transport, clock,
+            buffer_size, self.n_clients, staleness,
+            accepts_active=self._accepts_active)
 
     # -- state ------------------------------------------------------------
 
@@ -282,16 +396,53 @@ class RoundEngine:
 
     def _make_chunk_fn(self):
         with_active = self._use_active
+        if self.config.backend == "async":
+            async_round = self._async_round
+
+            def chunk_fn(carry, batches, active):
+                def body(c, b):
+                    st, sc, cs, key = c
+                    st, sc, cs, key, info = async_round(st, sc, cs, key, b)
+                    return (st, sc, cs, key), info
+
+                return jax.lax.scan(body, carry, batches)
+
+            return chunk_fn
+
         if self.config.backend == "compressed":
             local_fn, server_fn = self._local_fn, self._server_fn
-            transport = self.transport
+            transport, downlink = self.transport, self.downlink
+            algorithm = self.algorithm
+            # deterministic compressors ignore their key: skip the
+            # per-round threefry split (measurable on µs-scale rounds)
+            needs_key = getattr(transport, "stochastic", True) or (
+                downlink is not None
+                and getattr(downlink.transport, "stochastic", True))
+
+            def body_keys(key):
+                if not needs_key:
+                    return key, key, key
+                if downlink is not None:
+                    return jax.random.split(key, 3)
+                key, sub = jax.random.split(key)
+                return key, sub, sub
 
             def chunk_fn(carry, batches, active):
                 def body(c, xs):
-                    st, cs, key = c
+                    if downlink is not None:
+                        st, cs, dls, key = c
+                        key, sub, sub_dl = body_keys(key)
+                        # clients compute against the compressed broadcast
+                        # (what they actually hold); the server state stays
+                        # authoritative
+                        st_v = st._replace(**jax.tree_util.tree_map(
+                            lambda l: l[0], dls["seen"]))
+                    else:
+                        st, cs, key = c
+                        key, sub, _ = body_keys(key)
+                        st_v = st
                     b, a = xs if with_active else (xs, None)
-                    key, sub = jax.random.split(key)
-                    msg, aux = local_fn(st, b)
+                    msg, aux = local_fn(st_v, b)
                     msg_hat, cs_new = transport.compress(cs, msg, sub)
                     if with_active:
                         # inactive clients transmit nothing, so their
@@ -303,10 +454,14 @@ class RoundEngine:
                                 a.reshape((-1,) + (1,) * (new.ndim - 1)),
                                 new, old),
                             cs_new, cs)
-                        st, info = server_fn(st, msg_hat, aux, active=a)
+                        st, info = server_fn(st_v, msg_hat, aux, active=a)
                     else:
                         cs = cs_new
-                        st, info = server_fn(st, msg_hat, aux)
+                        st, info = server_fn(st_v, msg_hat, aux)
+                    if downlink is not None:
+                        _, dls = downlink.broadcast(
+                            dls, server_state_fields(algorithm, st), sub_dl)
+                        return (st, cs, dls, key), info
                     return (st, cs, key), info
 
                 xs = (batches, active) if with_active else batches
@@ -366,14 +521,57 @@ class RoundEngine:
         self.uplink_bytes_per_client_round = (
             self.transport.uplink_bytes(msg_spec))
 
+    def _init_sched_state(self, state, batches_stacked):
+        """Zero-filled in-flight report buffer for the async backend, from
+        the local half's message/aux shapes -- eval_shape only, no FLOPs."""
+        from repro.sched import init_async_state
+
+        one_round = jax.tree_util.tree_map(lambda x: x[0], batches_stacked)
+        msg_spec, aux_spec = jax.eval_shape(self._local_fn, state, one_round)
+        if "round" not in aux_spec:
+            raise ValueError(
+                f"algorithm {self.algorithm.name!r} emits no report-round "
+                "tag (aux['round']); the async backend needs it to age "
+                "buffered reports")
+        start = int(state.round) if hasattr(state, "round") else 0
+        return init_async_state(
+            msg_spec, aux_spec, self.n_clients, self.config.clock_seed,
+            start_round=start,
+            with_resid=(self.staleness.correct
+                        and self.buffer_size < self.n_clients))
+
     def _invoke_stacked(self, state, batches, active):
         """Run one chunk of already-stacked batches through the compiled
         call; returns (state, device-resident infos)."""
         if self._chunked_call is None:
             self._chunked_call = self._build_chunked_call(state)
+        if self.config.backend == "async":
+            if self._comm_state is None:
+                self._init_comm_state(state, batches)
+            if self._sched_state is None:
+                self._sched_state = self._init_sched_state(state, batches)
+            carry = (state, self._sched_state, self._comm_state,
+                     self._comm_key)
+            (state, sc, cs, key), infos = self._chunked_call(carry, batches,
+                                                             active)
+            self._sched_state, self._comm_state, self._comm_key = sc, cs, key
+            return state, infos
         if self.config.backend == "compressed":
             if self._comm_state is None:
                 self._init_comm_state(state, batches)
+            if self.downlink is not None and self._dl_state is None:
+                fields = server_state_fields(self.algorithm, state)
+                self._dl_state = self.downlink.init_state(fields)
+                self.downlink_bytes_per_client_round = (
+                    self.downlink.downlink_bytes(fields))
+            if self.downlink is not None:
+                carry = (state, self._comm_state, self._dl_state,
+                         self._comm_key)
+                (state, cs, dls, key), infos = self._chunked_call(
+                    carry, batches, active)
+                self._comm_state, self._dl_state, self._comm_key = (cs, dls,
+                                                                    key)
+                return state, infos
             carry = (state, self._comm_state, self._comm_key)
             (state, cs, key), infos = self._chunked_call(carry, batches,
                                                          active)

@@ -17,6 +17,14 @@ here removes that copy:
     device and the gather happens there, so batches never round-trip through
     host memory at all (a win on accelerator backends; on CPU the host
     gather is already cheap -- see BENCH_exec.json);
+  * ``prefetch=True`` double-buffers the chunk path: after serving chunk
+    ``[start, start+n)`` the supplier kicks off the gather (+
+    ``jax.device_put`` under ``device_cache``) for ``[start+n, start+2n)``
+    on a background thread, so the next chunk's batch assembly overlaps the
+    current compiled call (jax dispatch is asynchronous; the engine blocks
+    in ``device_get`` while the staging thread works).  Safe because chunk
+    draws are derived from ``(seed, round_idx)``, never from a shared rng
+    stream -- prefetching cannot perturb the trajectory;
   * plain callables keep working everywhere (the engine wraps them in
     :class:`CallableSupplier`).
 
@@ -91,7 +99,7 @@ class ArraySupplier(BatchSupplier):
 
     def __init__(self, arrays: Mapping[str, np.ndarray], tau: int,
                  batch_size: Optional[int], *, seed: int = 0,
-                 device_cache: bool = False):
+                 device_cache: bool = False, prefetch: bool = False):
         arrays = dict(arrays)
         if not arrays:
             raise ValueError("ArraySupplier needs at least one array")
@@ -104,16 +112,20 @@ class ArraySupplier(BatchSupplier):
         self.batch_size = batch_size
         self.seed = seed
         self.device_cache = device_cache
+        self.prefetch = prefetch
         self._arrays = ({k: jnp.asarray(v) for k, v in arrays.items()}
                         if device_cache else arrays)
+        self._executor = None  # staging thread, created on first prefetch
+        self._pending = None   # (start_round, n_rounds, future)
 
     @classmethod
     def from_dataset(cls, data, tau: int, batch_size: Optional[int], *,
-                     seed: int = 0, device_cache: bool = False):
+                     seed: int = 0, device_cache: bool = False,
+                     prefetch: bool = False):
         """Supplier over a :class:`repro.data.synthetic.FederatedDataset`
         producing the engine's standard ``{"a": ..., "y": ...}`` batches."""
         return cls({"a": data.features, "y": data.labels}, tau, batch_size,
-                   seed=seed, device_cache=device_cache)
+                   seed=seed, device_cache=device_cache, prefetch=prefetch)
 
     # -- internals --------------------------------------------------------
 
@@ -147,9 +159,29 @@ class ArraySupplier(BatchSupplier):
             return self._full_batch(())
         return self._gather(self._round_idx(round_idx))
 
-    def sample_chunk(self, start_round, n_rounds, rng=None):
-        if self.batch_size is None:
-            return self._full_batch((n_rounds,))
+    def _chunk(self, start_round, n_rounds):
         idx = np.stack([self._round_idx(start_round + i)
                         for i in range(n_rounds)])
         return self._gather(idx)
+
+    def sample_chunk(self, start_round, n_rounds, rng=None):
+        if self.batch_size is None:
+            return self._full_batch((n_rounds,))  # broadcast view: no copy
+        if not self.prefetch:
+            return self._chunk(start_round, n_rounds)
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="supplier-prefetch")
+        if (self._pending is not None
+                and self._pending[:2] == (start_round, n_rounds)):
+            chunk = self._pending[2].result()
+        else:
+            # cold start, or the caller jumped (e.g. a remainder chunk):
+            # fall back to a synchronous gather and re-prime
+            chunk = self._chunk(start_round, n_rounds)
+        nxt = start_round + n_rounds
+        self._pending = (nxt, n_rounds,
+                         self._executor.submit(self._chunk, nxt, n_rounds))
+        return chunk

@@ -19,7 +19,11 @@ compressed backend, or ``participation=`` for client subsampling.
 which feeds whole chunks without the host-side per-round stack.  When the
 engine carries a :mod:`repro.comm` transport, the recorded
 ``uplink_mbytes_per_round`` reflects the transport's actual wire bytes
-instead of the algorithm's declared dense vector count.
+instead of the algorithm's declared dense vector count.  When the engine
+runs the async backend (:mod:`repro.sched`), the per-round staleness
+ledger (virtual wall-clock, mean/max delivered-report age) is copied into
+``History.extra`` under ``sched/``-prefixed keys (per-ROUND cadence,
+unlike the per-eval-point ``eval_fn`` keys).
 """
 from __future__ import annotations
 
@@ -164,9 +168,13 @@ def run(
         k = rounds_to_boundary(r, eval_every, rounds)
         state, metrics = engine.run(state, batch_supplier, k,
                                     rng=rng, start_round=r)
-        # only train_loss is recorded per round: hist.extra keys keep the
-        # per-eval-point cadence of eval_fn (zip-able with hist.rounds)
+        # train_loss is recorded per round; eval_fn's hist.extra keys keep
+        # the per-eval-point cadence (zip-able with hist.rounds), so the
+        # async ledger's per-round series get a distinguishing prefix
         hist.loss.extend(metrics.get("train_loss", []))
+        for key in ("vtime", "staleness_mean", "staleness_max"):
+            if key in metrics:
+                hist.extra.setdefault(f"sched/{key}", []).extend(metrics[key])
         r += k
     if engine.uplink_bytes_per_client_round is not None:
         # compressed backend: account the transport's actual wire bytes

@@ -8,9 +8,13 @@ Execution goes through the unified round engine (:mod:`repro.exec`):
 ``--chunk N`` fuses N rounds per compiled call (one host sync per chunk),
 ``--participation f`` subsamples a fraction of clients each round,
 ``--transport {dense,topk,randk,quantize}`` (+ ``--compress-ratio``) runs the
-compressed-uplink backend, and batches come from a chunk-aware
+compressed-uplink backend, ``--async`` runs the simulated-asynchrony backend
+(``--clock {deterministic,lognormal,straggler}``, ``--buffer-size K``,
+``--staleness {uniform,poly}`` + ``--staleness-correct``; composes with
+``--transport``), and batches come from a chunk-aware
 :class:`repro.exec.ArraySupplier` over the token streams (``--device-cache``
-keeps them device-resident, skipping the host stack entirely).
+keeps them device-resident, ``--prefetch`` overlaps the next chunk's batch
+assembly with the current compiled call).
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
         --scale smoke --rounds 50 --tau 4 --clients 4 --ckpt out/ck.npz
@@ -104,7 +108,35 @@ def main(argv=None):
     ap.add_argument("--device-cache", action="store_true",
                     help="keep token streams device-resident (batches are "
                          "gathered on device, no host stack)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffer chunk supply: stage the next "
+                         "chunk's batches while the current chunk computes")
+    ap.add_argument("--async", dest="run_async", action="store_true",
+                    help="simulated-asynchrony backend: virtual-time "
+                         "client clocks + buffered stale-corrected "
+                         "aggregation (repro.sched)")
+    ap.add_argument("--clock", default=None,
+                    choices=["deterministic", "lognormal", "straggler"],
+                    help="async: virtual-time clock model "
+                         "(default: straggler)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="async: reports the server waits for per commit "
+                         "(default: all clients)")
+    ap.add_argument("--staleness", default=None,
+                    choices=["uniform", "poly"],
+                    help="async: stale-report weighting (default: uniform)")
+    ap.add_argument("--staleness-correct", action="store_true",
+                    help="async: retain downweighted stale mass in a "
+                         "server-side error-feedback residual")
     args = ap.parse_args(argv)
+    if not args.run_async and (args.clock is not None
+                               or args.buffer_size is not None
+                               or args.staleness is not None
+                               or args.staleness_correct):
+        # mirror EngineConfig.validate: silently dropping these would let a
+        # forgotten --async masquerade as an async run
+        ap.error("--clock/--buffer-size/--staleness[-correct] require "
+                 "--async")
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
             else registry.get(args.arch))
@@ -131,10 +163,21 @@ def main(argv=None):
         kw = ({"ratio": args.compress_ratio}
               if args.transport in ("topk", "randk") else {})
         transport = get_transport(args.transport, **kw)
+    clock = buffer_size = staleness = None
+    if args.run_async:
+        from repro.sched import Staleness, get_clock
+
+        backend = "async"  # composes with --transport
+        clock = get_clock(args.clock or "straggler")
+        buffer_size = args.buffer_size
+        staleness = Staleness(args.staleness or "uniform",
+                              correct=args.staleness_correct)
     engine = RoundEngine(
         alg, grad_fn, args.clients,
         EngineConfig(backend=backend, chunk_rounds=args.chunk,
-                     participation=args.participation, transport=transport))
+                     participation=args.participation, transport=transport,
+                     clock=clock, buffer_size=buffer_size,
+                     staleness=staleness))
     state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 
@@ -142,7 +185,8 @@ def main(argv=None):
     # gathered in one vectorized call (on device with --device-cache)
     sample_batches = ArraySupplier(
         {"tokens": streams.astype(np.int32)}, args.tau, args.batch,
-        seed=args.seed, device_cache=args.device_cache)
+        seed=args.seed, device_cache=args.device_cache,
+        prefetch=args.prefetch)
 
     t0 = time.time()
     last_loss = float("nan")
@@ -178,10 +222,15 @@ def main(argv=None):
 
     print(f"done: final loss {last_loss:.4f}, "
           f"global-model sparsity {float(sparsity(final)):.3f}")
+    if args.run_async and metrics.get("vtime"):
+        sm = metrics.get("staleness_mean", [0.0])
+        print(f"async: clock={args.clock} buffer={engine.buffer_size}/"
+              f"{args.clients}, virtual time {metrics['vtime'][-1]:.1f}, "
+              f"mean report age (last segment) {np.mean(sm):.2f} rounds")
     if engine.uplink_bytes_per_client_round is not None:
         dense = n_params * 4
         print(f"uplink: {engine.uplink_bytes_per_client_round/1e6:.2f} "
-              f"MB/client/round ({args.transport}; dense would be "
+              f"MB/client/round ({engine.transport.name}; dense would be "
               f"{dense/1e6:.2f} MB)")
     return state
 

@@ -1,0 +1,35 @@
+"""Simulated-asynchrony subsystem: virtual-time client clocks, a buffered
+staleness-aware server aggregator, and the staleness ledger.
+
+Clients in real federated deployments finish rounds at heterogeneous speeds
+and report *stale* innovations -- updates computed against a broadcast model
+the server has since moved past.  This package simulates that regime
+deterministically and scan-compatibly, so the async engine backend
+(``EngineConfig(backend="async", clock=..., buffer_size=..., staleness=...)``
+in :mod:`repro.exec`) composes with multi-round chunking, buffer donation
+and :mod:`repro.comm` uplink compression:
+
+  * :mod:`repro.sched.clock` -- ``ClockModel`` protocol + deterministic,
+    log-normal and straggler-mixture virtual-time round durations, all
+    PRNG-keyed and traceable;
+  * :mod:`repro.sched.aggregator` -- the FedBuff-style buffered commit step
+    (``buffer_size`` earliest reports per commit), staleness-weighted
+    mixing (``Staleness``), optional stale-innovation re-anchoring, and the
+    per-commit staleness ledger (virtual wall-clock, per-client
+    ``last_synced`` round, report-age histogram) emitted through the
+    engine's metrics path.
+
+Zero-delay contract: ``DeterministicClock()`` + ``buffer_size=n_clients``
+reproduces the synchronous engine trajectory bitwise
+(tests/test_sched.py).
+"""
+from repro.sched.aggregator import (AGE_HIST_BUCKETS, AsyncState, Staleness,
+                                    as_staleness, init_async_state,
+                                    make_async_round)
+from repro.sched.clock import (ClockModel, DeterministicClock, LogNormalClock,
+                               StragglerClock, get_clock)
+
+__all__ = ["ClockModel", "DeterministicClock", "LogNormalClock",
+           "StragglerClock", "get_clock", "Staleness", "as_staleness",
+           "AsyncState", "init_async_state", "make_async_round",
+           "AGE_HIST_BUCKETS"]

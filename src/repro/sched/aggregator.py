@@ -1,0 +1,349 @@
+"""Buffered, staleness-aware server aggregation over virtual-time clients.
+
+This module is the server side of the simulated-asynchrony subsystem: a
+FedBuff-style buffered aggregator (Nguyen et al., 2022) expressed as a pure
+``lax.scan``-compatible step over a **fixed-size in-flight report buffer**,
+so asynchronous execution composes with the engine's multi-round chunking,
+buffer donation and :mod:`repro.comm` uplink compression.
+
+Execution model (one scan step == one server *commit*):
+
+  1. **Refresh** -- every client flagged ``need_refresh`` (it delivered at
+     the previous commit and re-synced on the new broadcast) computes its
+     next report from the *current* global state via the algorithm's
+     ``local_fn``, pushes it through the uplink transport (advancing that
+     client's error-feedback state only -- the same guard as partial
+     participation), stamps it with the report-round tag the local halves
+     now emit (``aux["round"]``), and schedules its arrival at
+     ``vtime + ClockModel.durations(...)``.  Clients still "computing" keep
+     their pending report untouched -- that report stays anchored to the
+     round it was computed at, which is exactly what makes it *stale*.
+  2. **Commit** -- the server waits for the ``buffer_size`` earliest
+     arrivals (``lax.top_k`` on negated delivery times; ties break toward
+     lower client ids), advances the virtual wall-clock to the
+     ``buffer_size``-th arrival, and aggregates *only* the delivered
+     reports: staleness-weighted via message scaling (so any algorithm's
+     ``mean``-shaped server half becomes a weighted mean without knowing
+     about staleness), through the algorithm's ``active`` mask when its
+     server half supports one (DProx), or through weight-zeroing otherwise.
+  3. **Stale-innovation correction (optional)** -- staleness downweighting
+     alone *discards* update mass: a weight-``w`` report contributes only
+     ``w`` of its innovation and the rest is gone, so persistently slow
+     clients are persistently under-served (a bias under heterogeneous
+     data).  ``Staleness.correct=True`` reuses the error-feedback pattern
+     of :mod:`repro.comm` on the downweighting itself: per client the
+     server retains the un-applied fraction in a residual,
+
+         target_i = delta_i + e_i,   applied_i = w_i * target_i,
+         e_i'     = (1 - w_i) * target_i,
+
+     so the telescoping identity  ``sum(applied) = sum(produced) - e_T``
+     holds exactly (pinned in tests/test_sched.py) and the long-run
+     aggregate is undistorted -- stale mass is *deferred*, not dropped.
+     (With correction the weighted mix is deliberately unnormalized --
+     ``(1/K) sum w_i target_i`` -- because renormalizing would apply mass
+     the residual still accounts for; under uniform weights both forms are
+     exactly the plain buffered mean.)
+
+The per-commit staleness ledger (per-client ``last_synced`` round, report
+ages, age histogram, virtual wall-clock) is emitted through the engine's
+ordinary metrics path.
+
+Zero-delay contract (pinned in tests/test_sched.py): with a
+:class:`~repro.sched.clock.DeterministicClock` and
+``buffer_size == n_clients`` every step refreshes and delivers every
+client, ages are identically zero and the step reduces to
+``server_fn(state, local_fn(state, batch))`` -- bitwise the synchronous
+round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sched.clock import ClockModel
+
+AGE_HIST_BUCKETS = 8  # report-age histogram buckets (last bucket = overflow)
+
+STALENESS_WEIGHTINGS = ("uniform", "poly")
+
+
+@dataclass(frozen=True)
+class Staleness:
+    """Staleness handling policy for buffered aggregation.
+
+    weighting : "uniform" keeps every delivered report at weight 1 (plain
+                FedBuff mixing); "poly" downweights age-``a`` reports by
+                ``(1 + a) ** -alpha`` (Xie et al., 2019).  Without
+                correction, weights are normalized inside the aggregator,
+                so uniform weighting is *exactly* unweighted mixing
+                (scale 1.0, bitwise).
+    alpha     : the polynomial decay exponent.
+    correct   : error feedback on the downweighting -- the un-applied
+                ``(1 - w)`` fraction of each delivered report is retained
+                in a per-client server-side residual and added back at
+                that client's next delivery, preserving the telescoping
+                innovation identity (see module docstring).  A no-op under
+                uniform weights (w = 1 retains nothing).
+    """
+
+    weighting: str = "uniform"
+    alpha: float = 0.5
+    correct: bool = False
+
+    def validate(self) -> None:
+        if self.weighting not in STALENESS_WEIGHTINGS:
+            raise ValueError(
+                f"staleness weighting must be one of {STALENESS_WEIGHTINGS}, "
+                f"got {self.weighting!r}")
+        if self.alpha < 0:
+            raise ValueError(f"staleness alpha must be >= 0, got {self.alpha}")
+
+    def weights(self, age: jax.Array) -> jax.Array:
+        """Per-report mixing weight from the report age (rounds), in the
+        default float dtype (f64 under x64) so weighting and the
+        correction's residual split do not round below the message
+        precision."""
+        fdt = jnp.result_type(float)
+        if self.weighting == "uniform":
+            return jnp.ones(age.shape, fdt)
+        return (1.0 + age.astype(fdt)) ** jnp.asarray(-self.alpha, fdt)
+
+
+def as_staleness(policy) -> Staleness:
+    """Coerce None / "poly" / Staleness to a validated policy."""
+    if policy is None:
+        policy = Staleness()
+    elif isinstance(policy, str):
+        policy = Staleness(weighting=policy)
+    if not isinstance(policy, Staleness):
+        raise ValueError(
+            f"staleness must be None, a weighting name or a "
+            f"repro.sched.Staleness, got {type(policy).__name__}")
+    policy.validate()
+    return policy
+
+
+class AsyncState(NamedTuple):
+    """The in-flight report buffer + staleness ledger, carried through the
+    engine's ``lax.scan``.  One fixed slot per client (a client computes one
+    report at a time), so every leaf keeps a static shape and the carry
+    stays donation-friendly.
+
+    ``pending_msg``/``pending_aux`` hold each client's computed-but-not-yet-
+    delivered report (the birth round rides along in ``pending_aux["round"]``
+    -- the report-round tag the local halves emit).  ``resid`` holds the
+    per-client error-feedback residual of the stale-innovation correction
+    (msg-structured; ``()`` when correction is off).
+    """
+
+    pending_msg: Any
+    pending_aux: Any
+    resid: Any
+    deliver_time: jax.Array  # (n_clients,) f32 virtual arrival times
+    need_refresh: jax.Array  # (n_clients,) bool -- re-synced last commit
+    last_synced: jax.Array   # (n_clients,) i32 ledger (-1 = never)
+    vtime: jax.Array         # scalar f32 virtual wall-clock
+    round_idx: jax.Array     # scalar i32 server commit counter
+    clock_key: jax.Array     # PRNG key stream of the clock model
+
+
+def init_async_state(msg_spec, aux_spec, n_clients: int,
+                     clock_seed: int, start_round: int = 0,
+                     with_resid: bool = False) -> AsyncState:
+    """Zero-filled buffer with every client flagged for refresh, so the
+    first scan step overwrites every slot before anything is delivered.
+    ``start_round`` aligns the commit counter with the algorithm state's
+    round counter (report ages subtract the two), e.g. when resuming from
+    a checkpoint."""
+
+    def zeros(spec):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros(tuple(l.shape), l.dtype), spec)
+
+    for name, spec in (("msg", msg_spec), ("aux", aux_spec)):
+        for leaf in jax.tree_util.tree_leaves(spec):
+            if len(leaf.shape) < 1 or leaf.shape[0] != n_clients:
+                raise ValueError(
+                    f"async backend requires every {name} leaf to carry a "
+                    f"leading client axis of size {n_clients}; got shape "
+                    f"{tuple(leaf.shape)} (per-client reports cannot be "
+                    "buffered otherwise)")
+    return AsyncState(
+        pending_msg=zeros(msg_spec),
+        pending_aux=zeros(aux_spec),
+        resid=zeros(msg_spec) if with_resid else (),
+        deliver_time=jnp.zeros((n_clients,), jnp.float32),
+        need_refresh=jnp.ones((n_clients,), bool),
+        last_synced=jnp.full((n_clients,), -1, jnp.int32),
+        vtime=jnp.zeros((), jnp.float32),
+        round_idx=jnp.full((), start_round, jnp.int32),
+        clock_key=jax.random.PRNGKey(clock_seed),
+    )
+
+
+def _where_clients(mask, new, old):
+    """Per-client select across a pytree (leaves have leading client axis)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(
+            mask.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+        new, old)
+
+
+def _scale_msg(msg, scale):
+    return jax.tree_util.tree_map(
+        lambda m: m * scale.reshape((-1,) + (1,) * (m.ndim - 1)).astype(
+            m.dtype), msg)
+
+
+def make_async_round(
+    local_fn,
+    server_fn,
+    transport,
+    clock: ClockModel,
+    buffer_size: int,
+    n_clients: int,
+    staleness: Staleness,
+    accepts_active: bool = False,
+):
+    """Build the async round step the engine scans over.
+
+    Returns ``step(state, sched, comm_state, comm_key, batch) ->
+    (state, sched, comm_state, comm_key, info)``.
+    """
+    full_buffer = buffer_size == n_clients
+    # deterministic transports/clocks ignore their key: skip the per-round
+    # threefry splits (measurable on µs-scale rounds)
+    tr_stochastic = getattr(transport, "stochastic", True)
+    clk_stochastic = getattr(clock, "stochastic", True)
+
+    def step(state, sched: AsyncState, comm_state, comm_key, batch):
+        # --- 1. client refresh: everyone who re-synced at the last commit
+        # computes its next report from the current broadcast state.  (The
+        # simulation evaluates local_fn for all clients -- the vmap'd halves
+        # are all-client -- and keeps the stale pending slots of clients
+        # that are still "computing"; their fresh columns are discarded, a
+        # simulation-only overcompute that never affects the trajectory.)
+        refresh = sched.need_refresh
+        if tr_stochastic:
+            comm_key, sub = jax.random.split(comm_key)
+        else:
+            sub = comm_key
+        msg_new, aux_new = local_fn(state, batch)
+        msg_hat, cs_new = transport.compress(comm_state, msg_new, sub)
+        if clk_stochastic:
+            clock_key, ksub = jax.random.split(sched.clock_key)
+        else:
+            clock_key = ksub = sched.clock_key
+        dur = clock.durations(ksub, sched.round_idx, n_clients)
+        if full_buffer:
+            # every client delivered at the last commit, so every slot is
+            # refreshed: skip the per-client selects entirely.  This is not
+            # just an optimization -- routing the fresh reports through
+            # ``where`` perturbs XLA fusion of the server half by an ulp,
+            # and the zero-delay bitwise contract forbids that.
+            comm_state = cs_new
+            pending_msg, pending_aux = msg_hat, aux_new
+            deliver_time = sched.vtime + dur.astype(jnp.float32)
+        else:
+            # only refreshing clients actually compressed a report this
+            # step: everyone else's error-feedback residual must not
+            # advance (same telescoping guard as partial participation in
+            # the compressed backend)
+            comm_state = _where_clients(refresh, cs_new, comm_state)
+            pending_msg = _where_clients(refresh, msg_hat, sched.pending_msg)
+            pending_aux = _where_clients(refresh, aux_new, sched.pending_aux)
+            deliver_time = jnp.where(
+                refresh, sched.vtime + dur.astype(jnp.float32),
+                sched.deliver_time)
+
+        # --- 2. commit: the buffer_size earliest arrivals form the buffer.
+        if full_buffer:
+            commit_time = jnp.max(deliver_time)
+            delivered = jnp.ones((n_clients,), bool)
+        else:
+            neg_t, idx = jax.lax.top_k(-deliver_time, buffer_size)
+            commit_time = -neg_t[buffer_size - 1]
+            delivered = jnp.zeros((n_clients,), bool).at[idx].set(True)
+        birth = pending_aux["round"].astype(jnp.int32)
+        age = sched.round_idx - birth  # 0 for reports computed this step
+
+        resid = sched.resid
+        if full_buffer:
+            # every pending report delivers and every age is zero: the
+            # unscaled server half IS the synchronous round (bitwise; with
+            # correction on, w = 1 retains nothing and the residual stays
+            # zero, so it is skipped rather than added as an exact zero)
+            state, info = server_fn(state, pending_msg, pending_aux)
+        else:
+            w = jnp.where(delivered, staleness.weights(age), 0.0)
+            if staleness.correct:
+                # --- 3. error feedback on the downweighting: aggregate
+                # w * (delta + e), retain (1 - w) * (delta + e).  The mix
+                # is deliberately unnormalized (see module docstring);
+                # under uniform weights it equals the plain buffered mean.
+                target = jax.tree_util.tree_map(
+                    lambda m, e: m + e, pending_msg, resid)
+                resid = _where_clients(
+                    delivered, _scale_msg(target, 1.0 - w), resid)
+                msg_in, norm = target, jnp.float32(1.0)
+            else:
+                # normalized staleness-weighted mean (FedBuff-style):
+                # scale 1.0 exactly under uniform weights
+                msg_in = pending_msg
+                norm = buffer_size / jnp.maximum(jnp.sum(w), 1e-30)
+            if accepts_active:
+                # server's active-mean divides by the delivered count; the
+                # scale turns that into the staleness-weighted mean
+                scaled = _scale_msg(msg_in, w * norm)
+                state, info = server_fn(state, scaled, pending_aux,
+                                        active=delivered)
+            else:
+                # no active support: fold delivery AND weighting into the
+                # message scale, so the plain mean over all n clients is
+                # the weighted mean over delivered ones
+                scaled = _scale_msg(msg_in, w * norm * (n_clients
+                                                        / buffer_size))
+                state, info = server_fn(state, scaled, pending_aux)
+
+        # --- staleness ledger -> engine metrics
+        info = dict(info)
+        info["vtime"] = commit_time
+        if full_buffer:
+            # every report is fresh by construction: constant ledger (and
+            # no metric consumes the float path, preserving the bitwise
+            # contract)
+            info["staleness_mean"] = jnp.float32(0.0)
+            info["staleness_max"] = jnp.float32(0.0)
+            info["report_age_hist"] = jnp.zeros(
+                (AGE_HIST_BUCKETS,), jnp.float32).at[0].set(buffer_size)
+            last_synced = jnp.broadcast_to(sched.round_idx, (n_clients,))
+        else:
+            d_age = jnp.where(delivered, age, 0)
+            info["staleness_mean"] = (jnp.sum(d_age).astype(jnp.float32)
+                                      / buffer_size)
+            info["staleness_max"] = jnp.max(d_age).astype(jnp.float32)
+            info["report_age_hist"] = jnp.bincount(
+                jnp.clip(age, 0, AGE_HIST_BUCKETS - 1),
+                weights=delivered.astype(jnp.float32),
+                length=AGE_HIST_BUCKETS)
+            last_synced = jnp.where(delivered, sched.round_idx,
+                                    sched.last_synced)
+
+        sched = AsyncState(
+            pending_msg=pending_msg,
+            pending_aux=pending_aux,
+            resid=resid,
+            deliver_time=deliver_time,
+            need_refresh=delivered,  # delivered clients re-sync now
+            last_synced=last_synced,
+            vtime=commit_time,
+            round_idx=sched.round_idx + 1,
+            clock_key=clock_key,
+        )
+        return state, sched, comm_state, comm_key, info
+
+    return step

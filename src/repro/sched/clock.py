@@ -1,0 +1,136 @@
+"""Virtual-time client clock models for the simulated-asynchrony subsystem.
+
+A :class:`ClockModel` maps ``(key, round_idx, n_clients)`` to the virtual
+duration each client needs for the local round it starts now.  The async
+engine backend (:mod:`repro.exec`, ``backend="async"``) threads these
+durations through its ``lax.scan`` carry: a client that syncs at virtual
+time ``T`` delivers its report at ``T + duration``, and the server commits
+once ``buffer_size`` reports have arrived.  Durations therefore control
+*which* reports are stale and by how much, but never the round math itself.
+
+Scan-compatibility contract: ``durations`` must be traceable jax code --
+``key`` is a jax PRNG key, ``round_idx`` a traced int32 scalar, and
+``n_clients`` a static Python int.  Deterministic clocks ignore the key.
+
+Implemented models:
+
+  * :class:`DeterministicClock` -- every client takes the same fixed time
+    (or an explicit per-client vector).  ``DeterministicClock()`` is the
+    *zero-delay* reference: with a full buffer the async engine is bitwise
+    the synchronous engine (pinned in tests/test_sched.py).
+  * :class:`LogNormalClock` -- i.i.d. log-normal round durations per client
+    per round (the classic heavy-tailed device model).
+  * :class:`StragglerClock` -- straggler mixture: a fraction of clients is
+    slowed down by a constant factor (persistently, or re-drawn per round),
+    on top of multiplicative log-normal jitter.  This is the model the
+    staleness-vs-accuracy sweep (benchmarks/sched_sweep.py) uses.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ClockModel:
+    """Interface: per-client virtual round durations, PRNG-keyed.
+
+    ``stochastic = False`` marks clocks that ignore the key, letting the
+    engine skip the per-round key split."""
+
+    name: str = "base"
+    stochastic: bool = True
+
+    def durations(self, key, round_idx, n_clients: int) -> jax.Array:
+        """``(n_clients,)`` float32 vector of strictly positive durations."""
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class DeterministicClock(ClockModel):
+    """Fixed durations: one scalar for all clients, or a per-client vector.
+
+    With the default ``duration=1.0`` every client finishes at the same
+    virtual instant -- the zero-delay clock: combined with
+    ``buffer_size=n_clients`` the async backend reproduces the synchronous
+    trajectory bitwise.  A ``per_client`` tuple models permanently
+    heterogeneous device speeds without any randomness.
+    """
+
+    duration: float = 1.0
+    per_client: Optional[Tuple[float, ...]] = None
+    name: str = "deterministic"
+    stochastic: bool = False
+
+    def durations(self, key, round_idx, n_clients):
+        if self.per_client is not None:
+            d = jnp.asarray(self.per_client, jnp.float32)
+            if d.shape != (n_clients,):
+                raise ValueError(
+                    f"per_client durations have shape {d.shape}, expected "
+                    f"({n_clients},)")
+            return d
+        return jnp.full((n_clients,), self.duration, jnp.float32)
+
+
+@dataclass(frozen=True)
+class LogNormalClock(ClockModel):
+    """I.i.d. log-normal durations: ``median * exp(sigma * N(0,1))`` per
+    client per round.  ``sigma=0`` degenerates to the deterministic clock."""
+
+    median: float = 1.0
+    sigma: float = 0.5
+    name: str = "lognormal"
+
+    def durations(self, key, round_idx, n_clients):
+        z = jax.random.normal(key, (n_clients,), jnp.float32)
+        return self.median * jnp.exp(self.sigma * z)
+
+
+@dataclass(frozen=True)
+class StragglerClock(ClockModel):
+    """Straggler mixture on top of log-normal jitter.
+
+    ``persistent=True`` (default): the first ``ceil(straggler_frac *
+    n_clients)`` clients are always ``slowdown`` times slower -- the
+    "slow devices" regime where the same clients keep reporting stale.
+    ``persistent=False``: straggling is re-drawn per (client, round) with
+    probability ``straggler_frac`` -- the "transient contention" regime.
+    """
+
+    base: float = 1.0
+    straggler_frac: float = 0.25
+    slowdown: float = 4.0
+    jitter: float = 0.1
+    persistent: bool = True
+    name: str = "straggler"
+
+    def durations(self, key, round_idx, n_clients):
+        k_jit, k_mix = jax.random.split(key)
+        mult = jnp.exp(
+            self.jitter * jax.random.normal(k_jit, (n_clients,), jnp.float32))
+        if self.persistent:
+            n_slow = int(math.ceil(self.straggler_frac * n_clients))
+            slow = jnp.arange(n_clients) < n_slow
+        else:
+            slow = jax.random.bernoulli(k_mix, self.straggler_frac,
+                                        (n_clients,))
+        factor = jnp.where(slow, jnp.float32(self.slowdown), jnp.float32(1.0))
+        return self.base * factor * mult
+
+
+_CLOCKS = {"deterministic": DeterministicClock, "lognormal": LogNormalClock,
+           "straggler": StragglerClock}
+
+
+def get_clock(name: str, **kwargs) -> ClockModel:
+    """Build a clock by name ('deterministic', 'lognormal', 'straggler')."""
+    try:
+        cls = _CLOCKS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown clock {name!r}; available: {sorted(_CLOCKS)}")
+    return cls(**kwargs)

@@ -24,7 +24,8 @@ import numpy as np
 import pytest
 
 from _hypo import given, settings, st
-from repro.comm import (Dense, Quantize, RandK, TopK, get_transport,
+from repro.comm import (Dense, DownlinkCompressor, Quantize, RandK, TopK,
+                        broadcast_elements, get_transport,
                         message_elements_per_client, uplink_message_spec)
 from repro.core import algorithm as A
 from repro.core.baselines import FastFedDA, Scaffold
@@ -361,6 +362,108 @@ def test_inactive_clients_keep_error_feedback_residuals():
     state, _ = eng.step(state, sup.sample_round(1, None), active=active)
     np.testing.assert_array_equal(
         np.asarray(eng._comm_state["w"])[2:], frozen)
+
+
+# ---------------------------------------------------------------------------
+# downlink compression
+# ---------------------------------------------------------------------------
+
+
+def test_downlink_identity_tracks_state_bitwise():
+    """At ratio 1.0 the client-visible shadow equals the true server state
+    bitwise (the subtractive seen-update form guarantees it)."""
+    dl = DownlinkCompressor(TopK(ratio=1.0))
+    rng = np.random.default_rng(0)
+    fields = {"x_bar": {"w": jnp.asarray(rng.normal(size=7))}}
+    st = dl.init_state(fields)
+    key = jax.random.PRNGKey(0)
+    for s in range(4):
+        fields = {"x_bar": {"w": fields["x_bar"]["w"] + 0.1 * s - 0.05}}
+        key, sub = jax.random.split(key)
+        visible, st = dl.broadcast(st, fields, sub)
+        np.testing.assert_array_equal(np.asarray(visible["x_bar"]["w"]),
+                                      np.asarray(fields["x_bar"]["w"]))
+
+
+def test_downlink_shadow_residual_telescopes():
+    """seen accumulates exactly what was broadcast: the standing residual
+    x_true - seen IS the error-feedback state, so each innovation re-sends
+    everything previously dropped (no separate residual stream needed)."""
+    dl = DownlinkCompressor(TopK(ratio=0.4))
+    rng = np.random.default_rng(1)
+    fields = {"w": jnp.asarray(rng.normal(size=10))}
+    st = dl.init_state(fields)
+    key = jax.random.PRNGKey(1)
+    for s in range(6):
+        fields = {"w": fields["w"] + jnp.asarray(rng.normal(size=10)) * 0.3}
+        key, sub = jax.random.split(key)
+        visible, st = dl.broadcast(st, fields, sub)
+    # one dense broadcast closes the gap completely: the residual was the
+    # only thing outstanding
+    visible, _ = DownlinkCompressor(Dense()).broadcast(st, fields, key)
+    np.testing.assert_allclose(np.asarray(visible["w"]),
+                               np.asarray(fields["w"]), rtol=1e-12)
+
+
+def test_engine_downlink_ratio_one_matches_compressed():
+    data, reg, grad_fn, params0 = _problem(seed=3)
+    sup = ArraySupplier.from_dataset(data, 3, 8, seed=4)
+    alg = _dprox(reg)
+    s_c, m_c = _run(RoundEngine(alg, grad_fn, data.n_clients,
+                                EngineConfig(backend="compressed",
+                                             chunk_rounds=3)),
+                    params0, sup, 7)
+    s_d, m_d = _run(RoundEngine(alg, grad_fn, data.n_clients,
+                                EngineConfig(backend="compressed",
+                                             chunk_rounds=3,
+                                             downlink=Dense())),
+                    params0, sup, 7)
+    np.testing.assert_array_equal(np.asarray(s_c.x_bar["w"]),
+                                  np.asarray(s_d.x_bar["w"]))
+    np.testing.assert_array_equal(m_c["train_loss"], m_d["train_loss"])
+
+
+def test_engine_downlink_topk_trains_and_reports_bytes():
+    data, reg, grad_fn, params0 = _problem(seed=5)
+    sup = ArraySupplier.from_dataset(data, 3, 8, seed=6)
+    alg = _dprox(reg)
+    eng = RoundEngine(alg, grad_fn, data.n_clients,
+                      EngineConfig(backend="compressed", chunk_rounds=4,
+                                   transport=TopK(ratio=0.5),
+                                   downlink=TopK(ratio=0.5)))
+    state, metrics = _run(eng, params0, sup, 20)
+    losses = metrics["train_loss"]
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert bool(tu.tree_isfinite(state.x_bar))
+    # broadcast = x_bar (11 doubles): top-k half keeps 6 (value + idx)
+    assert eng.downlink_bytes_per_client_round == 6 * (8 + 4)
+    assert eng.uplink_bytes_per_client_round == 6 * (8 + 4)
+
+
+def test_downlink_trajectory_invariant_to_chunking():
+    data, reg, grad_fn, params0 = _problem(seed=6)
+    sup = ArraySupplier.from_dataset(data, 3, 8, seed=7)
+    alg = _dprox(reg)
+    states = []
+    for ch in (1, 4):
+        eng = RoundEngine(alg, grad_fn, data.n_clients,
+                          EngineConfig(backend="compressed", chunk_rounds=ch,
+                                       downlink=TopK(ratio=0.5)))
+        states.append(_run(eng, params0, sup, 6)[0])
+    np.testing.assert_array_equal(np.asarray(states[0].x_bar["w"]),
+                                  np.asarray(states[1].x_bar["w"]))
+
+
+def test_broadcast_elements_and_downlink_bytes():
+    fields = {"x_bar": {"w": jnp.zeros(10, jnp.float32),
+                        "b": jnp.zeros((), jnp.float32)}}
+    assert broadcast_elements(fields) == 11
+    assert DownlinkCompressor(Dense()).downlink_bytes(fields) == 11 * 4
+    with pytest.raises(ValueError, match="only honored"):
+        EngineConfig(backend="inline", downlink=Dense()).validate()
+    with pytest.raises(ValueError, match="only honored"):
+        EngineConfig(backend="async", downlink=Dense()).validate()
 
 
 def test_compressed_requires_split_and_jit():

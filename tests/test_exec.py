@@ -427,6 +427,43 @@ def test_array_supplier_device_cache_matches_host():
 
 @pytest.mark.parametrize("device_cache", [False, True],
                          ids=["host", "device"])
+def test_array_supplier_prefetch_matches_sync(device_cache):
+    """Double-buffered chunk supply returns the same batches as the
+    synchronous path, including across the remainder-chunk fallback and
+    out-of-order requests (which discard the primed future)."""
+    from repro.exec import ArraySupplier
+
+    data, _, _, _ = _problem(seed=13)
+    sync = ArraySupplier.from_dataset(data, 3, 4, seed=8,
+                                      device_cache=device_cache)
+    pre = ArraySupplier.from_dataset(data, 3, 4, seed=8,
+                                     device_cache=device_cache, prefetch=True)
+    # sequential chunks (primed), a remainder chunk, then a jump backwards
+    for start, n in [(0, 4), (4, 4), (8, 2), (3, 4)]:
+        a, b = sync.sample_chunk(start, n, None), pre.sample_chunk(start, n,
+                                                                   None)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_prefetch_engine_trajectory_identical():
+    from repro.exec import ArraySupplier
+
+    data, reg, grad_fn, params0 = _problem(seed=14)
+    alg = _dprox(reg)
+    states = []
+    for prefetch in (False, True):
+        sup = ArraySupplier.from_dataset(data, 3, 8, seed=9,
+                                         prefetch=prefetch)
+        states.append(_run_engine(
+            RoundEngine(alg, grad_fn, data.n_clients,
+                        EngineConfig(chunk_rounds=4)), params0, sup, 10)[0])
+    np.testing.assert_array_equal(np.asarray(states[0].x_bar["w"]),
+                                  np.asarray(states[1].x_bar["w"]))
+
+
+@pytest.mark.parametrize("device_cache", [False, True],
+                         ids=["host", "device"])
 def test_engine_trajectory_same_via_chunk_supplier(device_cache):
     """The engine's vectorized chunk path (sample_chunk, no host re-stack)
     computes the same trajectory as per-round supply of the same batches,
