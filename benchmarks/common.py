@@ -46,26 +46,29 @@ def logreg_problem(n_clients=30, m=100, d=20, alpha=50.0, beta=50.0, seed=0,
     return data, reg, grad_fn, full_g, params0, L
 
 
-def make_engine(algorithm, grad_fn, n_clients, *, backend="inline",
-                chunk_rounds=16, participation=None, jit=True,
-                transport=None, clock=None, buffer_size=None,
-                staleness=None):
-    """RoundEngine with benchmark defaults (chunked inline backend).
+def make_engine(algorithm, grad_fn, n_clients, *, chunk_rounds=16,
+                participation=None, jit=True, transport=None, downlink=None,
+                clock=None, buffer_size=None, staleness=None,
+                queue_depth=None, mesh=None, param_specs=None, plan="A"):
+    """RoundEngine with benchmark defaults (chunked, no stages).
 
     Benchmarks that drive the engine directly (exec_bench, sched_sweep)
     build it here; the fig* benchmarks go through
-    ``repro.fed.simulator.run``, which builds its own inline engine
-    internally.  ``transport`` (a repro.comm compressor) pairs with
-    backend="compressed" or "async"; ``clock``/``buffer_size``/``staleness``
-    (repro.sched) with backend="async"."""
+    ``repro.fed.simulator.run``, which builds its own bare engine
+    internally.  Stage fields activate their stage and compose freely:
+    ``transport``/``downlink`` (repro.comm) for the communication stages,
+    ``clock``/``buffer_size``/``staleness``/``queue_depth`` (repro.sched)
+    for asynchrony, ``mesh``/``param_specs``/``plan`` for placement."""
     from repro.exec import EngineConfig, RoundEngine
 
     return RoundEngine(
         algorithm, grad_fn, n_clients,
-        EngineConfig(backend=backend, chunk_rounds=chunk_rounds,
+        EngineConfig(chunk_rounds=chunk_rounds,
                      participation=participation, jit=jit,
-                     transport=transport, clock=clock,
-                     buffer_size=buffer_size, staleness=staleness))
+                     transport=transport, downlink=downlink, clock=clock,
+                     buffer_size=buffer_size, staleness=staleness,
+                     queue_depth=queue_depth, mesh=mesh,
+                     param_specs=param_specs, plan=plan))
 
 
 class Timer:

@@ -1,7 +1,7 @@
-"""Round-loop throughput: chunking, batch supply, compressed uplinks, and
-the async backend.
+"""Round-loop throughput: chunking, batch supply, and the engine stages
+(uplink compression, asynchrony, and their composition).
 
-Four experiments on the paper's sparse-logreg problem (tau=10):
+Experiments on the paper's sparse-logreg problem (tau=10):
 
   * ``exec/chunk<k>``      -- chunked engine vs the historical per-round
     loop.  chunk_rounds=1 IS the historical loop (one jitted call + one host
@@ -12,25 +12,32 @@ Four experiments on the paper's sparse-logreg problem (tau=10):
     historical batch assembly) vs the chunk-aware ArraySupplier (one
     vectorized gather per chunk, host- or device-resident) vs the
     double-buffered prefetch supplier (next chunk's gather overlaps the
-    current compiled call).  Sampling is live here: the supplier IS what's
-    being measured.
-  * ``exec/compressed_*``  -- backend="compressed" at ratio 1.0 (dense
+    current compiled call; the ``_donate`` variant stages device-resident
+    chunks the engine donates into the compiled call, so double-buffering
+    does not double peak batch memory -- inert on CPU, tracked for
+    accelerator backends).
+  * ``exec/compressed_*``  -- the UplinkComm stage at ratio 1.0 (dense
     transport: the overhead of the local/server split + identity compressor)
     and with top-k 10% (sparsified uplink; derived column = uplink
     bytes/client/round).
-  * ``exec/async_*``       -- backend="async" at equal work: zero-delay
-    deterministic clock + full buffer (trajectory-identical to inline, so
-    the ratio isolates the buffered-aggregation overhead: clock draws,
-    top-k selection, ledger) and a straggler clock with a half buffer
-    (derived column = mean report age).  The acceptance bar is chunked
-    async within 1.5x of synchronous round throughput.
+  * ``exec/async_*``       -- the Asynchrony stage at equal work: zero-delay
+    deterministic clock + full buffer (trajectory-identical to the bare
+    engine, so the ratio isolates the buffered-aggregation overhead: clock
+    draws, top-k selection, ledger), a straggler clock with a half buffer
+    (derived column = mean report age), and the stacked compositions the
+    backend enum used to forbid -- async + top-k uplink, and async +
+    uplink + downlink + a depth-2 report queue.  The acceptance bar is any
+    chunked async composition within 1.5x of synchronous round throughput.
 
 Emits CSV lines ``name,us_per_round,derived`` AND a machine-readable
 ``BENCH_exec.json`` (path override: REPRO_BENCH_JSON) so the perf
-trajectory is tracked across PRs.
+trajectory is tracked across PRs.  ``--dry`` runs every experiment for a
+few rounds and skips the JSON -- the CI smoke mode that makes
+stage-stacking perf regressions (recompiles, shape blowups) fail loudly.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
@@ -98,6 +105,11 @@ def bench_suppliers(alg, grad_fn, data, params0, rounds, tau) -> None:
             data, tau, batch, seed=3, device_cache=True)),
         ("supplier_chunk_prefetch", ArraySupplier.from_dataset(
             data, tau, batch, seed=3, prefetch=True)),
+        # device-staged + donated prefetch chunks: the engine donates the
+        # staged buffers into the compiled call (peak-batch-memory win on
+        # accelerators; donation is a no-op on CPU)
+        ("supplier_chunk_prefetch_donate", ArraySupplier.from_dataset(
+            data, tau, batch, seed=3, device_cache=True, prefetch=True)),
     ]
     base_us = None
     for name, sup in suppliers:
@@ -123,7 +135,7 @@ def bench_compressed(alg, grad_fn, data, params0, rounds, tau) -> None:
 
     for name, tr in [("compressed_dense", Dense()),
                      ("compressed_topk10", TopK(ratio=0.1))]:
-        engine = make_engine(alg, grad_fn, data.n_clients, backend="compressed",
+        engine = make_engine(alg, grad_fn, data.n_clients,
                              chunk_rounds=chunk, transport=tr)
         state = engine.init(params0)
         state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
@@ -136,8 +148,9 @@ def bench_compressed(alg, grad_fn, data, params0, rounds, tau) -> None:
 def bench_async(alg, grad_fn, data, params0, rounds, tau) -> None:
     import numpy as np
 
+    from repro.comm import TopK
     from repro.exec import ArraySupplier
-    from repro.sched import Staleness, StragglerClock
+    from repro.sched import DeterministicClock, Staleness, StragglerClock
 
     chunk = 32
     sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
@@ -146,31 +159,60 @@ def bench_async(alg, grad_fn, data, params0, rounds, tau) -> None:
     state, _ = inline.run(state, sup, chunk, seed=1)
     base_us = _time_run(inline, state, sup, rounds)
 
-    # equal work: zero-delay + full buffer is trajectory-identical to the
-    # inline run above, so the ratio is pure backend overhead
+    # the acceptance comparator for the composed row: a sync round with the
+    # SAME transport, timed here so both sides see the same machine state
+    sync_topk = make_engine(alg, grad_fn, data.n_clients, chunk_rounds=chunk,
+                            transport=TopK(ratio=0.1))
+    state = sync_topk.init(params0)
+    state, _ = sync_topk.run(state, sup, chunk, seed=1)
+    sync_topk_us = _time_run(sync_topk, state, sup, rounds)
+
+    # equal work first: zero-delay + full buffer is trajectory-identical to
+    # its sync counterpart (bare, or sync+topk for the composed row), so
+    # those ratios isolate pure stage(-stacking) overhead -- the 1.5x
+    # acceptance bar reads the composed zero-delay row.  The straggler rows
+    # then add the real asynchrony workload (buffered commits, staleness
+    # correction, the report queue) on top.
+    straggler = dict(clock=StragglerClock(slowdown=4.0),
+                     buffer_size=data.n_clients // 2,
+                     staleness=Staleness("poly", correct=True))
     cases = [
-        ("async_dense", dict()),
-        ("async_straggler_halfbuf",
-         dict(clock=StragglerClock(slowdown=4.0),
-              buffer_size=data.n_clients // 2,
-              staleness=Staleness("poly", correct=True))),
+        ("async_dense", dict(clock=DeterministicClock()), base_us, ""),
+        ("async_compressed_zerodelay",
+         dict(clock=DeterministicClock(), transport=TopK(ratio=0.1)),
+         sync_topk_us, "_vs_sync_topk10"),
+        ("async_straggler_halfbuf", dict(straggler), base_us, ""),
+        ("async_compressed_topk10",
+         dict(straggler, transport=TopK(ratio=0.1)), sync_topk_us,
+         "_vs_sync_topk10"),
+        ("async_topk10_downlink_queue2",
+         dict(straggler, transport=TopK(ratio=0.1),
+              downlink=TopK(ratio=0.1), queue_depth=2), sync_topk_us,
+         "_vs_sync_topk10"),
     ]
-    for name, kw in cases:
-        engine = make_engine(alg, grad_fn, data.n_clients, backend="async",
+    for name, kw, ref_us, ref_tag in cases:
+        engine = make_engine(alg, grad_fn, data.n_clients,
                              chunk_rounds=chunk, **kw)
         state = engine.init(params0)
         state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
         best = _time_run(engine, state, sup, rounds)
-        engine2 = make_engine(alg, grad_fn, data.n_clients, backend="async",
+        engine2 = make_engine(alg, grad_fn, data.n_clients,
                               chunk_rounds=chunk, **kw)
         st = engine2.init(params0)
         _, m = engine2.run(st, sup, chunk, seed=1)
         record(f"exec/{name}", best,
-               f"{base_us / best:.2f}x,"
+               f"{ref_us / best:.2f}x{ref_tag},"
                f"mean_age={np.mean(m.get('staleness_mean', [0.0])):.2f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="smoke mode: run every experiment for a few "
+                         "rounds and skip BENCH_exec.json (CI guard "
+                         "against stage-stacking regressions)")
+    args = ap.parse_args(argv)
+
     from repro.core.algorithm import DProxConfig
     from repro.fed.simulator import DProxAlgorithm
 
@@ -178,13 +220,16 @@ def main() -> None:
     tau, eta_g = 10, 3.0
     eta = (0.5 / L) / (eta_g * tau)
     alg = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
-    rounds = 128 if QUICK else 512
+    rounds = 32 if args.dry else (128 if QUICK else 512)
 
     bench_chunking(alg, grad_fn, data, params0, rounds, tau)
     bench_suppliers(alg, grad_fn, data, params0, rounds, tau)
     bench_compressed(alg, grad_fn, data, params0, rounds, tau)
     bench_async(alg, grad_fn, data, params0, rounds, tau)
 
+    if args.dry:
+        print("dry run: BENCH_exec.json not written", flush=True)
+        return
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_exec.json")
     with open(out, "w") as f:
         json.dump({"bench": "exec", "quick": QUICK, "rounds": rounds,

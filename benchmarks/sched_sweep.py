@@ -52,7 +52,7 @@ def main() -> None:
         ]
 
     for policy, clock, buf, stale in cases:
-        engine = make_engine(alg, grad_fn, n, backend="async",
+        engine = make_engine(alg, grad_fn, n,
                              chunk_rounds=25, clock=clock, buffer_size=buf,
                              staleness=stale)
         state = engine.init(params0)

@@ -7,11 +7,13 @@ converges to machine precision while FedDA stalls at a drift floor.
 Execution goes through the unified round engine (repro.exec): the simulator
 fuses ``chunk_rounds`` rounds per compiled call (lax.scan over pre-sampled
 batches), so the 4000-round trajectories below pay one host sync per 16
-rounds instead of one per round.  Swap ``EngineConfig(backend=...)`` for
-"sharded" (mesh-placed), "protocol" (literal per-client message passing),
-"compressed" (repro.comm uplink/downlink compression) or "async"
-(simulated heterogeneous client speeds, repro.sched) -- the last two are
-demonstrated below.
+rounds instead of one per round.  Execution concerns are composable
+*stages* that activate through their ``EngineConfig`` fields and stack
+freely: ``mesh=`` (device-mesh placement), ``transport=`` (repro.comm
+uplink compression), ``downlink=`` (broadcast compression) and
+``clock=``/``buffer_size=``/``staleness=``/``queue_depth=`` (simulated
+heterogeneous client speeds, repro.sched).  The compression and asynchrony
+stages -- separately, then stacked -- are demonstrated below.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -52,8 +54,7 @@ R = 4000
 ours = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
 fedda = FedDA(reg, tau, eta, eta_g)
 for alg in (ours, fedda):
-    engine = RoundEngine(alg, grad_fn, 30,
-                         EngineConfig(backend="inline", chunk_rounds=16))
+    engine = RoundEngine(alg, grad_fn, 30, EngineConfig(chunk_rounds=16))
     h = run(alg, params0, grad_fn, supplier, 30, R,
             reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
             eval_every=R // 8, engine=engine)
@@ -63,17 +64,17 @@ for alg in (ours, fedda):
     print("   ", " ".join(f"{v:.1e}" for v in h.optimality), tail)
 
 # --- compressed uplinks: the same run with top-k 25% sparsified messages.
-# backend="compressed" splits each round into the algorithm's local/server
-# halves and pushes the uplink innovation pytree through a repro.comm
-# transport; error feedback keeps the long-run average uplink undistorted,
-# so the trajectory still reaches machine precision at ~43% of the dense
-# wire bytes.  At ratio=1.0 this is bit-identical to the inline run
-# (tests/test_comm.py pins it); very aggressive ratios (e.g. 0.1 on this
-# d=20 problem) trade a residual floor for more savings.
+# Setting transport= activates the UplinkComm stage: each round splits into
+# the algorithm's local/server halves and the uplink innovation pytree goes
+# through a repro.comm transport; error feedback keeps the long-run average
+# uplink undistorted, so the trajectory still reaches machine precision at
+# ~43% of the dense wire bytes.  At ratio=1.0 this is bit-identical to the
+# bare run (tests/test_comm.py pins it); very aggressive ratios (e.g. 0.1
+# on this d=20 problem) trade a residual floor for more savings.
 from repro.comm import TopK
 
 engine = RoundEngine(ours, grad_fn, 30,
-                     EngineConfig(backend="compressed", chunk_rounds=16,
+                     EngineConfig(chunk_rounds=16,
                                   transport=TopK(ratio=0.25)))
 h = run(ours, params0, grad_fn, supplier, 30, R,
         reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
@@ -85,19 +86,19 @@ print("   ", " ".join(f"{v:.1e}" for v in h.optimality),
       " <- error feedback: still machine precision")
 
 # --- asynchronous clients: the same run under a straggler-mixture clock.
-# backend="async" simulates heterogeneous device speeds (repro.sched): a
-# quarter of the clients are 4x slower, the server commits as soon as
-# buffer_size=15 of 30 reports arrive (FedBuff-style) instead of waiting
-# for stragglers, stale reports are age-downweighted, and the downweighted
-# mass is retained in a server-side error-feedback residual
+# Setting clock= (or any asynchrony knob) activates the Asynchrony stage
+# (repro.sched): a quarter of the clients are 4x slower, the server commits
+# as soon as buffer_size=15 of 30 reports arrive (FedBuff-style) instead of
+# waiting for stragglers, stale reports are age-downweighted, and the
+# downweighted mass is retained in a server-side error-feedback residual
 # (Staleness(correct=True)) so it is deferred, not dropped.  The engine's
 # metrics carry the staleness ledger: virtual wall-clock + report ages.
-# With a zero-delay DeterministicClock() and buffer_size=30 this backend
+# With a zero-delay DeterministicClock() and buffer_size=30 this stage
 # is bitwise the synchronous run above (tests/test_sched.py pins it).
 from repro.sched import Staleness, StragglerClock
 
 engine = RoundEngine(ours, grad_fn, 30,
-                     EngineConfig(backend="async", chunk_rounds=16,
+                     EngineConfig(chunk_rounds=16,
                                   clock=StragglerClock(slowdown=4.0),
                                   buffer_size=15,
                                   staleness=Staleness("poly", correct=True)))
@@ -113,3 +114,26 @@ print(f"    virtual time {m['vtime'][-1]:.0f} (sync would wait "
       f"~{1000 * 4:.0f}), mean report age "
       f"{np.mean(m['staleness_mean']):.2f} rounds "
       "<- commits without waiting for stragglers")
+
+# --- stages compose: the SAME run with compressed uplinks AND broadcast
+# AND asynchronous clients AND a depth-2 report queue (clients race ahead
+# of their uploads), all in one compiled scan -- the configurations the
+# retired backend enum made mutually exclusive.
+engine = RoundEngine(ours, grad_fn, 30,
+                     EngineConfig(chunk_rounds=16,
+                                  transport=TopK(ratio=0.25),
+                                  downlink=TopK(ratio=0.25),
+                                  clock=StragglerClock(slowdown=4.0),
+                                  buffer_size=15,
+                                  staleness=Staleness("poly", correct=True),
+                                  queue_depth=2))
+state = engine.init(params0)
+state, m = engine.run(state, supplier, 1000, seed=0)
+opt = float(prox_gradient_norm(reg, full_g, engine.global_params(state),
+                               eta_tilde))
+print(f" dprox async + top-k 25% uplink + downlink + queue 2 "
+      f"(stages: {', '.join(engine.stack.names())}):")
+print(f"    prox-gradient norm {opt:.1e}, "
+      f"uplink {engine.uplink_bytes_per_client_round} B/client/round, "
+      f"downlink {engine.downlink_bytes_per_client_round} B/client/round, "
+      f"mean report age {np.mean(m['staleness_mean']):.2f} rounds")

@@ -11,7 +11,8 @@ that exchange a first-class, swappable layer:
     :mod:`repro.core.algorithm` / :mod:`repro.core.baselines`;
   * :mod:`repro.comm.transport` provides compressors (dense, top-k, rand-k,
     quantize) with error-feedback state that the engine threads through its
-    ``lax.scan`` chunk loop under ``EngineConfig(backend="compressed")``;
+    ``lax.scan`` chunk loop under the UplinkComm stage
+    (``EngineConfig(transport=...)``);
   * :func:`uplink_message_spec` recovers the exact wire shape of any
     algorithm's uplink via ``jax.eval_shape`` for byte accounting;
   * :class:`DownlinkCompressor` compresses the *broadcast* direction: the

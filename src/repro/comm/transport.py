@@ -7,8 +7,9 @@ its per-round uplink message (the pytree produced by an algorithm's
 coarsening their coordinates degrades gracefully instead of truncating the
 model itself.  The round math never sees the transport: the engine
 compresses the message between the local-compute half and the
-server-aggregate half of a round
-(``EngineConfig(backend="compressed", transport=...)``).
+server-aggregate half of a round whenever the UplinkComm stage is active
+(``EngineConfig(transport=...)``; it composes with the placement and
+asynchrony stages).
 
 Implemented transports:
 

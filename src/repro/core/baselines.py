@@ -67,7 +67,7 @@ class FedAlgorithm:
 
     ``msg`` leaves carry a leading client axis and are the ONLY tensors that
     cross the network -- a :mod:`repro.comm` transport may compress them
-    between the halves (``EngineConfig(backend="compressed")``).  Messages
+    between the halves (``EngineConfig(transport=...)``).  Messages
     are *innovation-encoded*: each client uplinks its delta relative to the
     broadcast reference (``z_tau - x`` etc.), which is what makes
     sparsification/quantization meaningful and is how every server update

@@ -1,58 +1,69 @@
-"""Unified round-execution engine with pluggable communication + asynchrony.
+"""Unified round-execution engine with composable execution stages.
 
 One engine runs every federated algorithm in the repo (Algorithm 1 and all
-:mod:`repro.core.baselines`) on every execution substrate:
+:mod:`repro.core.baselines`).  Execution concerns are orthogonal **stages**
+(:mod:`repro.exec.stages`) that activate independently through their
+:class:`EngineConfig` fields and compose freely -- any subset runs in one
+compiled ``lax.scan``:
 
-  ============ ========================================================
-  backend      execution substrate
-  ============ ========================================================
-  inline       single-device ``jax.jit`` (replaces the hand-rolled loop
-               of the old ``fed.simulator.run``)
-  sharded      mesh-placed with explicit state/batch shardings and
-               donated buffers; any algorithm that declares per-field
-               placement via ``FedAlgorithm.state_roles`` (all seven do)
-  compressed   the algorithm's local/server halves with a
-               :mod:`repro.comm` transport (dense/top-k/rand-k/quantize;
-               error feedback) on the uplink message pytree, and
-               optionally a ``DownlinkCompressor`` on the broadcast;
-               compressor state + PRNG key thread through the scan carry
-  async        simulated asynchrony (:mod:`repro.sched`): a virtual-time
-               clock model staggers client report arrivals, the server
-               commits per ``buffer_size`` arrivals (FedBuff-style) with
-               staleness-weighted / re-anchored mixing, and the
-               in-flight report buffer + staleness ledger ride in the
-               scan carry; composes with ``transport=``
-  protocol     the literal per-client message-passing form of
-               Algorithm 1, kept for equivalence testing
-  ============ ========================================================
+  ============ ================ ========================================
+  stage        activated by     what it adds
+  ============ ================ ========================================
+  Placement    ``mesh=``        mesh shardings for state, batches and
+                                the other stages' carry slices (plans
+                                A/B), for any algorithm that declares
+                                ``state_roles``
+  UplinkComm   ``transport=``   a :mod:`repro.comm` compressor on the
+                                uplink message pytree (dense/top-k/
+                                rand-k/quantize; error feedback rides
+                                in the scan carry)
+  DownlinkComm ``downlink=``    a ``DownlinkCompressor`` on the
+                                broadcast (shadow-state error feedback)
+  Asynchrony   ``clock=``,      simulated asynchrony (:mod:`repro.sched`):
+               ``buffer_size=``,virtual-time clocks, FedBuff-style
+               ``staleness=``,  buffered commits, staleness weighting +
+               ``queue_depth=`` ledger, and an optional per-client
+                                report queue (clients race ahead of
+                                delivery)
+  ============ ================ ========================================
 
-Parity contracts: chunked == unchunked and inline == sharded == protocol
-(tests/test_exec.py), compressed at ratio 1.0 == inline bitwise
-(tests/test_comm.py), async under a zero-delay clock + full buffer ==
-inline bitwise (tests/test_sched.py).
+``backend=`` ("inline" / "sharded" / "protocol" / "compressed" / "async")
+is kept as a deprecated alias that maps onto the equivalent stage
+combination; ``protocol=True`` is the one non-composable mode (the literal
+per-client message-passing form of Algorithm 1, for equivalence testing).
 
-On top of the backend, the engine owns device-resident *multi-round
+Parity contracts: every single-stage configuration is bitwise its legacy
+backend (tests/test_stages.py); chunked == unchunked and bare == placed ==
+protocol (tests/test_exec.py); uplink compression at ratio 1.0 == bare
+bitwise (tests/test_comm.py); asynchrony under a zero-delay clock + full
+buffer == bare bitwise, and stays bitwise with a ratio-1.0 transport
+stacked on top (tests/test_sched.py, tests/test_stages.py).
+
+On top of the stage stack, the engine owns device-resident *multi-round
 chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with
 pre-sampled batches, metrics accumulated on device and fetched once per
 chunk -- so Python dispatch and the device->host sync are paid once per
 chunk instead of once per round.  Batches come from *chunk-aware suppliers*
 (:mod:`repro.exec.suppliers`): a supplier can produce a whole chunk in one
-vectorized call (optionally gathering from a device-resident cache),
-replacing the historical host-side per-round ``np.stack``; plain
-``supplier(round_idx, rng)`` callables keep working.  Client subsampling
-(partial participation) is a first-class engine option
-(``EngineConfig.participation``).
+vectorized call (optionally gathering from a device-resident cache, and
+optionally double-buffered on a staging thread whose chunks the engine
+donates into the compiled call); plain ``supplier(round_idx, rng)``
+callables keep working.  Client subsampling (partial participation) is a
+first-class engine option (``EngineConfig.participation``).
 
     from repro.comm import TopK
     from repro.exec import ArraySupplier, EngineConfig, RoundEngine
     from repro.sched import Staleness, StragglerClock
 
+    # mesh-placed + compressed-uplink + asynchronous, all at once:
     eng = RoundEngine(alg, grad_fn, n_clients,
-                      EngineConfig(backend="async", chunk_rounds=16,
+                      EngineConfig(chunk_rounds=16,
+                                   mesh=mesh, param_specs=pspecs,
+                                   transport=TopK(ratio=0.1),
                                    clock=StragglerClock(slowdown=4.0),
                                    buffer_size=n_clients // 2,
                                    staleness=Staleness("poly", correct=True),
-                                   transport=TopK(ratio=0.1)))
+                                   queue_depth=2))
     state = eng.init(params0)
     supplier = ArraySupplier.from_dataset(data, tau, batch, device_cache=True,
                                           prefetch=True)
@@ -63,9 +74,13 @@ replacing the historical host-side per-round ``np.stack``; plain
 from repro.exec.engine import (EngineConfig, RoundEngine,
                                rounds_to_boundary, sample_active_masks,
                                server_state_fields)
+from repro.exec.stages import (Asynchrony, DownlinkComm, Placement,
+                               StageStack, UplinkComm)
 from repro.exec.suppliers import (ArraySupplier, BatchSupplier,
                                   CallableSupplier, as_supplier)
 
 __all__ = ["EngineConfig", "RoundEngine", "rounds_to_boundary",
            "sample_active_masks", "server_state_fields", "ArraySupplier",
-           "BatchSupplier", "CallableSupplier", "as_supplier"]
+           "BatchSupplier", "CallableSupplier", "as_supplier",
+           "StageStack", "Placement", "UplinkComm", "DownlinkComm",
+           "Asynchrony"]

@@ -6,52 +6,68 @@ Execution model
 ``RoundEngine`` wraps any :class:`repro.core.baselines.FedAlgorithm`.  The
 algorithm contributes the *math* of one round (the local-compute /
 server-aggregate halves, or the fused ``make_round_fn``); the engine
-contributes the *execution*:
+contributes the *execution* as a stack of orthogonal **stages**
+(:mod:`repro.exec.stages`), each of which wraps the round function and
+contributes its slice of the ``lax.scan`` carry:
+
+  * **Placement** (``EngineConfig(mesh=...)``) -- installs the mesh
+    shardings of :mod:`repro.launch.sharding` on state, batches AND the
+    other stages' carry slices (plan A/B), for any algorithm that declares
+    ``state_roles`` (all seven in the repo do).  The compressor
+    error-feedback residuals and the in-flight report buffer are
+    client-axis pytrees, so the client placement rules place them too;
+  * **UplinkComm** (``transport=``) -- splits each round into the
+    algorithm's local/server halves and pushes the uplink message pytree
+    through a :mod:`repro.comm` transport, threading the compressor's
+    error-feedback state and PRNG key through the scan carry;
+  * **DownlinkComm** (``downlink=``) -- a
+    :class:`repro.comm.DownlinkCompressor` on the broadcast direction:
+    clients compute against the compressed ``seen`` shadow state, whose
+    error feedback is the standing ``x - seen`` residual;
+  * **Asynchrony** (``clock=`` / ``buffer_size=`` / ``staleness=`` /
+    ``queue_depth=``) -- simulated heterogeneous client speeds
+    (:mod:`repro.sched`): a virtual-time clock schedules report arrivals,
+    the server commits once ``buffer_size`` reports arrive
+    (FedBuff-style), stale reports are staleness-weighted (optionally with
+    an error-feedback residual that defers rather than drops the
+    downweighted mass), and the in-flight report buffer -- one slot per
+    client, or a ``queue_depth``-deep per-client queue that lets clients
+    race ahead of delivery -- rides in the scan carry.
+
+Stages are **orthogonal**: any subset composes (mesh-placed async rounds
+with compressed uplinks and downlinks run in one compiled scan).  Setting a
+stage's field activates it; ``backend=`` is kept as a deprecated alias that
+maps onto the equivalent stage combination (``"sharded"`` -> Placement,
+``"compressed"`` -> UplinkComm, ``"async"`` -> Asynchrony, ``"inline"`` ->
+the empty stack, ``"protocol"`` -> the non-composable literal per-client
+message-passing mode kept for equivalence testing).
+
+On top of the stage stack the engine owns:
 
   * **chunking** -- ``chunk_rounds`` rounds are fused into one compiled call
-    via ``lax.scan`` over pre-sampled batches (leaves gain a leading
-    chunk axis).  Metrics come back as ``(chunk,)`` device arrays and are
-    fetched with a single ``device_get``, so the host round-trip that
-    dominated the old per-round loops is paid once per chunk;
+    via ``lax.scan`` over pre-sampled batches; metrics come back as
+    ``(chunk,)`` device arrays fetched with a single ``device_get``;
   * **batch supply** -- chunk-aware suppliers (:mod:`repro.exec.suppliers`)
-    hand the engine a whole chunk of batches in one vectorized call (host or
-    device resident), replacing the per-round ``np.stack`` assembly; plain
+    hand the engine a whole chunk of batches in one vectorized call; plain
     ``supplier(round_idx, rng)`` callables keep working;
-  * **donation** -- the (potentially n_clients x d sized) federated state is
-    donated into the compiled call on accelerator backends, so x_bar/c update
-    in place instead of doubling peak memory;
-  * **placement** -- the ``sharded`` backend installs the mesh shardings of
-    :mod:`repro.launch.sharding` on state and batches (plan A/B) for ANY
-    algorithm that declares ``state_roles`` (all seven in the repo do);
-  * **communication** -- the ``compressed`` backend splits each round into
-    the algorithm's local/server halves and pushes the uplink message pytree
-    through a :mod:`repro.comm` transport, threading the compressor's
-    error-feedback state and PRNG key through the ``lax.scan`` carry; an
-    optional :class:`repro.comm.DownlinkCompressor` additionally compresses
-    the broadcast direction (clients compute against the compressed
-    ``seen`` server state, the server stays authoritative);
-  * **asynchrony** -- the ``async`` backend simulates heterogeneous client
-    speeds (:mod:`repro.sched`): a virtual-time clock model schedules each
-    client's report arrival, the server commits once ``buffer_size``
-    reports have arrived (FedBuff-style), stale reports are
-    staleness-weighted (optionally with an error-feedback residual that
-    defers rather than drops the downweighted mass), and the in-flight
-    report buffer rides in the scan carry as a fixed-size pytree -- so
-    async composes with chunking, donation and uplink compression;
-  * **participation** -- optional client subsampling: the engine samples an
-    ``(chunk, n_clients)`` participation mask per chunk and threads it into
-    round functions that accept an ``active`` argument (Algorithm 1's
-    compact form does; see ``core.algorithm.make_round_fn``).
+  * **donation** -- the (potentially n_clients x d sized) carry is donated
+    into the compiled call on accelerator backends; staged prefetch chunks
+    (``ArraySupplier(prefetch=True)``) are additionally donated as batch
+    inputs so double-buffering does not double peak batch memory;
+  * **participation** -- optional client subsampling via an ``active``
+    mask threaded into round functions that accept one.
 
-Backends never change the math: ``tests/test_exec.py`` pins trajectory
-parity between inline/sharded/protocol and chunked/unchunked execution,
-``tests/test_comm.py`` pins ``compressed`` at compression ratio 1.0 against
-``inline``, and ``tests/test_sched.py`` pins ``async`` under a zero-delay
-clock and full buffer bitwise against ``inline``.
+Stages never change the math: every single-stage configuration is pinned
+bitwise against its legacy ``backend=`` counterpart in
+tests/test_stages.py, chunked == unchunked in tests/test_exec.py,
+uplink compression at ratio 1.0 == the bare engine in tests/test_comm.py,
+and asynchrony under a zero-delay clock + full buffer == the bare engine
+bitwise in tests/test_sched.py.
 """
 from __future__ import annotations
 
 import inspect
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
@@ -59,8 +75,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import Dense
 from repro.core.baselines import FedAlgorithm
+from repro.exec.stages import (Asynchrony, DownlinkComm, Placement,
+                               StageStack, UplinkComm)
 from repro.exec.suppliers import BatchSupplier, as_supplier
 
 Batch = Any
@@ -81,49 +98,65 @@ def server_state_fields(algorithm, state) -> dict:
 class EngineConfig:
     """Execution options -- orthogonal to the algorithm being run.
 
-    backend        : "inline" (single-device jit), "sharded" (mesh-placed,
-                     any algorithm with ``state_roles``), "protocol" (literal
-                     per-client message passing; equivalence testing),
-                     "compressed" (local/server split with a
-                     :mod:`repro.comm` transport on the uplink) or "async"
-                     (simulated asynchrony via :mod:`repro.sched`).
+    Stages activate independently by setting their fields; any subset
+    composes (see the module docstring).
+
     chunk_rounds   : rounds fused per compiled call (lax.scan).  1 reproduces
                      the historical round-at-a-time loops exactly.
     jit            : disable to run the round function eagerly (debugging);
-                     forces chunk_rounds=1.
-    donate_state   : donate the federated state into the compiled call.
-                     Ignored on CPU, where XLA does not implement donation.
+                     forces chunk_rounds=1 and composes with no stages.
+    donate_state   : donate the carry into the compiled call.  Ignored on
+                     CPU, where XLA does not implement donation.
     participation  : if set, the fraction of clients active each round
                      (uniform sampling without replacement, >= 1 client).
-                     Requires a round function with an ``active`` argument.
-    mesh/param_specs/plan : sharded backend only -- the device mesh, the
-                     logical-axis spec tree of the parameters, and the
-                     federated placement plan ("A", "A_dp" or "B").
-    transport      : compressed/async backends only -- the uplink
-                     compressor (defaults to :class:`repro.comm.Dense`).
+                     Requires a round function with an ``active`` argument;
+                     does not compose with Asynchrony (buffered aggregation
+                     subsumes it -- set buffer_size < n_clients).
+
+    Placement stage (active when ``mesh`` is set):
+    mesh/param_specs/plan : the device mesh, the logical-axis spec tree of
+                     the parameters, and the federated placement plan
+                     ("A", "A_dp" or "B").
+
+    UplinkComm stage (active when ``transport`` is set, or implicitly under
+    any other communication-shaped stage, defaulting to Dense):
+    transport      : the uplink compressor (:mod:`repro.comm`).
     comm_seed      : seed of the compressor's PRNG key stream (rand-k /
                      stochastic quantization draws).
-    downlink       : compressed backend only -- a
-                     :class:`repro.comm.DownlinkCompressor` (or a plain
+
+    DownlinkComm stage (active when ``downlink`` is set):
+    downlink       : a :class:`repro.comm.DownlinkCompressor` (or a plain
                      Transport, which gets wrapped) compressing the
                      broadcast server-state innovation with its own
                      error-feedback stream.
-    clock          : async backend only -- a :mod:`repro.sched` ClockModel
-                     (or its registry name), the virtual-time per-client
-                     round durations.  Defaults to the zero-delay
-                     DeterministicClock.
-    buffer_size    : async backend only -- reports the server waits for
-                     before committing an update (FedBuff's K).  Defaults
-                     to n_clients (every pending report, zero-staleness
-                     with a deterministic clock).
-    staleness      : async backend only -- a :class:`repro.sched.Staleness`
-                     policy (or a weighting name: "uniform", "poly")
-                     controlling stale-report downweighting and the
-                     optional error-feedback correction.
+
+    Asynchrony stage (active when any of its fields is set):
+    clock          : a :mod:`repro.sched` ClockModel (or its registry
+                     name), the virtual-time per-client round durations.
+                     Defaults to the zero-delay DeterministicClock.
+    buffer_size    : reports the server waits for before committing an
+                     update (FedBuff's K).  Defaults to n_clients.
+    staleness      : a :class:`repro.sched.Staleness` policy (or a
+                     weighting name: "uniform", "poly") controlling
+                     stale-report downweighting and the optional
+                     error-feedback correction.
+    queue_depth    : if set, the depth of the per-client in-flight report
+                     queue (clients race ahead of delivery, uploads
+                     serialize FIFO); ``None`` keeps the historical
+                     one-slot buffer; ``1`` is its queue-form equivalent.
     clock_seed     : seed of the clock model's PRNG key stream.
+
+    protocol       : the literal per-client message-passing form of
+                     Algorithm 1 (equivalence testing); composes with no
+                     stages.
+
+    backend        : DEPRECATED alias for the stage combinations above
+                     ("inline", "sharded", "protocol", "compressed",
+                     "async"); emits a DeprecationWarning and maps onto
+                     the equivalent stage fields.
     """
 
-    backend: str = "inline"
+    backend: Optional[str] = None
     chunk_rounds: int = 1
     jit: bool = True
     donate_state: bool = True
@@ -137,75 +170,107 @@ class EngineConfig:
     clock: Any = None
     buffer_size: Optional[int] = None
     staleness: Any = None
+    queue_depth: Optional[int] = None
     clock_seed: int = 0
+    protocol: bool = False
 
-    def validate(self) -> None:
-        if self.backend not in BACKENDS:
-            raise ValueError(f"backend must be one of {BACKENDS}, got "
-                             f"{self.backend!r}")
+    def resolve(self) -> StageStack:
+        """Validate and map this config onto its :class:`StageStack`."""
+        if self.backend is not None:
+            if self.backend not in BACKENDS:
+                raise ValueError(f"backend must be one of {BACKENDS}, got "
+                                 f"{self.backend!r}")
+            warnings.warn(
+                "EngineConfig(backend=...) is deprecated: stages compose "
+                "freely now -- activate them directly via mesh= (Placement), "
+                "transport= (UplinkComm), downlink= (DownlinkComm) and "
+                "clock=/buffer_size=/staleness=/queue_depth= (Asynchrony), "
+                f"or protocol=True; backend={self.backend!r} maps onto the "
+                "equivalent stage combination", DeprecationWarning,
+                stacklevel=3)
         if self.chunk_rounds < 1:
             raise ValueError(f"chunk_rounds must be >= 1, got "
                              f"{self.chunk_rounds}")
         if self.plan not in PLANS:
             raise ValueError(f"plan must be one of {PLANS}, got "
                              f"{self.plan!r}")
-        if self.participation is not None and not (0.0 < self.participation <= 1.0):
+        if self.participation is not None and not (0.0 < self.participation
+                                                   <= 1.0):
             raise ValueError(f"participation must be in (0, 1], got "
                              f"{self.participation}")
+
+        async_on = (self.backend == "async" or self.clock is not None
+                    or self.buffer_size is not None
+                    or self.staleness is not None
+                    or self.queue_depth is not None)
+        downlink_on = self.downlink is not None
+        uplink_on = (self.transport is not None
+                     or self.backend == "compressed"
+                     or async_on or downlink_on)
+        placement_on = self.mesh is not None or self.backend == "sharded"
+
+        if self.protocol or self.backend == "protocol":
+            if self.participation is not None:
+                raise ValueError("the protocol mode does not support "
+                                 "partial participation")
+            if placement_on or uplink_on:
+                raise ValueError(
+                    "the protocol mode (literal per-client message passing) "
+                    "composes with no stages; drop the "
+                    "mesh/transport/downlink/clock options or run them on "
+                    "the staged engine")
+            return StageStack(protocol=True)
+
         if self.backend == "sharded" and self.mesh is None:
             raise ValueError("sharded backend requires a mesh")
-        if self.backend == "sharded" and self.param_specs is None:
+        if placement_on:
+            if self.param_specs is None:
+                raise ValueError(
+                    "the placement stage requires param_specs: the "
+                    "logical-axis spec tree of the parameters, matching the "
+                    "params pytree leaf for leaf (e.g. {'w': ('mlp',), "
+                    "'b': ()}; model init returns it, see "
+                    "repro.models.transformer.init_model)")
+            if not self.jit:
+                raise ValueError("the placement stage requires jit (the "
+                                 "eager path performs no mesh placement)")
+        if uplink_on and not self.jit:
             raise ValueError(
-                "sharded backend requires param_specs: the logical-axis spec "
-                "tree of the parameters, matching the params pytree leaf for "
-                "leaf (e.g. {'w': ('mlp',), 'b': ()}; model init returns it, "
-                "see repro.models.transformer.init_model)")
-        if self.backend == "sharded" and not self.jit:
-            raise ValueError("sharded backend requires jit (the eager path "
-                             "performs no mesh placement)")
-        if self.backend == "protocol" and self.participation is not None:
-            raise ValueError("protocol backend does not support partial "
-                             "participation")
-        if self.backend in ("compressed", "async") and not self.jit:
-            raise ValueError(
-                f"{self.backend} backend requires jit (the compressor/"
-                "scheduler state threads through the compiled scan carry)")
-        if self.transport is not None and self.backend not in ("compressed",
-                                                               "async"):
-            raise ValueError(
-                f"transport is only honored by backend='compressed' or "
-                f"'async' (got backend={self.backend!r}); a transport on "
-                "any other backend would be silently ignored")
+                "communication/asynchrony stages require jit (the "
+                "compressor/scheduler state threads through the compiled "
+                "scan carry)")
         if self.transport is not None and not hasattr(self.transport,
                                                       "compress"):
             raise ValueError(
                 f"transport must implement the repro.comm.Transport "
                 f"interface, got {type(self.transport).__name__}")
-        if self.downlink is not None and self.backend != "compressed":
+        if async_on and self.participation is not None:
             raise ValueError(
-                f"downlink compression is only honored by "
-                f"backend='compressed' (got backend={self.backend!r}); a "
-                "downlink compressor on any other backend would be "
-                "silently ignored")
-        # async-only options are rejected elsewhere for the same reason the
-        # transport guard exists: silently ignoring them would mask typos
-        for opt, val in (("clock", self.clock),
-                         ("buffer_size", self.buffer_size),
-                         ("staleness", self.staleness)):
-            if val is not None and self.backend != "async":
-                raise ValueError(
-                    f"{opt} is only honored by backend='async' (got "
-                    f"backend={self.backend!r}); set "
-                    f"EngineConfig(backend='async') to run the simulated-"
-                    "asynchrony subsystem, or drop the option")
-        if self.backend == "async" and self.participation is not None:
-            raise ValueError(
-                "async backend does not compose with participation: client "
-                "subsampling is implicit in buffered aggregation (set "
-                "buffer_size < n_clients instead)")
+                "the asynchrony stage does not compose with participation: "
+                "client subsampling is implicit in buffered aggregation "
+                "(set buffer_size < n_clients instead)")
         if self.buffer_size is not None and self.buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got "
                              f"{self.buffer_size}")
+        if self.queue_depth is not None and self.queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got "
+                             f"{self.queue_depth}")
+
+        return StageStack(
+            placement=(Placement(self.mesh, self.param_specs, self.plan)
+                       if placement_on else None),
+            uplink=(UplinkComm(self.transport, self.comm_seed)
+                    if uplink_on else None),
+            downlink=(DownlinkComm.coerce(self.downlink)
+                      if downlink_on else None),
+            asynchrony=(Asynchrony(self.clock, self.buffer_size,
+                                   self.staleness, self.queue_depth,
+                                   self.clock_seed)
+                        if async_on else None),
+        )
+
+    def validate(self) -> None:
+        self.resolve()
 
 
 def rounds_to_boundary(r: int, every: int, total: int) -> int:
@@ -264,50 +329,45 @@ class RoundEngine:
         n_clients: int,
         config: EngineConfig = EngineConfig(),
     ):
-        config.validate()
+        stack = config.resolve()
         self.algorithm = algorithm
         self.grad_fn = grad_fn
         self.n_clients = n_clients
         self.config = config
+        self.stack = stack
         self.transport = None
         self.downlink = None
         # per-client wire bytes of one uplink message / one broadcast;
-        # filled in lazily by the compressed/async backends once the
-        # message shape is known
+        # filled in lazily by the communication stages once the message
+        # shape is known
         self.uplink_bytes_per_client_round: Optional[int] = None
         self.downlink_bytes_per_client_round: Optional[int] = None
 
-        if config.backend == "protocol":
+        if stack.protocol:
             if not hasattr(algorithm, "make_protocol_round_fn"):
                 raise ValueError(
                     f"algorithm {algorithm.name!r} has no protocol form "
-                    "(make_protocol_round_fn); use the inline backend")
+                    "(make_protocol_round_fn); use the staged engine")
             self._round_fn = algorithm.make_protocol_round_fn(grad_fn)
             self._accepts_active = False
-        elif config.backend in ("compressed", "async"):
+        elif stack.split:
             try:
                 self._local_fn = algorithm.make_local_fn(grad_fn)
                 self._server_fn = algorithm.make_server_fn()
             except NotImplementedError as e:
                 raise ValueError(
                     f"algorithm {algorithm.name!r} has no local/server split "
-                    "(make_local_fn/make_server_fn); run it on the inline "
-                    "backend instead") from e
+                    "(make_local_fn/make_server_fn); run it without "
+                    "communication/asynchrony stages") from e
             self._round_fn = None
             self._accepts_active = (
                 "active" in inspect.signature(self._server_fn).parameters
             )
-            self.transport = (config.transport if config.transport is not None
-                              else Dense())
-            if config.backend == "async":
+            self.transport = stack.uplink.resolve_transport()
+            if stack.downlink is not None:
+                self.downlink = stack.downlink.compressor
+            if stack.asynchrony is not None:
                 self._setup_async()
-            elif config.downlink is not None:
-                dl = config.downlink
-                if not hasattr(dl, "broadcast"):  # plain Transport
-                    from repro.comm import DownlinkCompressor
-
-                    dl = DownlinkCompressor(dl)
-                self.downlink = dl
         else:
             self._round_fn = algorithm.make_round_fn(grad_fn)
             self._accepts_active = (
@@ -321,30 +381,17 @@ class RoundEngine:
         self._use_active = config.participation is not None
         self._chunked_call = None  # compiled lazily (needs a state template)
         self._state_shardings = None
-        self._comm_state = None  # compressed/async: error-feedback pytree
-        self._comm_key = (jax.random.PRNGKey(config.comm_seed)
-                          if config.backend in ("compressed", "async")
-                          else None)
-        self._sched_state = None  # async: in-flight report buffer + ledger
-        self._dl_state = None  # compressed+downlink: client-visible shadow
+        self._extras = None  # dict of stage carry slices, built lazily
+        self._donate_batches = False  # staged prefetch chunks (see run())
 
     def _setup_async(self) -> None:
-        """Resolve clock/staleness/buffer and build the async round step."""
-        from repro.sched import (DeterministicClock, as_staleness, get_clock,
-                                 make_async_round)
+        """Resolve clock/staleness/buffer/queue and build the async step."""
+        from repro.sched import make_async_round
 
-        cfg = self.config
-        clock = cfg.clock
-        if clock is None:
-            clock = DeterministicClock()
-        elif isinstance(clock, str):
-            clock = get_clock(clock)
-        if not hasattr(clock, "durations"):
-            raise ValueError(
-                f"clock must implement the repro.sched.ClockModel interface "
-                f"(durations), got {type(clock).__name__}")
-        staleness = as_staleness(cfg.staleness)
-        buffer_size = (cfg.buffer_size if cfg.buffer_size is not None
+        asyn = self.stack.asynchrony
+        clock = asyn.resolve_clock()
+        staleness = asyn.resolve_staleness()
+        buffer_size = (asyn.buffer_size if asyn.buffer_size is not None
                        else self.n_clients)
         if not 1 <= buffer_size <= self.n_clients:
             raise ValueError(
@@ -352,64 +399,95 @@ class RoundEngine:
                 f"got {buffer_size}")
         self.clock, self.staleness, self.buffer_size = (clock, staleness,
                                                         buffer_size)
+        self.queue_depth = asyn.queue_depth
+        server_fields_fn = None
+        if self.downlink is not None:
+            server_fields_fn = (
+                lambda st: server_state_fields(self.algorithm, st))
         self._async_round = make_async_round(
             self._local_fn, self._server_fn, self.transport, clock,
             buffer_size, self.n_clients, staleness,
-            accepts_active=self._accepts_active)
+            accepts_active=self._accepts_active,
+            queue_depth=self.queue_depth, downlink=self.downlink,
+            server_fields_fn=server_fields_fn)
+
+    # -- carry slices (read-only views of the stage state) ----------------
+
+    @property
+    def _comm_state(self):
+        return None if self._extras is None else self._extras.get("comm")
+
+    @property
+    def _comm_key(self):
+        return None if self._extras is None else self._extras.get("key")
+
+    @property
+    def _sched_state(self):
+        return None if self._extras is None else self._extras.get("sched")
+
+    @property
+    def _dl_state(self):
+        return None if self._extras is None else self._extras.get("dl")
 
     # -- state ------------------------------------------------------------
 
     def init(self, params0):
-        """Algorithm state, placed on the backend's devices."""
+        """Algorithm state, placed on the stack's devices."""
         state = self.algorithm.init(params0, self.n_clients)
-        if self.config.backend == "sharded":
+        if self.stack.placement is not None:
             state = jax.device_put(state, self.state_shardings(state))
         return state
 
     def set_state_shardings(self, shardings) -> None:
-        """Install precomputed state shardings (sharded backend)."""
+        """Install precomputed state shardings (placement stage)."""
         self._state_shardings = shardings
 
     def state_shardings(self, state):
-        """Mesh shardings for the federated state (sharded backend).
+        """Mesh shardings for the federated state (placement stage).
 
         Every algorithm declares the placement of its state fields via
         :meth:`FedAlgorithm.state_roles`; the rule tables of
         :mod:`repro.launch.sharding` turn that into NamedShardings.
         """
-        from repro.launch import sharding as shd
-
         if self._state_shardings is None:
-            try:
-                roles = self.algorithm.state_roles()
-            except NotImplementedError as e:
-                raise ValueError(
-                    f"algorithm {self.algorithm.name!r} declares no state "
-                    "placement (implement FedAlgorithm.state_roles to run "
-                    "on the sharded backend)") from e
-            self._state_shardings = shd.fed_state_shardings_from_roles(
-                self.config.mesh, roles, state, self.config.param_specs,
-                self.config.plan)
+            self._state_shardings = self.stack.placement.state_shardings(
+                self.algorithm, state)
         return self._state_shardings
 
     # -- compiled chunk ---------------------------------------------------
 
     def _make_chunk_fn(self):
+        """The function the engine compiles: scan ``body`` over the chunk.
+
+        Stage carries ride in a dict alongside the algorithm state --
+        ``comm`` (uplink error feedback) + ``key`` (comm PRNG stream),
+        ``dl`` (downlink shadow), ``sched`` (report buffer/queue) -- so the
+        carry structure is literally the stage composition.
+        """
         with_active = self._use_active
-        if self.config.backend == "async":
+        if self.stack.asynchrony is not None:
             async_round = self._async_round
+            has_dl = self.downlink is not None
 
             def chunk_fn(carry, batches, active):
                 def body(c, b):
-                    st, sc, cs, key = c
-                    st, sc, cs, key, info = async_round(st, sc, cs, key, b)
-                    return (st, sc, cs, key), info
+                    st, ex = c
+                    if has_dl:
+                        st, sc, cs, key, dls, info = async_round(
+                            st, ex["sched"], ex["comm"], ex["key"], b,
+                            ex["dl"])
+                        return (st, {"sched": sc, "comm": cs, "key": key,
+                                     "dl": dls}), info
+                    st, sc, cs, key, info = async_round(
+                        st, ex["sched"], ex["comm"], ex["key"], b)
+                    return (st, {"sched": sc, "comm": cs,
+                                 "key": key}), info
 
                 return jax.lax.scan(body, carry, batches)
 
             return chunk_fn
 
-        if self.config.backend == "compressed":
+        if self.stack.split:
             local_fn, server_fn = self._local_fn, self._server_fn
             transport, downlink = self.transport, self.downlink
             algorithm = self.algorithm
@@ -429,8 +507,10 @@ class RoundEngine:
 
             def chunk_fn(carry, batches, active):
                 def body(c, xs):
+                    st, ex = c
+                    cs, key = ex["comm"], ex["key"]
                     if downlink is not None:
-                        st, cs, dls, key = c
+                        dls = ex["dl"]
                         key, sub, sub_dl = body_keys(key)
                         # clients compute against the compressed broadcast
                         # (what they actually hold); the server state stays
@@ -438,7 +518,6 @@ class RoundEngine:
                         st_v = st._replace(**jax.tree_util.tree_map(
                             lambda l: l[0], dls["seen"]))
                     else:
-                        st, cs, key = c
                         key, sub, _ = body_keys(key)
                         st_v = st
                     b, a = xs if with_active else (xs, None)
@@ -458,11 +537,12 @@ class RoundEngine:
                     else:
                         cs = cs_new
                         st, info = server_fn(st_v, msg_hat, aux)
+                    ex2 = {"comm": cs, "key": key}
                     if downlink is not None:
                         _, dls = downlink.broadcast(
                             dls, server_state_fields(algorithm, st), sub_dl)
-                        return (st, cs, dls, key), info
-                    return (st, cs, key), info
+                        ex2["dl"] = dls
+                    return (st, ex2), info
 
                 xs = (batches, active) if with_active else batches
                 return jax.lax.scan(body, carry, xs)
@@ -487,101 +567,107 @@ class RoundEngine:
 
     def _build_chunked_call(self, state):
         cfg = self.config
+        stack = self.stack
         chunk_fn = self._make_chunk_fn()
-        donate = (cfg.donate_state and cfg.jit
-                  and jax.default_backend() != "cpu")
+        accel = cfg.jit and jax.default_backend() != "cpu"
+        donate = cfg.donate_state and accel
         donate_argnums = (0,) if donate else ()
+        if self._donate_batches and accel:
+            # staged prefetch chunks are engine-owned, freshly created
+            # buffers: donating them lets XLA reuse them in-call, so
+            # double-buffered supply does not double peak batch memory
+            donate_argnums = donate_argnums + (1,)
 
-        if cfg.backend == "sharded":
-            from repro.launch import sharding as shd
-
+        if stack.placement is not None:
+            pl = stack.placement
             state_sh = self.state_shardings(state)
-            jitted = jax.jit(chunk_fn, out_shardings=(state_sh, None),
+            if stack.split:
+                extras_sh = pl.carry_shardings(self._extras, self.n_clients)
+                out_sh = ((state_sh, extras_sh), None)
+            else:
+                out_sh = (state_sh, None)
+            jitted = jax.jit(chunk_fn, out_shardings=out_sh,
                              donate_argnums=donate_argnums)
 
-            def call(state, batches, active):
-                batches = jax.device_put(
-                    batches,
-                    shd.batch_shardings(cfg.mesh, batches, cfg.plan,
-                                        chunk_axis=True))
-                return jitted(state, batches, active)
+            def call(carry, batches, active):
+                batches = jax.device_put(batches,
+                                         pl.batch_shardings(batches))
+                return jitted(carry, batches, active)
 
             return call
-        # only reached with jit enabled (validate() rejects sharded+eager,
+        # only reached with jit enabled (resolve() rejects staged+eager,
         # and the eager path never builds a chunked call)
         return jax.jit(chunk_fn, donate_argnums=donate_argnums)
 
-    def _init_comm_state(self, state, batches_stacked):
-        """Build the transport's error-feedback state (and byte accounting)
-        from the uplink message shape -- eval_shape only, no FLOPs."""
-        one_round = jax.tree_util.tree_map(lambda x: x[0], batches_stacked)
-        msg_spec = jax.eval_shape(
-            lambda s, b: self._local_fn(s, b)[0], state, one_round)
-        self._comm_state = self.transport.init_state(msg_spec)
-        self.uplink_bytes_per_client_round = (
-            self.transport.uplink_bytes(msg_spec))
-
-    def _init_sched_state(self, state, batches_stacked):
-        """Zero-filled in-flight report buffer for the async backend, from
-        the local half's message/aux shapes -- eval_shape only, no FLOPs."""
-        from repro.sched import init_async_state
-
+    def _init_extras(self, state, batches_stacked) -> dict:
+        """Build the stage carry slices from the uplink message shape
+        (eval_shape only, no FLOPs) -- compressor error-feedback state +
+        key, downlink shadow, and the async report buffer/queue."""
+        ex: dict = {}
         one_round = jax.tree_util.tree_map(lambda x: x[0], batches_stacked)
         msg_spec, aux_spec = jax.eval_shape(self._local_fn, state, one_round)
-        if "round" not in aux_spec:
-            raise ValueError(
-                f"algorithm {self.algorithm.name!r} emits no report-round "
-                "tag (aux['round']); the async backend needs it to age "
-                "buffered reports")
-        start = int(state.round) if hasattr(state, "round") else 0
-        return init_async_state(
-            msg_spec, aux_spec, self.n_clients, self.config.clock_seed,
-            start_round=start,
-            with_resid=(self.staleness.correct
-                        and self.buffer_size < self.n_clients))
+        ex["comm"] = self.transport.init_state(msg_spec)
+        ex["key"] = jax.random.PRNGKey(self.config.comm_seed)
+        self.uplink_bytes_per_client_round = (
+            self.transport.uplink_bytes(msg_spec))
+        if self.downlink is not None:
+            fields = server_state_fields(self.algorithm, state)
+            ex["dl"] = self.downlink.init_state(fields)
+            self.downlink_bytes_per_client_round = (
+                self.downlink.downlink_bytes(fields))
+        if self.stack.asynchrony is not None:
+            from repro.sched import init_async_state, init_queue_state
+
+            if "round" not in aux_spec:
+                raise ValueError(
+                    f"algorithm {self.algorithm.name!r} emits no "
+                    "report-round tag (aux['round']); the asynchrony stage "
+                    "needs it to age buffered reports")
+            start = int(state.round) if hasattr(state, "round") else 0
+            if self.queue_depth is not None:
+                ex["sched"] = init_queue_state(
+                    msg_spec, aux_spec, self.n_clients, self.queue_depth,
+                    self.config.clock_seed, start_round=start,
+                    with_resid=self.staleness.correct)
+            else:
+                ex["sched"] = init_async_state(
+                    msg_spec, aux_spec, self.n_clients,
+                    self.config.clock_seed, start_round=start,
+                    with_resid=(self.staleness.correct
+                                and self.buffer_size < self.n_clients))
+        return ex
+
+    def _set_donate_batches(self, donate: bool) -> None:
+        """Flip batch donation, invalidating the compiled call when the
+        flag is actually baked into it (accelerator + jit)."""
+        if donate == self._donate_batches:
+            return
+        if self.config.jit and jax.default_backend() != "cpu":
+            self._chunked_call = None
+        self._donate_batches = donate
 
     def _invoke_stacked(self, state, batches, active):
         """Run one chunk of already-stacked batches through the compiled
         call; returns (state, device-resident infos)."""
+        if self.stack.split and self._extras is None:
+            self._extras = self._init_extras(state, batches)
+            if self.stack.placement is not None:
+                self._extras = jax.device_put(
+                    self._extras,
+                    self.stack.placement.carry_shardings(self._extras,
+                                                         self.n_clients))
         if self._chunked_call is None:
             self._chunked_call = self._build_chunked_call(state)
-        if self.config.backend == "async":
-            if self._comm_state is None:
-                self._init_comm_state(state, batches)
-            if self._sched_state is None:
-                self._sched_state = self._init_sched_state(state, batches)
-            carry = (state, self._sched_state, self._comm_state,
-                     self._comm_key)
-            (state, sc, cs, key), infos = self._chunked_call(carry, batches,
-                                                             active)
-            self._sched_state, self._comm_state, self._comm_key = sc, cs, key
-            return state, infos
-        if self.config.backend == "compressed":
-            if self._comm_state is None:
-                self._init_comm_state(state, batches)
-            if self.downlink is not None and self._dl_state is None:
-                fields = server_state_fields(self.algorithm, state)
-                self._dl_state = self.downlink.init_state(fields)
-                self.downlink_bytes_per_client_round = (
-                    self.downlink.downlink_bytes(fields))
-            if self.downlink is not None:
-                carry = (state, self._comm_state, self._dl_state,
-                         self._comm_key)
-                (state, cs, dls, key), infos = self._chunked_call(
-                    carry, batches, active)
-                self._comm_state, self._dl_state, self._comm_key = (cs, dls,
-                                                                    key)
-                return state, infos
-            carry = (state, self._comm_state, self._comm_key)
-            (state, cs, key), infos = self._chunked_call(carry, batches,
-                                                         active)
-            self._comm_state, self._comm_key = cs, key
+        if self.stack.split:
+            (state, ex), infos = self._chunked_call((state, self._extras),
+                                                    batches, active)
+            self._extras = ex
             return state, infos
         return self._chunked_call(state, batches, active)
 
     def _invoke_chunk(self, state, per_round_batches, active):
         """Run ``len(per_round_batches)`` rounds in one compiled call."""
-        if self.config.backend == "protocol" or not self.config.jit:
+        if self.stack.protocol or not self.config.jit:
             stacked: dict[str, list] = {}
             for i, b in enumerate(per_round_batches):
                 if self._use_active:
@@ -618,19 +704,30 @@ class RoundEngine:
         suppliers feed whole chunks through ``sample_chunk`` (vectorized, no
         host re-stack); the engine falls back to per-round sampling under
         partial participation, where mask draws must interleave with batch
-        draws.  ``metrics`` maps metric name -> list with one float per
+        draws.  Suppliers that stage engine-owned chunks
+        (``donate_chunks``, e.g. ``ArraySupplier(prefetch=True)``) get
+        their chunks donated into the compiled call on accelerator
+        backends.  ``metrics`` maps metric name -> list with one float per
         executed round.  ``metrics_cb(round_idx, round_metrics)``, if given,
         fires per round (from per-chunk host fetches).
         """
         if rng is None:
             rng = np.random.default_rng(seed)
         supplier = as_supplier(batch_supplier)
+        # batch donation is baked into the jit, so a supplier switch that
+        # flips it (e.g. a prefetch supplier followed by one serving cache
+        # VIEWS) must recompile -- donating a view would invalidate the
+        # supplier's cache.  A supplier only declares donate_chunks when
+        # every chunk it serves is a fresh, engine-owned buffer.
+        self._set_donate_batches(
+            bool(getattr(supplier, "donate_chunks", False))
+            and not self._use_active)
         # the vectorized chunk path cannot interleave rng-consuming batch and
         # mask draws per round, so participation keeps the per-round path
         use_stacked = (
             type(supplier).sample_chunk is not BatchSupplier.sample_chunk
             and not self._use_active and self.config.jit
-            and self.config.backend != "protocol")
+            and not self.stack.protocol)
         metrics: dict[str, list] = {}
         chunk = self.config.chunk_rounds if self.config.jit else 1
         done = 0
@@ -676,17 +773,20 @@ class RoundEngine:
         if active is not None and not self._accepts_active:
             raise ValueError("this algorithm's round_fn takes no active mask")
         if (active is not None and not self._use_active
-                and self.config.jit and self.config.backend != "protocol"):
+                and self.config.jit and not self.stack.protocol):
             raise ValueError(
                 "engine compiled without participation support; set "
                 "EngineConfig.participation to thread active masks")
-        if self.config.backend == "protocol" or not self.config.jit:
+        if self.stack.protocol or not self.config.jit:
             if active is not None:
                 return self._round_fn(state, batches, active=active)
             return self._round_fn(state, batches)
         if self._use_active and active is None:
             raise ValueError("engine configured with participation; pass the "
                              "active mask explicitly to step()")
+        # step() batches are caller-owned (and chunk-of-1 stacking creates
+        # VIEWS of them): never donate, even after a donating run()
+        self._set_donate_batches(False)
         per_chunk = _stack_batches([batches])
         act = None
         if self._use_active:

@@ -1,0 +1,221 @@
+"""Composable execution stages for the round engine.
+
+The engine historically ran one of five monolithic *backends*; this module
+replaces that enum with a stack of orthogonal **stages**, each owning one
+execution concern, each contributing its slice of the engine's ``lax.scan``
+carry, and each freely composable with the others:
+
+  ============ =========================================================
+  stage        concern (and its carry slice)
+  ============ =========================================================
+  Placement    device-mesh placement: state/batch/carry shardings from
+               ``FedAlgorithm.state_roles`` + the plan rule tables of
+               :mod:`repro.launch.sharding` (no carry slice of its own --
+               it places everyone else's)
+  UplinkComm   the client->server message through a :mod:`repro.comm`
+               Transport (carry: error-feedback residuals + PRNG key)
+  DownlinkComm the server->client broadcast through a
+               :class:`repro.comm.DownlinkCompressor` (carry: the
+               client-visible shadow state)
+  Asynchrony   simulated client asynchrony via :mod:`repro.sched`
+               (carry: the in-flight report buffer/queue + staleness
+               ledger + clock key)
+  ============ =========================================================
+
+:meth:`repro.exec.EngineConfig.resolve` builds a :class:`StageStack` from
+the config's stage fields (``mesh=``, ``transport=``, ``downlink=``,
+``clock=`` ... -- each independently optional); the deprecated ``backend=``
+string maps onto the equivalent stage combination.  The stack, not a
+backend name, is what the engine compiles against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Placement:
+    """Mesh placement of the federated state, batches and carry slices.
+
+    ``param_specs`` is the logical-axis spec tree of the parameters (model
+    init returns it); ``plan`` is a federated placement plan of
+    :mod:`repro.launch.sharding` ("A", "A_dp" or "B").  Placement never
+    changes the math -- it composes with every other stage by placing their
+    carry slices too (compressor residuals and report buffers are
+    client-axis pytrees, so the client placement rules already know where
+    they go).
+    """
+
+    mesh: Any
+    param_specs: Any = None
+    plan: str = "A"
+    name: str = "placement"
+
+    def state_shardings(self, algorithm, state):
+        """NamedShardings for an algorithm's state from its declared roles."""
+        from repro.launch import sharding as shd
+
+        try:
+            roles = algorithm.state_roles()
+        except NotImplementedError as e:
+            raise ValueError(
+                f"algorithm {algorithm.name!r} declares no state placement "
+                "(implement FedAlgorithm.state_roles to run under the "
+                "placement stage)") from e
+        return shd.fed_state_shardings_from_roles(
+            self.mesh, roles, state, self.param_specs, self.plan)
+
+    def carry_shardings(self, extras: dict, n_clients: int):
+        """Placement for the other stages' carry slices.
+
+        Each slice's client axis is declared structurally (this is where
+        Placement knows the other stages' layouts): compressor state is
+        message-shaped (client axis 0), the one-slot report buffer is
+        client-major, the queued buffer stacks a leading queue-depth axis
+        (client axis 1) -- except its per-client residual/ledger fields --
+        and PRNG keys plus the single-sender downlink shadow replicate.
+        """
+        from repro.launch import sharding as shd
+
+        def place(tree, axis):
+            return shd.carry_slice_shardings(self.mesh, tree, self.plan,
+                                             n_clients, client_axis=axis)
+
+        axes = {"comm": 0, "key": None, "dl": None}
+        out = {}
+        for name, slice_ in extras.items():
+            if name == "sched":
+                out[name] = self._sched_shardings(slice_, place)
+            else:
+                out[name] = place(slice_, axes.get(name, None))
+        return out
+
+    def _sched_shardings(self, sched, place):
+        from repro.sched import QueueState
+
+        queued = isinstance(sched, QueueState)
+        per_field = {
+            # message/aux buffers gain a leading queue axis when queued
+            "pending_msg": 1 if queued else 0,
+            "pending_aux": 1 if queued else 0,
+            "slot_filled": 1, "deliver_time": 1 if queued else 0,
+            # per-client fields stay client-major in both layouts
+            "resid": 0, "need_refresh": 0, "last_synced": 0,
+            # scalars + the clock key replicate
+            "vtime": None, "round_idx": None, "clock_key": None,
+        }
+        return type(sched)(**{
+            f: place(getattr(sched, f), per_field[f])
+            for f in sched._fields})
+
+    def batch_shardings(self, batches, *, chunk_axis: bool = True):
+        from repro.launch import sharding as shd
+
+        return shd.batch_shardings(self.mesh, batches, self.plan,
+                                   chunk_axis=chunk_axis)
+
+
+@dataclass(frozen=True)
+class UplinkComm:
+    """Client->server transport on the uplink message pytree.
+
+    ``transport=None`` resolves to the identity :class:`repro.comm.Dense`
+    (the stage still splits the round into local/server halves, which is
+    what the other communication-shaped stages build on).
+    """
+
+    transport: Any = None
+    seed: int = 0
+    name: str = "uplink"
+
+    def resolve_transport(self):
+        if self.transport is None:
+            from repro.comm import Dense
+
+            return Dense()
+        return self.transport
+
+
+@dataclass(frozen=True)
+class DownlinkComm:
+    """Server->client broadcast compression (shadow-state error feedback)."""
+
+    compressor: Any
+    name: str = "downlink"
+
+    @classmethod
+    def coerce(cls, obj) -> "DownlinkComm":
+        """Accept a DownlinkCompressor or a plain Transport (wrapped)."""
+        if isinstance(obj, DownlinkComm):
+            return obj
+        if not hasattr(obj, "broadcast"):  # plain Transport
+            from repro.comm import DownlinkCompressor
+
+            obj = DownlinkCompressor(obj)
+        return cls(obj)
+
+
+@dataclass(frozen=True)
+class Asynchrony:
+    """Simulated client asynchrony: virtual-time clock, buffered commits,
+    staleness weighting, and (optionally) a ``queue_depth``-deep per-client
+    report queue (clients race ahead instead of waiting for delivery --
+    the upload-bandwidth-limited regime; ``None`` keeps the historical
+    one-slot buffer)."""
+
+    clock: Any = None
+    buffer_size: Optional[int] = None
+    staleness: Any = None
+    queue_depth: Optional[int] = None
+    seed: int = 0
+    name: str = "asynchrony"
+
+    def resolve_clock(self):
+        from repro.sched import DeterministicClock, get_clock
+
+        clock = self.clock
+        if clock is None:
+            clock = DeterministicClock()
+        elif isinstance(clock, str):
+            clock = get_clock(clock)
+        if not hasattr(clock, "durations"):
+            raise ValueError(
+                f"clock must implement the repro.sched.ClockModel interface "
+                f"(durations), got {type(clock).__name__}")
+        return clock
+
+    def resolve_staleness(self):
+        from repro.sched import as_staleness
+
+        return as_staleness(self.staleness)
+
+
+@dataclass(frozen=True)
+class StageStack:
+    """The resolved, validated stage combination one engine runs.
+
+    ``protocol=True`` is the one non-composable mode: the literal
+    per-client message-passing form of Algorithm 1, kept for equivalence
+    testing (it bypasses the compiled scan entirely).
+    """
+
+    placement: Optional[Placement] = None
+    uplink: Optional[UplinkComm] = None
+    downlink: Optional[DownlinkComm] = None
+    asynchrony: Optional[Asynchrony] = None
+    protocol: bool = False
+
+    @property
+    def split(self) -> bool:
+        """Whether the round runs as local/server halves joined by an
+        explicit message exchange (any communication-shaped stage)."""
+        return (self.uplink is not None or self.downlink is not None
+                or self.asynchrony is not None)
+
+    def names(self) -> Tuple[str, ...]:
+        if self.protocol:
+            return ("protocol",)
+        return tuple(s.name for s in (self.placement, self.uplink,
+                                      self.downlink, self.asynchrony)
+                     if s is not None)

@@ -18,13 +18,18 @@ here removes that copy:
     host memory at all (a win on accelerator backends; on CPU the host
     gather is already cheap -- see BENCH_exec.json);
   * ``prefetch=True`` double-buffers the chunk path: after serving chunk
-    ``[start, start+n)`` the supplier kicks off the gather (+
-    ``jax.device_put`` under ``device_cache``) for ``[start+n, start+2n)``
-    on a background thread, so the next chunk's batch assembly overlaps the
-    current compiled call (jax dispatch is asynchronous; the engine blocks
-    in ``device_get`` while the staging thread works).  Safe because chunk
-    draws are derived from ``(seed, round_idx)``, never from a shared rng
-    stream -- prefetching cannot perturb the trajectory;
+    ``[start, start+n)`` the supplier kicks off the gather for
+    ``[start+n, start+2n)`` on a background thread, so the next chunk's
+    batch assembly overlaps the current compiled call (jax dispatch is
+    asynchronous; the engine blocks in ``device_get`` while the staging
+    thread works).  On accelerator backends the staging thread also
+    ``jax.device_put``-s the gathered chunk, so the H2D copy overlaps too,
+    and the supplier declares its chunks *donatable*
+    (:attr:`BatchSupplier.donate_chunks`): every staged chunk is a fresh,
+    engine-owned device buffer, so the engine donates it into the compiled
+    call and double-buffering does not double peak batch memory.  Safe
+    because chunk draws are derived from ``(seed, round_idx)``, never from
+    a shared rng stream -- prefetching cannot perturb the trajectory;
   * plain callables keep working everywhere (the engine wraps them in
     :class:`CallableSupplier`).
 
@@ -40,6 +45,7 @@ from __future__ import annotations
 
 from typing import Any, Mapping, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,7 +53,15 @@ Batch = Any
 
 
 class BatchSupplier:
-    """Protocol: per-round sampling plus an optional vectorized chunk path."""
+    """Protocol: per-round sampling plus an optional vectorized chunk path.
+
+    ``donate_chunks`` declares that every pytree ``sample_chunk`` returns
+    is a fresh buffer the caller exclusively owns -- the engine then
+    donates chunks into its compiled call on accelerator backends.  It must
+    stay False whenever chunks alias supplier-held storage (views, caches).
+    """
+
+    donate_chunks: bool = False
 
     def sample_round(self, round_idx: int, rng: np.random.Generator) -> Batch:
         raise NotImplementedError
@@ -118,6 +132,13 @@ class ArraySupplier(BatchSupplier):
         self._executor = None  # staging thread, created on first prefetch
         self._pending = None   # (start_round, n_rounds, future)
 
+    @property
+    def donate_chunks(self) -> bool:
+        """Prefetch-staged minibatch chunks are fresh, engine-owned buffers
+        the engine may donate into its compiled call.  Full-batch mode
+        serves broadcast *views* of the cache and must never be donated."""
+        return self.prefetch and self.batch_size is not None
+
     @classmethod
     def from_dataset(cls, data, tau: int, batch_size: Optional[int], *,
                      seed: int = 0, device_cache: bool = False,
@@ -162,7 +183,15 @@ class ArraySupplier(BatchSupplier):
     def _chunk(self, start_round, n_rounds):
         idx = np.stack([self._round_idx(start_round + i)
                         for i in range(n_rounds)])
-        return self._gather(idx)
+        chunk = self._gather(idx)
+        if (self.prefetch and not self.device_cache
+                and jax.default_backend() != "cpu"):
+            # stage the host gather onto the accelerator from the staging
+            # thread: the H2D copy overlaps the current compiled call and
+            # the chunk arrives as donatable device buffers instead of
+            # transferring (and double-allocating) at the jit boundary
+            chunk = jax.device_put(chunk)
+        return chunk
 
     def sample_chunk(self, start_round, n_rounds, rng=None):
         if self.batch_size is None:

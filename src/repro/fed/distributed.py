@@ -1,11 +1,11 @@
 """Sharded federated execution: place federated rounds on a device mesh.
 
 Since the exec refactor this is a thin compatibility surface over the
-unified round-execution engine (:mod:`repro.exec`) with
-``backend="sharded"``: the engine owns the jit, the explicit in/out
-shardings, buffer donation and (optionally) multi-round chunking.  The math
-is bitwise the single-device simulator's -- tests/test_distributed.py
-asserts it.
+unified round-execution engine (:mod:`repro.exec`) with the Placement
+stage active (``EngineConfig(mesh=...)``): the engine owns the jit, the
+explicit in/out shardings, buffer donation and (optionally) multi-round
+chunking.  The math is bitwise the single-device simulator's --
+tests/test_distributed.py asserts it.
 """
 from __future__ import annotations
 
@@ -32,7 +32,7 @@ def make_sharded_algorithm_engine(mesh, algorithm, grad_fn, param_specs,
     no longer restricted to inline execution."""
     return RoundEngine(
         algorithm, grad_fn, n_clients,
-        EngineConfig(backend="sharded", chunk_rounds=chunk_rounds,
+        EngineConfig(chunk_rounds=chunk_rounds,
                      mesh=mesh, param_specs=param_specs, plan=plan))
 
 

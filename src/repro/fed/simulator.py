@@ -7,20 +7,21 @@ the metrics the paper plots (relative prox-gradient optimality, loss, test
 accuracy, sparsity, communicated bytes).
 
 Since the exec refactor this module is a thin caller of the unified
-round-execution engine (:mod:`repro.exec`): ``run`` builds a
-:class:`repro.exec.RoundEngine` (inline backend by default) and only keeps
-the paper-metric bookkeeping here.  Between eval points the engine fuses up
-to ``chunk_rounds`` rounds into one compiled call, so long runs (the 4000+
+round-execution engine (:mod:`repro.exec`): ``run`` builds a bare
+:class:`repro.exec.RoundEngine` (no stages) and only keeps the paper-metric
+bookkeeping here.  Between eval points the engine fuses up to
+``chunk_rounds`` rounds into one compiled call, so long runs (the 4000+
 round Fig. 2/3 trajectories) no longer pay a Python dispatch + host sync per
-round.  Pass ``engine=`` to run the same loop on the sharded, protocol or
-compressed backend, or ``participation=`` for client subsampling.
+round.  Pass ``engine=`` to run the same loop under any stage composition
+(mesh placement, uplink/downlink compression, asynchrony -- see
+:mod:`repro.exec.stages`), or ``participation=`` for client subsampling.
 ``batch_supplier`` may be a plain callable or a chunk-aware
 :class:`repro.exec.BatchSupplier` (e.g. ``ArraySupplier.from_dataset``),
 which feeds whole chunks without the host-side per-round stack.  When the
 engine carries a :mod:`repro.comm` transport, the recorded
 ``uplink_mbytes_per_round`` reflects the transport's actual wire bytes
 instead of the algorithm's declared dense vector count.  When the engine
-runs the async backend (:mod:`repro.sched`), the per-round staleness
+runs the asynchrony stage (:mod:`repro.sched`), the per-round staleness
 ledger (virtual wall-clock, mean/max delivered-report age) is copied into
 ``History.extra`` under ``sched/``-prefixed keys (per-ROUND cadence,
 unlike the per-eval-point ``eval_fn`` keys).
@@ -128,15 +129,15 @@ def run(
     relative prox-gradient optimality  ||G(x^r)|| / ||G(x^1)||  is recorded
     (the y-axis of the paper's Figs. 2-3).
 
-    ``engine`` overrides the default inline engine (e.g. a sharded or
-    protocol :class:`repro.exec.RoundEngine` built by the caller);
-    ``chunk_rounds``/``participation`` configure the default one.
+    ``engine`` overrides the default bare engine (e.g. a mesh-placed,
+    compressed or async :class:`repro.exec.RoundEngine` built by the
+    caller); ``chunk_rounds``/``participation`` configure the default one.
     """
     rng = np.random.default_rng(seed)
     if engine is None:
         engine = RoundEngine(
             algorithm, grad_fn, n_clients,
-            EngineConfig(backend="inline", chunk_rounds=chunk_rounds,
+            EngineConfig(chunk_rounds=chunk_rounds,
                          jit=jit, participation=participation))
     state = engine.init(params0)
 

@@ -210,6 +210,45 @@ def fed_state_shardings_from_roles(mesh, roles: Mapping[str, str], state,
                           for f in fields})
 
 
+def carry_slice_shardings(mesh, tree, plan: str, n_clients: int,
+                          client_axis=0):
+    """Mesh placement for one of the engine's extra scan-carry slices.
+
+    The round-execution engine threads stage state through its ``lax.scan``
+    carry alongside the algorithm state: compressor error-feedback residuals,
+    the async in-flight report buffer/queue, PRNG keys, the downlink shadow.
+    The big ones are client-axis pytrees (``(n_clients, d)`` per message
+    leaf, or ``(queue_depth, n_clients, d)`` for the queued report buffer),
+    so they get the same client-axis placement ``client_state_rules`` gives
+    client-role state fields; everything else (keys, scalar clocks, the
+    single-sender downlink shadow) replicates.
+
+    ``client_axis`` names which leaf axis carries clients for this slice
+    (0 for message-shaped trees, 1 for queue-stacked buffers, ``None`` to
+    replicate the whole slice).  The caller declares the axis structurally
+    -- repro.exec.stages.Placement knows each slice's layout -- instead of
+    guessing from shapes, which would mis-place e.g. a ``(2,)`` PRNG key
+    when ``n_clients == 2``.  Leaves whose declared axis does not have size
+    ``n_clients`` (scalars, ledgers riding in the same NamedTuple)
+    replicate.
+    """
+    prefs, _ = client_state_rules(plan)["client"]
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        if (client_axis is not None and len(shape) > client_axis
+                and shape[client_axis] == n_clients):
+            for entry in prefs:
+                sz = _axis_size(mesh, entry)
+                if sz is not None and sz > 1 and n_clients % sz == 0:
+                    parts: list = [None] * len(shape)
+                    parts[client_axis] = entry
+                    return NamedSharding(mesh, PartitionSpec(*parts))
+        return NamedSharding(mesh, PartitionSpec())
+
+    return jax.tree_util.tree_map(one, tree)
+
+
 def fed_state_shardings(mesh, param_tree, param_specs, plan: str, n_clients: int):
     """Shardings for a DProxState(x_bar, c, round) -- the historical surface,
     now a thin wrapper over :func:`fed_state_shardings_from_roles`."""

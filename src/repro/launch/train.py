@@ -4,17 +4,19 @@ Trains any registry architecture (reduced "smoke" scale by default; the full
 configs are exercised via the dry-run) with Algorithm 1 over heterogeneous
 per-client token streams, with checkpointing and optional mesh sharding.
 
-Execution goes through the unified round engine (:mod:`repro.exec`):
+Execution goes through the unified round engine (:mod:`repro.exec`), whose
+stages compose freely -- every flag below stacks with every other:
 ``--chunk N`` fuses N rounds per compiled call (one host sync per chunk),
 ``--participation f`` subsamples a fraction of clients each round,
-``--transport {dense,topk,randk,quantize}`` (+ ``--compress-ratio``) runs the
-compressed-uplink backend, ``--async`` runs the simulated-asynchrony backend
-(``--clock {deterministic,lognormal,straggler}``, ``--buffer-size K``,
-``--staleness {uniform,poly}`` + ``--staleness-correct``; composes with
-``--transport``), and batches come from a chunk-aware
+``--transport {dense,topk,randk,quantize}`` (+ ``--compress-ratio``)
+compresses the uplink, ``--downlink ...`` compresses the broadcast,
+``--clock {deterministic,lognormal,straggler}`` / ``--buffer-size K`` /
+``--staleness {uniform,poly}`` + ``--staleness-correct`` /
+``--queue-depth Q`` activate simulated asynchrony (``--async`` alone picks
+the straggler clock), and batches come from a chunk-aware
 :class:`repro.exec.ArraySupplier` over the token streams (``--device-cache``
 keeps them device-resident, ``--prefetch`` overlaps the next chunk's batch
-assembly with the current compiled call).
+assembly with the current compiled call and donates the staged chunks).
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
         --scale smoke --rounds 50 --tau 4 --clients 4 --ckpt out/ck.npz
@@ -105,6 +107,10 @@ def main(argv=None):
                     help="compress uplinks through this repro.comm transport")
     ap.add_argument("--compress-ratio", type=float, default=0.1,
                     help="kept-coordinate fraction for topk/randk")
+    ap.add_argument("--downlink", default=None,
+                    choices=["dense", "topk", "randk", "quantize"],
+                    help="compress the broadcast direction too "
+                         "(DownlinkComm stage; shares --compress-ratio)")
     ap.add_argument("--device-cache", action="store_true",
                     help="keep token streams device-resident (batches are "
                          "gathered on device, no host stack)")
@@ -112,9 +118,10 @@ def main(argv=None):
                     help="double-buffer chunk supply: stage the next "
                          "chunk's batches while the current chunk computes")
     ap.add_argument("--async", dest="run_async", action="store_true",
-                    help="simulated-asynchrony backend: virtual-time "
-                         "client clocks + buffered stale-corrected "
-                         "aggregation (repro.sched)")
+                    help="simulated asynchrony with the default straggler "
+                         "clock (any async flag below also activates the "
+                         "stage; they all compose with --transport/"
+                         "--downlink)")
     ap.add_argument("--clock", default=None,
                     choices=["deterministic", "lognormal", "straggler"],
                     help="async: virtual-time clock model "
@@ -128,15 +135,11 @@ def main(argv=None):
     ap.add_argument("--staleness-correct", action="store_true",
                     help="async: retain downweighted stale mass in a "
                          "server-side error-feedback residual")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="async: per-client in-flight report queue depth "
+                         "(clients race ahead of delivery; default: the "
+                         "one-slot buffer)")
     args = ap.parse_args(argv)
-    if not args.run_async and (args.clock is not None
-                               or args.buffer_size is not None
-                               or args.staleness is not None
-                               or args.staleness_correct):
-        # mirror EngineConfig.validate: silently dropping these would let a
-        # forgotten --async masquerade as an async run
-        ap.error("--clock/--buffer-size/--staleness[-correct] require "
-                 "--async")
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
             else registry.get(args.arch))
@@ -155,29 +158,37 @@ def main(argv=None):
     reg = L1(lam=args.lam)
     alg = make_algorithm(args.algorithm, reg, args.tau, args.eta, args.eta_g)
     grad_fn = T.make_grad_fn(cfg)
-    backend, transport = "inline", None
-    if args.transport is not None:
+    transport = downlink = None
+    if args.transport is not None or args.downlink is not None:
         from repro.comm import get_transport
 
-        backend = "compressed"
-        kw = ({"ratio": args.compress_ratio}
-              if args.transport in ("topk", "randk") else {})
-        transport = get_transport(args.transport, **kw)
-    clock = buffer_size = staleness = None
-    if args.run_async:
+        def build(name):
+            kw = ({"ratio": args.compress_ratio}
+                  if name in ("topk", "randk") else {})
+            return get_transport(name, **kw)
+
+        transport = build(args.transport) if args.transport else None
+        downlink = build(args.downlink) if args.downlink else None
+    # any async flag activates the asynchrony stage; --async alone picks
+    # the straggler clock (stages compose, so no either/or validation)
+    run_async = (args.run_async or args.clock is not None
+                 or args.buffer_size is not None
+                 or args.staleness is not None or args.staleness_correct
+                 or args.queue_depth is not None)
+    clock = staleness = None
+    if run_async:
         from repro.sched import Staleness, get_clock
 
-        backend = "async"  # composes with --transport
         clock = get_clock(args.clock or "straggler")
-        buffer_size = args.buffer_size
         staleness = Staleness(args.staleness or "uniform",
                               correct=args.staleness_correct)
     engine = RoundEngine(
         alg, grad_fn, args.clients,
-        EngineConfig(backend=backend, chunk_rounds=args.chunk,
+        EngineConfig(chunk_rounds=args.chunk,
                      participation=args.participation, transport=transport,
-                     clock=clock, buffer_size=buffer_size,
-                     staleness=staleness))
+                     downlink=downlink, clock=clock,
+                     buffer_size=args.buffer_size, staleness=staleness,
+                     queue_depth=args.queue_depth))
     state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 
@@ -222,16 +233,21 @@ def main(argv=None):
 
     print(f"done: final loss {last_loss:.4f}, "
           f"global-model sparsity {float(sparsity(final)):.3f}")
-    if args.run_async and metrics.get("vtime"):
+    if run_async and metrics.get("vtime"):
         sm = metrics.get("staleness_mean", [0.0])
-        print(f"async: clock={args.clock} buffer={engine.buffer_size}/"
-              f"{args.clients}, virtual time {metrics['vtime'][-1]:.1f}, "
+        depth = f" queue={engine.queue_depth}" if engine.queue_depth else ""
+        print(f"async: clock={clock.name} buffer={engine.buffer_size}/"
+              f"{args.clients}{depth}, "
+              f"virtual time {metrics['vtime'][-1]:.1f}, "
               f"mean report age (last segment) {np.mean(sm):.2f} rounds")
     if engine.uplink_bytes_per_client_round is not None:
         dense = n_params * 4
         print(f"uplink: {engine.uplink_bytes_per_client_round/1e6:.2f} "
               f"MB/client/round ({engine.transport.name}; dense would be "
               f"{dense/1e6:.2f} MB)")
+    if engine.downlink_bytes_per_client_round is not None:
+        print(f"downlink: {engine.downlink_bytes_per_client_round/1e6:.2f} "
+              f"MB/client/round ({engine.downlink.transport.name})")
     return state
 
 

@@ -4,32 +4,36 @@ staleness-aware server aggregator, and the staleness ledger.
 Clients in real federated deployments finish rounds at heterogeneous speeds
 and report *stale* innovations -- updates computed against a broadcast model
 the server has since moved past.  This package simulates that regime
-deterministically and scan-compatibly, so the async engine backend
-(``EngineConfig(backend="async", clock=..., buffer_size=..., staleness=...)``
-in :mod:`repro.exec`) composes with multi-round chunking, buffer donation
-and :mod:`repro.comm` uplink compression:
+deterministically and scan-compatibly, so the engine's Asynchrony stage
+(``EngineConfig(clock=..., buffer_size=..., staleness=..., queue_depth=...)``
+in :mod:`repro.exec`) composes with multi-round chunking, buffer donation,
+mesh placement and :mod:`repro.comm` uplink/downlink compression:
 
   * :mod:`repro.sched.clock` -- ``ClockModel`` protocol + deterministic,
     log-normal and straggler-mixture virtual-time round durations, all
     PRNG-keyed and traceable;
   * :mod:`repro.sched.aggregator` -- the FedBuff-style buffered commit step
     (``buffer_size`` earliest reports per commit), staleness-weighted
-    mixing (``Staleness``), optional stale-innovation re-anchoring, and the
+    mixing (``Staleness``), optional stale-innovation re-anchoring, the
     per-commit staleness ledger (virtual wall-clock, per-client
     ``last_synced`` round, report-age histogram) emitted through the
-    engine's metrics path.
+    engine's metrics path, and the in-flight report state: the one-slot
+    :class:`AsyncState` buffer or the ``queue_depth``-deep
+    :class:`QueueState` per-client queue (clients race ahead of delivery,
+    uploads serialize FIFO).
 
 Zero-delay contract: ``DeterministicClock()`` + ``buffer_size=n_clients``
 reproduces the synchronous engine trajectory bitwise
 (tests/test_sched.py).
 """
-from repro.sched.aggregator import (AGE_HIST_BUCKETS, AsyncState, Staleness,
-                                    as_staleness, init_async_state,
+from repro.sched.aggregator import (AGE_HIST_BUCKETS, AsyncState, QueueState,
+                                    Staleness, as_staleness,
+                                    init_async_state, init_queue_state,
                                     make_async_round)
 from repro.sched.clock import (ClockModel, DeterministicClock, LogNormalClock,
                                StragglerClock, get_clock)
 
 __all__ = ["ClockModel", "DeterministicClock", "LogNormalClock",
            "StragglerClock", "get_clock", "Staleness", "as_staleness",
-           "AsyncState", "init_async_state", "make_async_round",
-           "AGE_HIST_BUCKETS"]
+           "AsyncState", "QueueState", "init_async_state",
+           "init_queue_state", "make_async_round", "AGE_HIST_BUCKETS"]

@@ -59,7 +59,7 @@ round.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -128,10 +128,10 @@ def as_staleness(policy) -> Staleness:
 
 
 class AsyncState(NamedTuple):
-    """The in-flight report buffer + staleness ledger, carried through the
-    engine's ``lax.scan``.  One fixed slot per client (a client computes one
-    report at a time), so every leaf keeps a static shape and the carry
-    stays donation-friendly.
+    """The one-slot in-flight report buffer + staleness ledger, carried
+    through the engine's ``lax.scan``.  One fixed slot per client (a client
+    computes one report at a time), so every leaf keeps a static shape and
+    the carry stays donation-friendly.
 
     ``pending_msg``/``pending_aux`` hold each client's computed-but-not-yet-
     delivered report (the birth round rides along in ``pending_aux["round"]``
@@ -164,20 +164,82 @@ def init_async_state(msg_spec, aux_spec, n_clients: int,
         return jax.tree_util.tree_map(
             lambda l: jnp.zeros(tuple(l.shape), l.dtype), spec)
 
-    for name, spec in (("msg", msg_spec), ("aux", aux_spec)):
-        for leaf in jax.tree_util.tree_leaves(spec):
-            if len(leaf.shape) < 1 or leaf.shape[0] != n_clients:
-                raise ValueError(
-                    f"async backend requires every {name} leaf to carry a "
-                    f"leading client axis of size {n_clients}; got shape "
-                    f"{tuple(leaf.shape)} (per-client reports cannot be "
-                    "buffered otherwise)")
+    _check_client_axis(msg_spec, aux_spec, n_clients)
     return AsyncState(
         pending_msg=zeros(msg_spec),
         pending_aux=zeros(aux_spec),
         resid=zeros(msg_spec) if with_resid else (),
         deliver_time=jnp.zeros((n_clients,), jnp.float32),
         need_refresh=jnp.ones((n_clients,), bool),
+        last_synced=jnp.full((n_clients,), -1, jnp.int32),
+        vtime=jnp.zeros((), jnp.float32),
+        round_idx=jnp.full((), start_round, jnp.int32),
+        clock_key=jax.random.PRNGKey(clock_seed),
+    )
+
+
+class QueueState(NamedTuple):
+    """The multi-slot in-flight report queue + staleness ledger.
+
+    Generalizes :class:`AsyncState` from one pending report per client to a
+    fixed ``queue_depth``-deep per-client queue: a client that finished
+    computing no longer waits for its report to be *delivered* before
+    starting the next round -- it races ahead, enqueueing up to
+    ``queue_depth`` computed-but-undelivered reports (the upload-bandwidth-
+    limited deployment regime).  Uploads serialize FIFO per client, the
+    server always consumes each client's queue *head* (oldest in-flight
+    report), and a full queue blocks the client until a slot frees.
+
+    ``pending_msg``/``pending_aux`` leaves carry a leading
+    ``(queue_depth, n_clients)`` pair of axes; ``slot_filled`` /
+    ``deliver_time`` are ``(queue_depth, n_clients)`` (empty slots hold
+    ``+inf`` delivery times).  ``resid`` stays per-client: the stale-
+    innovation correction residual applies at delivery, whichever slot
+    delivered.  Everything keeps a static shape, so the queue rides in the
+    scan carry exactly like the one-slot buffer.
+    """
+
+    pending_msg: Any
+    pending_aux: Any
+    resid: Any
+    slot_filled: jax.Array   # (queue_depth, n_clients) bool
+    deliver_time: jax.Array  # (queue_depth, n_clients) f32 (+inf = empty)
+    last_synced: jax.Array   # (n_clients,) i32 ledger (-1 = never)
+    vtime: jax.Array         # scalar f32 virtual wall-clock
+    round_idx: jax.Array     # scalar i32 server commit counter
+    clock_key: jax.Array     # PRNG key stream of the clock model
+
+
+def _check_client_axis(msg_spec, aux_spec, n_clients: int) -> None:
+    for name, spec in (("msg", msg_spec), ("aux", aux_spec)):
+        for leaf in jax.tree_util.tree_leaves(spec):
+            if len(leaf.shape) < 1 or leaf.shape[0] != n_clients:
+                raise ValueError(
+                    f"the asynchrony stage requires every {name} leaf to "
+                    f"carry a leading client axis of size {n_clients}; got "
+                    f"shape {tuple(leaf.shape)} (per-client reports cannot "
+                    "be buffered otherwise)")
+
+
+def init_queue_state(msg_spec, aux_spec, n_clients: int, queue_depth: int,
+                     clock_seed: int, start_round: int = 0,
+                     with_resid: bool = False) -> QueueState:
+    """Empty ``queue_depth``-deep report queue: every slot free, so the
+    first scan step enqueues one fresh report per client."""
+    if queue_depth < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+    _check_client_axis(msg_spec, aux_spec, n_clients)
+
+    def zeros(spec, lead=()):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros(lead + tuple(l.shape), l.dtype), spec)
+
+    return QueueState(
+        pending_msg=zeros(msg_spec, (queue_depth,)),
+        pending_aux=zeros(aux_spec, (queue_depth,)),
+        resid=zeros(msg_spec) if with_resid else (),
+        slot_filled=jnp.zeros((queue_depth, n_clients), bool),
+        deliver_time=jnp.full((queue_depth, n_clients), jnp.inf, jnp.float32),
         last_synced=jnp.full((n_clients,), -1, jnp.int32),
         vtime=jnp.zeros((), jnp.float32),
         round_idx=jnp.full((), start_round, jnp.int32),
@@ -208,19 +270,112 @@ def make_async_round(
     n_clients: int,
     staleness: Staleness,
     accepts_active: bool = False,
+    queue_depth: Optional[int] = None,
+    downlink=None,
+    server_fields_fn=None,
 ):
     """Build the async round step the engine scans over.
 
     Returns ``step(state, sched, comm_state, comm_key, batch) ->
     (state, sched, comm_state, comm_key, info)``.
+
+    ``queue_depth=None`` runs the one-slot :class:`AsyncState` buffer (the
+    historical behavior); an explicit depth runs the :class:`QueueState`
+    multi-slot queue (depth 1 reproduces the one-slot trajectory).
+
+    ``downlink`` (a :class:`repro.comm.DownlinkCompressor`) composes the
+    broadcast direction with asynchrony: clients compute against the
+    compressed client-visible shadow state (``server_fields_fn(state)``
+    names the broadcast fields), and every commit re-broadcasts the server
+    innovation through the compressor -- stale clients already hold old
+    references, so the shadow's error feedback composes naturally with the
+    staleness ledger.  With a downlink the step signature gains a trailing
+    ``dl_state``:  ``step(..., batch, dl_state) -> (..., dl_state, info)``.
     """
+    if downlink is not None and server_fields_fn is None:
+        raise ValueError(
+            "downlink compression under asynchrony needs server_fields_fn "
+            "(state -> broadcast field dict) to rebuild the client-visible "
+            "state from the shadow")
     full_buffer = buffer_size == n_clients
     # deterministic transports/clocks ignore their key: skip the per-round
     # threefry splits (measurable on µs-scale rounds)
     tr_stochastic = getattr(transport, "stochastic", True)
     clk_stochastic = getattr(clock, "stochastic", True)
+    dl_stochastic = (downlink is not None
+                     and getattr(downlink.transport, "stochastic", True))
 
-    def step(state, sched: AsyncState, comm_state, comm_key, batch):
+    def split_keys(comm_key):
+        """(next_key, uplink_sub, downlink_sub); no splits when every
+        consumer is deterministic (bitwise: the no-downlink deterministic
+        path must not touch the key stream)."""
+        if not (tr_stochastic or dl_stochastic):
+            return comm_key, comm_key, comm_key
+        if downlink is not None:
+            return tuple(jax.random.split(comm_key, 3))
+        comm_key, sub = jax.random.split(comm_key)
+        return comm_key, sub, sub
+
+    def visible(state, dl_state):
+        """The state clients actually hold: server fields replaced by the
+        downlink shadow (bitwise the true state at compression ratio 1.0)."""
+        if downlink is None:
+            return state
+        return state._replace(**jax.tree_util.tree_map(
+            lambda l: l[0], dl_state["seen"]))
+
+    def commit(state, msg, aux, resid, delivered, age):
+        """Staleness-weighted buffered aggregation of the delivered reports
+        (shared by the one-slot and queued paths; see module docstring for
+        the correction algebra)."""
+        w = jnp.where(delivered, staleness.weights(age), 0.0)
+        if staleness.correct:
+            target = jax.tree_util.tree_map(lambda m, e: m + e, msg, resid)
+            resid = _where_clients(
+                delivered, _scale_msg(target, 1.0 - w), resid)
+            msg_in, norm = target, jnp.float32(1.0)
+        else:
+            msg_in = msg
+            norm = buffer_size / jnp.maximum(jnp.sum(w), 1e-30)
+        if accepts_active:
+            # server's active-mean divides by the delivered count; the
+            # scale turns that into the staleness-weighted mean
+            scaled = _scale_msg(msg_in, w * norm)
+            state, info = server_fn(state, scaled, aux, active=delivered)
+        else:
+            # no active support: fold delivery AND weighting into the
+            # message scale, so the plain mean over all n clients is
+            # the weighted mean over delivered ones
+            scaled = _scale_msg(msg_in, w * norm * (n_clients / buffer_size))
+            state, info = server_fn(state, scaled, aux)
+        return state, info, resid
+
+    def ledger(info, commit_time, delivered, age):
+        info = dict(info)
+        info["vtime"] = commit_time
+        d_age = jnp.where(delivered, age, 0)
+        info["staleness_mean"] = (jnp.sum(d_age).astype(jnp.float32)
+                                  / buffer_size)
+        info["staleness_max"] = jnp.max(d_age).astype(jnp.float32)
+        info["report_age_hist"] = jnp.bincount(
+            jnp.clip(age, 0, AGE_HIST_BUCKETS - 1),
+            weights=delivered.astype(jnp.float32),
+            length=AGE_HIST_BUCKETS)
+        return info
+
+    def rebroadcast(dl_state, state, sub_dl):
+        _, dl_state = downlink.broadcast(dl_state, server_fields_fn(state),
+                                         sub_dl)
+        return dl_state
+
+    if queue_depth is not None:
+        return _make_queued_step(
+            local_fn, server_fn, transport, clock, buffer_size, n_clients,
+            queue_depth, clk_stochastic, split_keys, visible, commit, ledger,
+            downlink, rebroadcast)
+
+    def step(state, sched: AsyncState, comm_state, comm_key, batch,
+             dl_state=None):
         # --- 1. client refresh: everyone who re-synced at the last commit
         # computes its next report from the current broadcast state.  (The
         # simulation evaluates local_fn for all clients -- the vmap'd halves
@@ -228,11 +383,9 @@ def make_async_round(
         # that are still "computing"; their fresh columns are discarded, a
         # simulation-only overcompute that never affects the trajectory.)
         refresh = sched.need_refresh
-        if tr_stochastic:
-            comm_key, sub = jax.random.split(comm_key)
-        else:
-            sub = comm_key
-        msg_new, aux_new = local_fn(state, batch)
+        st_v = visible(state, dl_state)
+        comm_key, sub, sub_dl = split_keys(comm_key)
+        msg_new, aux_new = local_fn(st_v, batch)
         msg_hat, cs_new = transport.compress(comm_state, msg_new, sub)
         if clk_stochastic:
             clock_key, ksub = jax.random.split(sched.clock_key)
@@ -277,59 +430,27 @@ def make_async_round(
             # unscaled server half IS the synchronous round (bitwise; with
             # correction on, w = 1 retains nothing and the residual stays
             # zero, so it is skipped rather than added as an exact zero)
-            state, info = server_fn(state, pending_msg, pending_aux)
+            state, info = server_fn(st_v, pending_msg, pending_aux)
         else:
-            w = jnp.where(delivered, staleness.weights(age), 0.0)
-            if staleness.correct:
-                # --- 3. error feedback on the downweighting: aggregate
-                # w * (delta + e), retain (1 - w) * (delta + e).  The mix
-                # is deliberately unnormalized (see module docstring);
-                # under uniform weights it equals the plain buffered mean.
-                target = jax.tree_util.tree_map(
-                    lambda m, e: m + e, pending_msg, resid)
-                resid = _where_clients(
-                    delivered, _scale_msg(target, 1.0 - w), resid)
-                msg_in, norm = target, jnp.float32(1.0)
-            else:
-                # normalized staleness-weighted mean (FedBuff-style):
-                # scale 1.0 exactly under uniform weights
-                msg_in = pending_msg
-                norm = buffer_size / jnp.maximum(jnp.sum(w), 1e-30)
-            if accepts_active:
-                # server's active-mean divides by the delivered count; the
-                # scale turns that into the staleness-weighted mean
-                scaled = _scale_msg(msg_in, w * norm)
-                state, info = server_fn(state, scaled, pending_aux,
-                                        active=delivered)
-            else:
-                # no active support: fold delivery AND weighting into the
-                # message scale, so the plain mean over all n clients is
-                # the weighted mean over delivered ones
-                scaled = _scale_msg(msg_in, w * norm * (n_clients
-                                                        / buffer_size))
-                state, info = server_fn(state, scaled, pending_aux)
+            # --- 3. staleness weighting (+ optional error feedback on the
+            # downweighting); shared with the queued path
+            state, info, resid = commit(st_v, pending_msg, pending_aux,
+                                        resid, delivered, age)
 
         # --- staleness ledger -> engine metrics
-        info = dict(info)
-        info["vtime"] = commit_time
         if full_buffer:
             # every report is fresh by construction: constant ledger (and
             # no metric consumes the float path, preserving the bitwise
             # contract)
+            info = dict(info)
+            info["vtime"] = commit_time
             info["staleness_mean"] = jnp.float32(0.0)
             info["staleness_max"] = jnp.float32(0.0)
             info["report_age_hist"] = jnp.zeros(
                 (AGE_HIST_BUCKETS,), jnp.float32).at[0].set(buffer_size)
             last_synced = jnp.broadcast_to(sched.round_idx, (n_clients,))
         else:
-            d_age = jnp.where(delivered, age, 0)
-            info["staleness_mean"] = (jnp.sum(d_age).astype(jnp.float32)
-                                      / buffer_size)
-            info["staleness_max"] = jnp.max(d_age).astype(jnp.float32)
-            info["report_age_hist"] = jnp.bincount(
-                jnp.clip(age, 0, AGE_HIST_BUCKETS - 1),
-                weights=delivered.astype(jnp.float32),
-                length=AGE_HIST_BUCKETS)
+            info = ledger(info, commit_time, delivered, age)
             last_synced = jnp.where(delivered, sched.round_idx,
                                     sched.last_synced)
 
@@ -344,6 +465,111 @@ def make_async_round(
             round_idx=sched.round_idx + 1,
             clock_key=clock_key,
         )
+        if downlink is not None:
+            dl_state = rebroadcast(dl_state, state, sub_dl)
+            return state, sched, comm_state, comm_key, dl_state, info
+        return state, sched, comm_state, comm_key, info
+
+    return step
+
+
+def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
+                      n_clients, queue_depth, clk_stochastic, split_keys,
+                      visible, commit, ledger, downlink, rebroadcast):
+    """The multi-slot (:class:`QueueState`) async step; see
+    :func:`make_async_round`.
+
+    Per scan step (one server commit): every client with a free queue slot
+    computes a fresh report against the current (client-visible) state and
+    enqueues it -- clients whose queues are full are blocked, their fresh
+    column is discarded (the same simulation-only overcompute as the
+    one-slot path).  Upload FIFO: a new report cannot arrive before the
+    reports already in flight from the same client.  The server selects the
+    ``buffer_size`` earliest per-client queue *heads* (oldest in-flight
+    report per client), commits, and frees the delivered slots.
+
+    With ``queue_depth=1`` a slot is free exactly when the previous report
+    was delivered, so this reduces to the one-slot ``need_refresh``
+    semantics (pinned in tests/test_stages.py).
+    """
+
+    def step(state, sched: QueueState, comm_state, comm_key, batch,
+             dl_state=None):
+        st_v = visible(state, dl_state)
+        filled = sched.slot_filled
+        # --- 1. enqueue: clients with a free slot compute a fresh report.
+        free = ~jnp.all(filled, axis=0)              # (n,) can enqueue now
+        slot = jnp.argmin(filled, axis=0)            # first free slot (ring)
+        comm_key, sub, sub_dl = split_keys(comm_key)
+        msg_new, aux_new = local_fn(st_v, batch)
+        msg_hat, cs_new = transport.compress(comm_state, msg_new, sub)
+        # only enqueueing clients actually transmitted: everyone else's
+        # error-feedback residual must not advance (telescoping guard)
+        comm_state = _where_clients(free, cs_new, comm_state)
+        if clk_stochastic:
+            clock_key, ksub = jax.random.split(sched.clock_key)
+        else:
+            clock_key = ksub = sched.clock_key
+        dur = clock.durations(ksub, sched.round_idx, n_clients)
+        # FIFO uploads: the new report lands after everything already in
+        # flight from this client (-inf when the queue is empty)
+        busy = jnp.max(jnp.where(filled, sched.deliver_time, -jnp.inf),
+                       axis=0)
+        arrive = jnp.maximum(sched.vtime + dur.astype(jnp.float32), busy)
+        put = (jnp.arange(queue_depth)[:, None] == slot[None, :]) & free
+
+        def enq(buf, new):
+            m = put.reshape(put.shape + (1,) * (buf.ndim - 2))
+            return jnp.where(m, new[None], buf)
+
+        pending_msg = jax.tree_util.tree_map(enq, sched.pending_msg, msg_hat)
+        pending_aux = jax.tree_util.tree_map(enq, sched.pending_aux, aux_new)
+        deliver_time = jnp.where(put, arrive[None], sched.deliver_time)
+        filled = filled | put
+
+        # --- 2. commit: the buffer_size earliest per-client queue heads.
+        # After the enqueue every client has >= 1 in-flight report, so every
+        # head time is finite.
+        t = jnp.where(filled, deliver_time, jnp.inf)
+        head_time = jnp.min(t, axis=0)
+        head_slot = jnp.argmin(t, axis=0)
+        neg_t, idx = jax.lax.top_k(-head_time, buffer_size)
+        commit_time = -neg_t[buffer_size - 1]
+        delivered = jnp.zeros((n_clients,), bool).at[idx].set(True)
+
+        def take_head(buf):
+            sl = head_slot.reshape((1, n_clients) + (1,) * (buf.ndim - 2))
+            return jnp.take_along_axis(buf, sl, axis=0)[0]
+
+        head_msg = jax.tree_util.tree_map(take_head, pending_msg)
+        head_aux = jax.tree_util.tree_map(take_head, pending_aux)
+        birth = head_aux["round"].astype(jnp.int32)
+        age = sched.round_idx - birth
+        state, info, resid = commit(st_v, head_msg, head_aux, sched.resid,
+                                    delivered, age)
+
+        # --- 3. free the delivered heads
+        pop = ((jnp.arange(queue_depth)[:, None] == head_slot[None, :])
+               & delivered)
+        filled = filled & ~pop
+        deliver_time = jnp.where(pop, jnp.inf, deliver_time)
+
+        info = ledger(info, commit_time, delivered, age)
+        sched = QueueState(
+            pending_msg=pending_msg,
+            pending_aux=pending_aux,
+            resid=resid,
+            slot_filled=filled,
+            deliver_time=deliver_time,
+            last_synced=jnp.where(delivered, sched.round_idx,
+                                  sched.last_synced),
+            vtime=commit_time,
+            round_idx=sched.round_idx + 1,
+            clock_key=clock_key,
+        )
+        if downlink is not None:
+            dl_state = rebroadcast(dl_state, state, sub_dl)
+            return state, sched, comm_state, comm_key, dl_state, info
         return state, sched, comm_state, comm_key, info
 
     return step

@@ -1,9 +1,9 @@
 """Virtual-time client clock models for the simulated-asynchrony subsystem.
 
 A :class:`ClockModel` maps ``(key, round_idx, n_clients)`` to the virtual
-duration each client needs for the local round it starts now.  The async
-engine backend (:mod:`repro.exec`, ``backend="async"``) threads these
-durations through its ``lax.scan`` carry: a client that syncs at virtual
+duration each client needs for the local round it starts now.  The
+engine's Asynchrony stage (:mod:`repro.exec`, ``EngineConfig(clock=...)``)
+threads these durations through its ``lax.scan`` carry: a client that syncs at virtual
 time ``T`` delivers its report at ``T + duration``, and the server commits
 once ``buffer_size`` reports have arrived.  Durations therefore control
 *which* reports are stale and by how much, but never the round math itself.

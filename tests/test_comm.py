@@ -460,10 +460,12 @@ def test_broadcast_elements_and_downlink_bytes():
                         "b": jnp.zeros((), jnp.float32)}}
     assert broadcast_elements(fields) == 11
     assert DownlinkCompressor(Dense()).downlink_bytes(fields) == 11 * 4
-    with pytest.raises(ValueError, match="only honored"):
-        EngineConfig(backend="inline", downlink=Dense()).validate()
-    with pytest.raises(ValueError, match="only honored"):
-        EngineConfig(backend="async", downlink=Dense()).validate()
+    # since the stage refactor, downlink= activates the DownlinkComm stage
+    # anywhere (it composes with asynchrony instead of being rejected)
+    stack = EngineConfig(downlink=Dense()).resolve()
+    assert stack.downlink is not None and stack.uplink is not None
+    stack = EngineConfig(downlink=Dense(), clock="straggler").resolve()
+    assert stack.downlink is not None and stack.asynchrony is not None
 
 
 def test_compressed_requires_split_and_jit():
@@ -481,6 +483,6 @@ def test_compressed_requires_split_and_jit():
         EngineConfig(backend="compressed", jit=False).validate()
     with pytest.raises(ValueError, match="Transport"):
         EngineConfig(backend="compressed", transport=object()).validate()
-    # a transport on any other backend would be silently ignored -> reject
-    with pytest.raises(ValueError, match="only honored"):
-        EngineConfig(backend="inline", transport=Dense()).validate()
+    # since the stage refactor a bare transport= activates the UplinkComm
+    # stage (the old inline-backend rejection is gone)
+    assert EngineConfig(transport=Dense()).resolve().uplink is not None

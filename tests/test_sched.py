@@ -369,18 +369,22 @@ def test_all_algorithms_run_async(alg_factory, partial):
 # ---------------------------------------------------------------------------
 
 
-def test_async_only_options_rejected_on_other_backends():
-    """Mirrors the transport-on-wrong-backend guard: silently ignoring a
-    clock/buffer/staleness option would mask typos."""
+def test_async_options_activate_the_asynchrony_stage():
+    """Since the stage refactor, setting any asynchrony knob activates the
+    stage -- no backend string needed, and it composes with the other
+    stages instead of being rejected.  Only the non-composable protocol
+    mode still refuses them."""
     for kw in (dict(clock="straggler"), dict(clock=StragglerClock()),
                dict(buffer_size=4), dict(staleness="poly"),
-               dict(staleness=Staleness())):
-        with pytest.raises(ValueError, match="only honored by "
-                                             "backend='async'"):
-            EngineConfig(**kw).validate()
-        with pytest.raises(ValueError, match="only honored"):
-            EngineConfig(backend="compressed", **kw).validate()
-        EngineConfig(backend="async", **kw).validate()  # and accepted there
+               dict(staleness=Staleness()), dict(queue_depth=2)):
+        stack = EngineConfig(**kw).resolve()
+        assert stack.asynchrony is not None
+        assert stack.uplink is not None  # the split always has a transport
+        # and it stacks with an explicit transport (the old error case)
+        stack = EngineConfig(transport=TopK(ratio=0.5), **kw).resolve()
+        assert stack.asynchrony is not None and stack.uplink is not None
+        with pytest.raises(ValueError, match="protocol"):
+            EngineConfig(protocol=True, **kw).validate()
 
 
 def test_async_config_validation():
