@@ -124,6 +124,25 @@ def main():
             emit(f"comm/{tag}/dprox+{tr.name}/downlink_bytes_per_round", 0.0,
                  DownlinkCompressor(tr).downlink_bytes(broadcast))
 
+    # leaf vs GLOBAL granularity on a realistic multi-leaf message (the
+    # CNN's actual layer structure): global compresses the flat d-vector,
+    # so the index stream / quantizer scale is accounted ONCE instead of
+    # per leaf -- the per-leaf overhead the flat-plane refactor removes.
+    cnn_msg = {"conv1": jnp.zeros((1, 5, 5, 1, 32), jnp.float32),
+               "conv2": jnp.zeros((1, 5, 5, 32, 64), jnp.float32),
+               "dense": jnp.zeros((1, 1600, 64), jnp.float32),
+               "head": jnp.zeros((1, 64, 10), jnp.float32),
+               "biases": jnp.zeros((1, 170), jnp.float32)}
+    for leaf_tr, glob_tr in [
+        (TopK(ratio=0.1), TopK(ratio=0.1, granularity="global")),
+        (Quantize(bits=8), Quantize(bits=8, granularity="global")),
+    ]:
+        up_l = leaf_tr.uplink_bytes(cnn_msg)
+        up_g = glob_tr.uplink_bytes(cnn_msg)
+        emit(f"comm/cnn5leaf/dprox+{leaf_tr.name}/leaf_bytes", 0.0, up_l)
+        emit(f"comm/cnn5leaf/dprox+{leaf_tr.name}/global_bytes", 0.0,
+             f"{up_g},saves={up_l - up_g}")
+
     # composed configuration: asynchrony stacked on uplink AND downlink
     # compression.  Under buffered asynchrony only the buffer_size clients
     # that re-sync per commit upload a report and pull a broadcast, so the

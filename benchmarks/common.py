@@ -49,7 +49,8 @@ def logreg_problem(n_clients=30, m=100, d=20, alpha=50.0, beta=50.0, seed=0,
 def make_engine(algorithm, grad_fn, n_clients, *, chunk_rounds=16,
                 participation=None, jit=True, transport=None, downlink=None,
                 clock=None, buffer_size=None, staleness=None,
-                queue_depth=None, mesh=None, param_specs=None, plan="A"):
+                queue_depth=None, mesh=None, param_specs=None, plan="A",
+                plane=False):
     """RoundEngine with benchmark defaults (chunked, no stages).
 
     Benchmarks that drive the engine directly (exec_bench, sched_sweep)
@@ -68,7 +69,7 @@ def make_engine(algorithm, grad_fn, n_clients, *, chunk_rounds=16,
                      transport=transport, downlink=downlink, clock=clock,
                      buffer_size=buffer_size, staleness=staleness,
                      queue_depth=queue_depth, mesh=mesh,
-                     param_specs=param_specs, plan=plan))
+                     param_specs=param_specs, plan=plan, plane=plane))
 
 
 class Timer:

@@ -20,6 +20,13 @@ Experiments on the paper's sparse-logreg problem (tau=10):
     transport: the overhead of the local/server split + identity compressor)
     and with top-k 10% (sparsified uplink; derived column = uplink
     bytes/client/round).
+  * ``exec/plane_*`` / ``exec/perleaf_*`` -- the flat-parameter-plane carry
+    layout (``EngineConfig(plane=True)``) vs the per-leaf pytree layout,
+    paired per configuration in the same process: identical math at leaf
+    granularity (bitwise, tests/test_plane.py), plus the global-top-k row
+    (ONE selection over the d-vector instead of one per leaf) and a
+    plane-under-queue async row.  The acceptance bar is the plane
+    compressed row at parity or better vs its per-leaf twin.
   * ``exec/async_*``       -- the Asynchrony stage at equal work: zero-delay
     deterministic clock + full buffer (trajectory-identical to the bare
     engine, so the ratio isolates the buffered-aggregation overhead: clock
@@ -145,6 +152,61 @@ def bench_compressed(alg, grad_fn, data, params0, rounds, tau) -> None:
                f"{engine.uplink_bytes_per_client_round}B/client")
 
 
+def bench_plane(alg, grad_fn, data, params0, rounds, tau) -> None:
+    """Flat-plane carries (EngineConfig(plane=True)) vs the per-leaf layout.
+
+    Pairs each plane row with its per-leaf twin timed in the same process
+    (same machine state), so the ratio isolates the layout: identical math
+    for ``plane_*`` vs ``perleaf_*`` at leaf granularity (pinned bitwise in
+    tests/test_plane.py), and the global-granularity row additionally
+    replaces N per-leaf top-k reductions with ONE selection over the
+    d-vector.  The async row stacks the plane under the report queue (flat
+    (depth, clients, d_pad) buffers in the scan carry).
+    """
+    from repro.comm import TopK
+    from repro.exec import ArraySupplier
+    from repro.sched import Staleness, StragglerClock
+
+    chunk = 32
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    asyn = dict(clock=StragglerClock(slowdown=4.0),
+                buffer_size=data.n_clients // 2,
+                staleness=Staleness("poly", correct=True), queue_depth=2)
+    cases = [
+        ("topk10", dict(transport=TopK(ratio=0.1))),
+        ("topk10_global",
+         dict(transport=TopK(ratio=0.1, granularity="global"))),
+        ("async_topk10_queue2", dict(transport=TopK(ratio=0.1), **asyn)),
+    ]
+    for name, kw in cases:
+        # the box's us/round drifts between runs, so the paired layouts are
+        # measured INTERLEAVED (perleaf rep, plane rep, ...) and best-of-6:
+        # both layouts see the same thermal/neighbor conditions and the
+        # ratio isolates the layout instead of the drift
+        runners = {}
+        for layout in ("perleaf", "plane"):
+            engine = make_engine(alg, grad_fn, data.n_clients,
+                                 chunk_rounds=chunk, plane=layout == "plane",
+                                 **kw)
+            state = engine.init(params0)
+            state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
+            runners[layout] = (engine, state)
+            bytes_ = engine.uplink_bytes_per_client_round
+        times = {layout: float("inf") for layout in runners}
+        for _ in range(6):
+            for layout, (engine, state) in runners.items():
+                with Timer() as t:
+                    st, metrics = engine.run(state, sup, rounds, seed=2)
+                assert len(metrics["train_loss"]) == rounds
+                runners[layout] = (engine, st)
+                times[layout] = min(times[layout],
+                                    t.seconds / rounds * 1e6)
+        for layout, best in times.items():
+            record(f"exec/{layout}_{name}", best,
+                   f"{times['perleaf'] / best:.2f}x_vs_perleaf,{bytes_}"
+                   "B/client")
+
+
 def bench_async(alg, grad_fn, data, params0, rounds, tau) -> None:
     import numpy as np
 
@@ -225,6 +287,7 @@ def main(argv=None) -> None:
     bench_chunking(alg, grad_fn, data, params0, rounds, tau)
     bench_suppliers(alg, grad_fn, data, params0, rounds, tau)
     bench_compressed(alg, grad_fn, data, params0, rounds, tau)
+    bench_plane(alg, grad_fn, data, params0, rounds, tau)
     bench_async(alg, grad_fn, data, params0, rounds, tau)
 
     if args.dry:

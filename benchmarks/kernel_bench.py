@@ -1,20 +1,31 @@
 """Kernel micro-benchmarks.
 
 On this CPU-only container the Pallas kernels run in interpret mode (validated
-for correctness in tests/test_kernels.py); wall-clock there is meaningless.
-What we CAN measure honestly on CPU is the fusion effect at the XLA level:
-the fused jnp expression (what the Pallas kernel computes in one pass) vs the
-naive four-pass formulation, plus the analytic HBM-traffic model for TPU:
+for correctness in tests/test_kernels.py and tests/test_plane.py); wall-clock
+there is meaningless.  What we CAN measure honestly on CPU is the fusion
+effect at the XLA level: the fused jnp expression (what the Pallas kernel
+computes in one pass) vs the naive multi-pass formulation, plus the analytic
+HBM-traffic model for TPU:
 
     unfused passes:  read zh,g,c, write tmp; read tmp, write zh'; read zh',
                      write |.|-thresh; read, write z'   ->  ~9 tensor moves
     fused kernel:    read zh,g,c; write zh', z'         ->   5 tensor moves
 
-We also time flash-vs-naive attention at a 4k sequence (fp32, CPU) where the
+The flat-plane section measures the layout effect the plane refactor is
+about: ONE fused op over a contiguous (clients, d_pad) buffer vs the same
+math issued per pytree leaf (global-top-k select, quantize, the
+staleness-weighted commit), and smoke-runs the actual Pallas plane kernels
+in interpret mode on tiny shapes so a kernel regression fails CI loudly.
+
+We also time flash-vs-naive attention at a 2k sequence (fp32, CPU) where the
 O(S^2) logits materialization already dominates.
+
+``--dry`` shrinks every experiment to CI-smoke size (the bench-smoke job
+runs it next to exec_bench --dry).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -25,7 +36,6 @@ from benchmarks.common import emit
 
 
 def _bench(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
     out = fn(*args)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
@@ -35,9 +45,9 @@ def _bench(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main():
-    # --- fused prox update ---------------------------------------------------
-    n = 4_000_000
+def bench_fused_prox(dry: bool) -> None:
+    n = 200_000 if dry else 4_000_000
+    iters = 3 if dry else 20
     rng = np.random.default_rng(0)
     zh = jnp.asarray(rng.normal(size=n), jnp.float32)
     g = jnp.asarray(rng.normal(size=n), jnp.float32)
@@ -57,14 +67,89 @@ def main():
         clipped = jnp.maximum(mag, 0.0)
         return upd, jnp.sign(upd) * clipped
 
-    us_f = _bench(fused, zh, g, c)
-    us_u = _bench(unfused, zh, g, c)
-    emit("kernel/fused_prox/fused_4M_f32", us_f, f"speedup={us_u/us_f:.2f}x")
-    emit("kernel/fused_prox/unfused_4M_f32", us_u, "")
+    us_f = _bench(fused, zh, g, c, iters=iters)
+    us_u = _bench(unfused, zh, g, c, iters=iters)
+    tag = "200k" if dry else "4M"
+    emit(f"kernel/fused_prox/fused_{tag}_f32", us_f,
+         f"speedup={us_u/us_f:.2f}x")
+    emit(f"kernel/fused_prox/unfused_{tag}_f32", us_u, "")
     emit("kernel/fused_prox/hbm_moves", 0.0, "fused=5,unfused=9")
 
-    # --- flash vs naive attention (CPU, fp32, S=2048) -----------------------
-    b, h, s, d = 1, 4, 2048, 64
+
+def bench_plane_kernels(dry: bool) -> None:
+    """One fused op over the (clients, d_pad) plane vs per-leaf issue."""
+    from repro.kernels import ops, ref
+
+    n_clients = 8 if dry else 30
+    d = 2_048 if dry else 262_144  # per-leaf split below
+    iters = 3 if dry else 20
+    n_leaves = 16
+    rng = np.random.default_rng(1)
+    plane = jnp.asarray(rng.normal(size=(n_clients, d)), jnp.float32)
+    leaves = [plane[:, i * (d // n_leaves):(i + 1) * (d // n_leaves)]
+              for i in range(n_leaves)]
+    k = max(1, d // 10)
+
+    @jax.jit
+    def topk_plane(x):
+        kth = jax.lax.top_k(jnp.abs(x), k)[0][:, -1]
+        return ref.plane_threshold_select(x, kth)
+
+    @jax.jit
+    def topk_per_leaf(ls):
+        out = []
+        for x in ls:
+            kk = max(1, x.shape[1] // 10)
+            kth = jax.lax.top_k(jnp.abs(x), kk)[0][:, -1:]
+            out.append(jnp.where(jnp.abs(x) >= kth, x, 0))
+        return out
+
+    us_p = _bench(topk_plane, plane, iters=iters)
+    us_l = _bench(topk_per_leaf, leaves, iters=iters)
+    emit("kernel/plane/topk_select_global", us_p,
+         f"speedup={us_l/us_p:.2f}x_vs_16_leaves")
+    emit("kernel/plane/topk_select_per_leaf", us_l, "")
+
+    w = jnp.asarray(rng.uniform(size=n_clients), jnp.float32)
+    commit_plane = jax.jit(lambda b, w: ref.plane_weighted_commit(b, w))
+
+    @jax.jit
+    def commit_per_leaf(ls, w):
+        return [jnp.sum(x * w[:, None], axis=0) for x in ls]
+
+    us_p = _bench(commit_plane, plane, w, iters=iters)
+    us_l = _bench(commit_per_leaf, leaves, w, iters=iters)
+    emit("kernel/plane/weighted_commit", us_p,
+         f"speedup={us_l/us_p:.2f}x_vs_16_leaves")
+
+    # interpret-mode smoke of the real Pallas plane kernels (tiny shapes:
+    # correctness/regression guard, not a timing)
+    tiny = jnp.asarray(rng.normal(size=(4, 256)), jnp.float32)
+    th = jnp.asarray(np.abs(rng.normal(size=4)), jnp.float32)
+    got = ops.plane_threshold_select(tiny, th, interpret=True, block_rows=1)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.plane_threshold_select(
+                                      tiny, th)))
+    u = jnp.asarray(rng.uniform(size=(4, 256)), jnp.float32)
+    s = jnp.max(jnp.abs(tiny), axis=1)
+    got = ops.plane_quantize(tiny, u, s, 255, interpret=True, block_rows=1)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.plane_quantize(tiny, u, s,
+                                                             255)),
+                               atol=1e-6)
+    got = ops.plane_weighted_commit(tiny, th, interpret=True, block_rows=1)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.plane_weighted_commit(tiny,
+                                                                    th)),
+                               rtol=1e-5, atol=1e-6)
+    emit("kernel/plane/pallas_status", 0.0,
+         "interpret-validated;see tests/test_plane.py")
+
+
+def bench_attention(dry: bool) -> None:
+    b, h, s, d = 1, 4, (512 if dry else 2048), 64
+    iters = 2 if dry else 5
+    rng = np.random.default_rng(2)
     q = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.3, jnp.float32)
     k = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.3, jnp.float32)
     v = jnp.asarray(rng.normal(size=(b, h, s, d)) * 0.3, jnp.float32)
@@ -75,7 +160,7 @@ def main():
     @jax.jit
     def blocked(q, k, v):
         # the flash recurrence expressed in jnp (the kernel's memory shape)
-        bq = 256
+        bq = 256 if s % 256 == 0 else 128
         nq = s // bq
 
         def one_block(i):
@@ -89,12 +174,22 @@ def main():
 
         return jnp.concatenate([one_block(i) for i in range(nq)], axis=2)
 
-    us_n = _bench(naive, q, k, v, iters=5)
-    us_b = _bench(blocked, q, k, v, iters=5)
-    emit("kernel/attention/naive_s2048", us_n, "")
-    emit("kernel/attention/blocked_s2048", us_b, f"speedup={us_n/us_b:.2f}x")
+    us_n = _bench(naive, q, k, v, iters=iters)
+    us_b = _bench(blocked, q, k, v, iters=iters)
+    emit(f"kernel/attention/naive_s{s}", us_n, "")
+    emit(f"kernel/attention/blocked_s{s}", us_b, f"speedup={us_n/us_b:.2f}x")
     emit("kernel/attention/pallas_status", 0.0,
          "interpret-validated;see tests/test_kernels.py")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke mode: tiny shapes, few iterations")
+    args = ap.parse_args(argv)
+    bench_fused_prox(args.dry)
+    bench_plane_kernels(args.dry)
+    bench_attention(args.dry)
 
 
 if __name__ == "__main__":

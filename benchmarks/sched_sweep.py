@@ -14,8 +14,15 @@ straggler-mixture clock -- and reports, per configuration:
     even as staleness grows -- the throughput/accuracy trade the subsystem
     exists to explore).
 
+The second block sweeps the queue-aware two-stream clock
+(``ClockModel(upload=...)``): compute time is held fixed while per-report
+upload time grows, under a depth-2 report queue where uploads serialize
+FIFO -- the upload-bandwidth-limited regime.  ``upload=0`` is bitwise the
+single-stream clock (the reference row).
+
 Emits CSV lines ``sched/<clock>/buf<K>/<policy>,us_per_round,
-opt=...,age=...,vtime=...``.
+opt=...,age=...,vtime=...`` (the upload block appends ``/up<T>`` to the
+name).
 """
 from __future__ import annotations
 
@@ -51,19 +58,30 @@ def main() -> None:
              Staleness("poly", correct=True)),
         ]
 
-    for policy, clock, buf, stale in cases:
+    def run_case(name, clock, buf, stale, **kw):
         engine = make_engine(alg, grad_fn, n,
                              chunk_rounds=25, clock=clock, buffer_size=buf,
-                             staleness=stale)
+                             staleness=stale, **kw)
         state = engine.init(params0)
         with Timer() as t:
             state, m = engine.run(state, sup, rounds, seed=2)
         x = engine.global_params(state)
         opt = float(prox_gradient_norm(reg, full_g, x, eta_tilde)) / g0
-        emit(f"sched/{clock.name}/buf{buf}/{policy}",
-             t.seconds / rounds * 1e6,
+        emit(name, t.seconds / rounds * 1e6,
              f"opt={opt:.3e},age={np.mean(m['staleness_mean']):.2f},"
              f"vtime={m['vtime'][-1]:.0f}")
+
+    for policy, clock, buf, stale in cases:
+        run_case(f"sched/{clock.name}/buf{buf}/{policy}", clock, buf, stale)
+
+    # --- upload-bandwidth-limited block: split compute/upload streams under
+    # a depth-2 report queue (uploads serialize FIFO; upload=0 is bitwise
+    # the single-stream clock above)
+    for upload in (0.0, 1.0, 4.0):
+        clock = StragglerClock(slowdown=4.0, upload=upload)
+        run_case(f"sched/{clock.name}/buf{n // 2}/poly_corr/up{upload:g}",
+                 clock, n // 2, Staleness("poly", correct=True),
+                 queue_depth=2)
 
 
 if __name__ == "__main__":

@@ -115,12 +115,46 @@ print(f"    virtual time {m['vtime'][-1]:.0f} (sync would wait "
       f"{np.mean(m['staleness_mean']):.2f} rounds "
       "<- commits without waiting for stragglers")
 
+# --- the flat parameter plane: the paper's communication object is ONE
+# d-dimensional vector per client per round, and plane=True makes the
+# engine carry exactly that (repro.core.plane).  What is FLAT: the uplink
+# message between the local/server halves, the compressor error-feedback
+# residual, and the async report buffers -- each one contiguous
+# (clients, d_pad) buffer in the scan carry.  What is a VIEW: the pytree
+# the algorithm math sees (cheap slices/reshapes XLA fuses away).  At leaf
+# granularity the plane layout is BITWISE the per-leaf layout
+# (tests/test_plane.py pins every stage combination); granularity="global"
+# then upgrades top-k to select over the WHOLE d-vector -- at the same
+# ratio it keeps more message energy and fewer wire bytes, because the
+# index stream is accounted once instead of per leaf, which is why
+# uplink_bytes_per_client_round changes when you flip granularity.
+# Tiny-d caveat, visible below: per-leaf top-k guarantees k >= 1 PER LEAF
+# (here: the bias always ships), so on this d=21 toy it converges further
+# while global top-k spends its whole k=5 budget on w and lets the bias
+# ride the error-feedback queue -- a higher floor for fewer bytes.  At
+# realistic d the budget dwarfs the per-leaf floors and global selection
+# strictly dominates (tests/test_plane.py pins the energy ordering).
+engine = RoundEngine(ours, grad_fn, 30,
+                     EngineConfig(chunk_rounds=16, plane=True,
+                                  transport=TopK(ratio=0.25,
+                                                 granularity="global")))
+h = run(ours, params0, grad_fn, supplier, 30, R,
+        reg=reg, eta_tilde=eta_tilde, full_grad_fn=full_g,
+        eval_every=R // 8, engine=engine)
+msg_spec = {"w": jax.ShapeDtypeStruct((30, 20), np.float64),
+            "b": jax.ShapeDtypeStruct((30,), np.float64)}
+print(" dprox + GLOBAL top-k 25% on the flat plane "
+      f"({engine.uplink_bytes_per_client_round} B/client/round vs "
+      f"{TopK(ratio=0.25).uplink_bytes(msg_spec)} per-leaf):")
+print("   ", " ".join(f"{v:.1e}" for v in h.optimality),
+      " <- one d-vector end to end; fewer bytes, tiny-d floor (see comment)")
+
 # --- stages compose: the SAME run with compressed uplinks AND broadcast
 # AND asynchronous clients AND a depth-2 report queue (clients race ahead
-# of their uploads), all in one compiled scan -- the configurations the
-# retired backend enum made mutually exclusive.
+# of their uploads) AND flat-plane carries, all in one compiled scan --
+# the configurations the retired backend enum made mutually exclusive.
 engine = RoundEngine(ours, grad_fn, 30,
-                     EngineConfig(chunk_rounds=16,
+                     EngineConfig(chunk_rounds=16, plane=True,
                                   transport=TopK(ratio=0.25),
                                   downlink=TopK(ratio=0.25),
                                   clock=StragglerClock(slowdown=4.0),
@@ -131,7 +165,7 @@ state = engine.init(params0)
 state, m = engine.run(state, supplier, 1000, seed=0)
 opt = float(prox_gradient_norm(reg, full_g, engine.global_params(state),
                                eta_tilde))
-print(f" dprox async + top-k 25% uplink + downlink + queue 2 "
+print(f" dprox async + top-k 25% uplink + downlink + queue 2, on the plane "
       f"(stages: {', '.join(engine.stack.names())}):")
 print(f"    prox-gradient norm {opt:.1e}, "
       f"uplink {engine.uplink_bytes_per_client_round} B/client/round, "

@@ -21,12 +21,13 @@ that exchange a first-class, swappable layer:
     total wire bytes shrink in both directions
     (``EngineConfig(downlink=...)``).
 """
-from repro.comm.transport import (Dense, DownlinkCompressor, Quantize, RandK,
-                                  TopK, Transport, broadcast_elements,
+from repro.comm.transport import (GRANULARITIES, Dense, DownlinkCompressor,
+                                  PlaneTransport, Quantize, RandK, TopK,
+                                  Transport, broadcast_elements,
                                   get_transport, message_elements_per_client,
                                   uplink_message_spec)
 
 __all__ = ["Transport", "Dense", "TopK", "RandK", "Quantize",
-           "DownlinkCompressor", "get_transport",
-           "message_elements_per_client", "uplink_message_spec",
-           "broadcast_elements"]
+           "DownlinkCompressor", "PlaneTransport", "GRANULARITIES",
+           "get_transport", "message_elements_per_client",
+           "uplink_message_spec", "broadcast_elements"]

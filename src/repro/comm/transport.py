@@ -31,11 +31,34 @@ so the telescoping identity  sum_t m_hat_t = sum_t m_t - e_T  holds exactly
 and the long-run average uplink is undistorted.  ``tests/test_comm.py`` pins
 these contracts.
 
-Compression is applied per client and per message leaf (leaves are flattened
-to ``(n_clients, d_leaf)``), so the same transport works for any parameter
-pytree.  ``uplink_bytes`` reports the per-client wire cost of one message --
-values plus indices for sparsifiers, packed levels plus a scale for the
-quantizer -- which benchmarks/comm_table.py uses instead of hand-maintained
+Compression **granularity** (the flat-plane refactor): historically every
+transport compressed per client and per message leaf (leaves flattened to
+``(n_clients, d_leaf)``), which is statistically weaker -- top-k selects k
+coordinates *per leaf* instead of the k globally largest -- and pays
+per-leaf byte overhead (one index set / one quantizer scale per leaf).  The
+paper's object is the single d-dimensional vector, so the sparsifying /
+quantizing transports now take ``granularity="leaf" | "global"``:
+
+  * ``"leaf"`` (default) -- the historical per-leaf semantics, bitwise
+    unchanged (existing parity tests pin it);
+  * ``"global"`` -- the client's whole message is flattened onto one
+    contiguous plane (:mod:`repro.core.plane`) and compressed as a single
+    d-vector: top-k selects the k globally largest magnitudes, rand-k draws
+    one index set, quantization uses ONE scale per client, and
+    ``uplink_bytes`` accounts index/scale overhead once instead of per
+    leaf.  On TPU the select/quantize passes run as fused Pallas kernels
+    over the plane (:mod:`repro.kernels.plane_ops`).
+
+Every transport also exposes the plane-side surface the engine's flat
+carry uses (``EngineConfig(plane=True)``): ``apply_plane`` /
+``compress_plane`` operate directly on ``(n_clients, d_pad)`` buffers with
+a *flat* error-feedback state, via :class:`PlaneTransport`.  For
+leaf-granularity transports the plane path routes through cheap
+pytree views, so it is bitwise the per-leaf path.
+
+``uplink_bytes`` reports the per-client wire cost of one message -- values
+plus indices for sparsifiers, packed levels plus scale(s) for the quantizer
+-- which benchmarks/comm_table.py uses instead of hand-maintained
 constants.
 """
 from __future__ import annotations
@@ -46,9 +69,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import plane as pln
 from repro.utils import tree as tu
 
 Message = Any  # pytree whose leaves have a leading client axis
+
+GRANULARITIES = ("leaf", "global")
 
 
 def _k_of(ratio: float, d: int) -> int:
@@ -70,6 +96,29 @@ def message_elements_per_client(msg_template) -> int:
     return sum(_leaf_elements(l) for l in jax.tree_util.tree_leaves(msg_template))
 
 
+def _global_dims(msg_template) -> tuple[int, int]:
+    """(total d per client, itemsize) of a message compressed globally.
+
+    Global granularity compresses one contiguous plane, so the message must
+    be single-dtype (the same constraint :class:`repro.core.plane.SegmentSpec`
+    enforces); raises otherwise.
+    """
+    leaves = jax.tree_util.tree_leaves(msg_template)
+    dtypes = {jnp.dtype(l.dtype) for l in leaves}
+    if len(dtypes) != 1:
+        raise ValueError(
+            "granularity='global' compresses one contiguous plane and "
+            f"needs a single-dtype message; got {sorted(d.name for d in dtypes)}")
+    return (sum(_leaf_elements(l) for l in leaves),
+            dtypes.pop().itemsize)
+
+
+def _check_granularity(granularity: str) -> None:
+    if granularity not in GRANULARITIES:
+        raise ValueError(f"granularity must be one of {GRANULARITIES}, got "
+                         f"{granularity!r}")
+
+
 class Transport:
     """Interface: ``init_state`` -> per-run compressor state (error-feedback
     residuals, or an empty pytree), ``compress`` -> (what the server receives,
@@ -87,6 +136,8 @@ class Transport:
         return jax.tree_util.tree_map(
             lambda l: jnp.zeros(tuple(l.shape), l.dtype), msg_template)
 
+    granularity: str = "leaf"
+
     def compress(self, comm_state, msg: Message, key) -> tuple[Message, Any]:
         target = tu.tree_add(comm_state, msg) if self.error_feedback else msg
         msg_hat = self.apply(target, key)
@@ -95,7 +146,43 @@ class Transport:
         return msg_hat, new_state
 
     def apply(self, msg: Message, key) -> Message:
+        if self.granularity == "global":
+            spec = pln.SegmentSpec.from_tree(msg, batch_dims=1)
+            return pln.unflatten(
+                spec, self.apply_flat(pln.flatten(spec, msg), key, spec))
+        return self.apply_leaf(msg, key)
+
+    def apply_leaf(self, msg: Message, key) -> Message:
+        """The historical per-(client, leaf) compression."""
         raise NotImplementedError
+
+    def apply_flat(self, flat, key, spec: "pln.SegmentSpec"):
+        """Global compression of the (n_clients, d_pad) plane (valid region
+        ``spec.d``; the zero padding must stay zero)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no global-granularity form")
+
+    # -- the flat-plane surface (EngineConfig(plane=True)) -----------------
+
+    def apply_plane(self, flat, key, spec: "pln.SegmentSpec"):
+        """``apply`` on a (n_clients, d_pad) plane.  Global granularity
+        runs directly on the plane (one fused pass); leaf granularity
+        routes through pytree views, so it is bitwise the per-leaf path."""
+        if self.granularity == "global":
+            return self.apply_flat(flat, key, spec)
+        return pln.flatten(spec, self.apply_leaf(pln.unflatten(spec, flat),
+                                                 key))
+
+    def compress_plane(self, comm_state, flat, key,
+                       spec: "pln.SegmentSpec"):
+        """``compress`` with a flat (n_clients, d_pad) error-feedback
+        buffer -- ONE residual for the whole message instead of one per
+        leaf.  Elementwise-identical (bitwise) to :meth:`compress` on the
+        pytree view."""
+        target = comm_state + flat if self.error_feedback else flat
+        hat = self.apply_plane(target, key, spec)
+        new_state = (target - hat) if self.error_feedback else comm_state
+        return hat, new_state
 
     def uplink_bytes(self, msg_template) -> int:
         """Bytes on the wire per client per round for this message."""
@@ -112,6 +199,9 @@ class Dense(Transport):
     def apply(self, msg, key):
         return msg
 
+    def apply_plane(self, flat, key, spec):
+        return flat
+
     def uplink_bytes(self, msg_template):
         return sum(_leaf_elements(l) * jnp.dtype(l.dtype).itemsize
                    for l in jax.tree_util.tree_leaves(msg_template))
@@ -120,14 +210,22 @@ class Dense(Transport):
 @dataclass(frozen=True)
 class TopK(Transport):
     """Keep the ``ratio`` fraction of largest-magnitude coordinates per
-    client per leaf.  Biased but a contraction; error feedback recovers the
-    dropped mass over rounds.  ``ratio=1.0`` is exactly the identity."""
+    client -- per leaf (``granularity="leaf"``, the historical default) or
+    over the client's whole flattened message (``granularity="global"``,
+    the paper's d-vector semantics: the k *globally* largest coordinates
+    survive, and the index bytes are accounted once).  Biased but a
+    contraction; error feedback recovers the dropped mass over rounds.
+    ``ratio=1.0`` is exactly the identity in both granularities."""
 
     ratio: float = 0.1
     error_feedback: bool = True
+    granularity: str = "leaf"
     name: str = "topk"
 
-    def apply(self, msg, key):
+    def __post_init__(self):
+        _check_granularity(self.granularity)
+
+    def apply_leaf(self, msg, key):
         def one(x):
             flat = x.reshape(x.shape[0], -1)
             d = flat.shape[1]
@@ -140,7 +238,26 @@ class TopK(Transport):
 
         return jax.tree_util.tree_map(one, msg)
 
+    def apply_flat(self, flat, key, spec):
+        k = _k_of(self.ratio, spec.d)
+        if k >= spec.d:
+            return flat
+        mag = jnp.abs(flat)
+        # the k-th magnitude over the padded plane equals the k-th over the
+        # valid region (padding is zero and k <= d), so no masking is needed
+        # and selected padding zeros stay zero
+        kth = jax.lax.top_k(mag, k)[0][:, -1]
+        from repro.kernels import ops as kops
+
+        if kops._on_tpu():
+            # fused select+scatter pass over the tiled plane
+            return kops.plane_threshold_select(flat, kth)
+        return jnp.where(mag >= kth[:, None], flat, 0)
+
     def uplink_bytes(self, msg_template):
+        if self.granularity == "global":
+            d, itemsize = _global_dims(msg_template)
+            return _k_of(self.ratio, d) * (itemsize + 4)  # value + int32 idx
         total = 0
         for l in jax.tree_util.tree_leaves(msg_template):
             d = _leaf_elements(l)
@@ -157,14 +274,33 @@ class RandK(Transport):
     ratio: float = 0.1
     error_feedback: bool = True
     rescale: bool = True
+    granularity: str = "leaf"
     name: str = "randk"
     stochastic: bool = True
 
-    def apply(self, msg, key):
+    def __post_init__(self):
+        _check_granularity(self.granularity)
+
+    def apply_leaf(self, msg, key):
         leaves, treedef = jax.tree_util.tree_flatten(msg)
         keys = jax.random.split(key, len(leaves))
         return jax.tree_util.tree_unflatten(
             treedef, [self._one(x, k) for x, k in zip(leaves, keys)])
+
+    def apply_flat(self, flat, key, spec):
+        n = flat.shape[0]
+        k = _k_of(self.ratio, spec.d)
+        if k >= spec.d:
+            return flat
+
+        def row_mask(ki):
+            # indices drawn over the VALID region only: padding stays zero
+            idx = jax.random.permutation(ki, spec.d)[:k]
+            return jnp.zeros((spec.d_pad,), flat.dtype).at[idx].set(1)
+
+        mask = jax.vmap(row_mask)(jax.random.split(key, n))
+        scale = jnp.asarray(spec.d / k if self.rescale else 1.0, flat.dtype)
+        return flat * mask * scale
 
     def _one(self, x, key):
         flat = x.reshape(x.shape[0], -1)
@@ -182,6 +318,10 @@ class RandK(Transport):
         return (flat * mask * scale).reshape(x.shape)
 
     def uplink_bytes(self, msg_template):
+        if self.granularity == "global":
+            d, itemsize = _global_dims(msg_template)
+            # indices are derivable from a shared seed: values only
+            return _k_of(self.ratio, d) * itemsize
         total = 0
         for l in jax.tree_util.tree_leaves(msg_template):
             d = _leaf_elements(l)
@@ -199,10 +339,14 @@ class Quantize(Transport):
 
     bits: int = 8
     error_feedback: bool = True
+    granularity: str = "leaf"
     name: str = "quantize"
     stochastic: bool = True
 
-    def apply(self, msg, key):
+    def __post_init__(self):
+        _check_granularity(self.granularity)
+
+    def apply_leaf(self, msg, key):
         leaves, treedef = jax.tree_util.tree_flatten(msg)
         keys = jax.random.split(key, len(leaves))
         levels = (1 << self.bits) - 1
@@ -220,7 +364,25 @@ class Quantize(Transport):
         return jax.tree_util.tree_unflatten(
             treedef, [one(x, k) for x, k in zip(leaves, keys)])
 
+    def apply_flat(self, flat, key, spec):
+        levels = (1 << self.bits) - 1
+        # ONE scale per client (vs one per leaf): the padding zeros never
+        # win the max, and quantize(0) == 0 keeps the padded tail zero
+        s = jnp.max(jnp.abs(flat), axis=1)
+        u = jax.random.uniform(key, flat.shape, dtype=flat.dtype)
+        from repro.kernels import ops as kops
+
+        if kops._on_tpu():
+            return kops.plane_quantize(flat, u, s, levels)
+        from repro.kernels import ref
+
+        return ref.plane_quantize(flat, u, s, levels)
+
     def uplink_bytes(self, msg_template):
+        if self.granularity == "global":
+            d, itemsize = _global_dims(msg_template)
+            # packed signed levels for the whole d-vector + ONE fp scale
+            return -(-d * (self.bits + 1) // 8) + itemsize
         total = 0
         for l in jax.tree_util.tree_leaves(msg_template):
             d = _leaf_elements(l)
@@ -259,7 +421,9 @@ class DownlinkCompressor:
     authoritative.  Leaves are lifted to a leading axis of one ("one
     sender"), so the same per-client transport kernels serve the
     single-server broadcast; ``downlink_bytes`` is the per-receiver wire
-    cost of one broadcast.
+    cost of one broadcast.  A ``granularity="global"`` transport compresses
+    the broadcast innovation as one flat d-vector (global top-k over the
+    whole server state, one quantizer scale for the broadcast).
     """
 
     transport: Transport
@@ -306,6 +470,47 @@ def broadcast_elements(server_template) -> int:
             n *= int(s)
         total += n
     return total
+
+
+@dataclass(frozen=True)
+class PlaneTransport:
+    """Adapter running any :class:`Transport` on ``(n_clients, d_pad)``
+    planes with a *flat* error-feedback buffer.
+
+    This is what the engine's flat-carry mode (``EngineConfig(plane=True)``)
+    threads through its scan: messages stay one contiguous buffer end to
+    end, the EF residual is ONE ``(n_clients, d_pad)`` array instead of a
+    pytree of per-leaf residuals, and global-granularity transports never
+    materialize the pytree view at all.  ``compress`` is elementwise- (and
+    for leaf granularity bitwise-) identical to the wrapped transport's
+    pytree ``compress``.
+    """
+
+    inner: Transport
+    spec: pln.SegmentSpec
+
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    @property
+    def error_feedback(self) -> bool:
+        return self.inner.error_feedback
+
+    @property
+    def stochastic(self) -> bool:
+        return self.inner.stochastic
+
+    def init_state(self, flat_template):
+        if not self.inner.error_feedback:
+            return ()
+        return jnp.zeros(tuple(flat_template.shape), flat_template.dtype)
+
+    def compress(self, comm_state, flat, key):
+        return self.inner.compress_plane(comm_state, flat, key, self.spec)
+
+    def uplink_bytes(self, msg_template) -> int:
+        return self.inner.uplink_bytes(msg_template)
 
 
 _TRANSPORTS = {"dense": Dense, "topk": TopK, "randk": RandK,

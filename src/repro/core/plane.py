@@ -1,0 +1,233 @@
+"""The flat parameter plane: one contiguous d-vector for a whole pytree.
+
+The paper's central systems invariant is that each client communicates a
+*single d-dimensional vector* per round.  Historically every layer of this
+repo re-derived that vector per pytree leaf -- each transport, the downlink
+compressor, the async report buffers and the Pallas wrappers independently
+flattened, padded and re-tiled leaves -- so compression was per-leaf
+(statistically weaker top-k, per-leaf byte overhead) and every hot path paid
+N small ops instead of one fused one.  This module makes the d-vector a
+first-class object:
+
+  * :class:`SegmentSpec` -- the **static** layout of a pytree inside one
+    contiguous 1-D buffer: per-leaf offsets/shapes/dtype plus the padded
+    length.  It is hashable (treedef + tuples), so it can be closed over by
+    ``jax.jit`` or passed as a static argument; building it costs a few
+    Python tuples and is free inside a trace.
+  * :func:`flatten` / :func:`unflatten` -- cheap, bitwise-exact moves
+    between the pytree view and the flat plane (reshape + concatenate +
+    pad, and the inverse slice + reshape; XLA fuses both into the
+    surrounding computation).  Leading batch axes (e.g. the client axis of
+    an uplink message) are declared once on the spec and preserved:
+    a ``(clients, ...)`` message tree becomes a ``(clients, d_pad)`` plane.
+  * :class:`ParamPlane` -- a light pytree wrapper pairing a flat buffer
+    with its spec, for user code that wants to pass the plane around as one
+    value (``plane.tree`` is the pytree view).
+
+Padding happens **once**: the plane is padded to a multiple of ``tile``
+elements (default the Pallas lane width; kernels that want full
+``LANES x BLOCK_ROWS`` tiles request ``tile=LANES * block_rows``), so
+:mod:`repro.kernels.ops` no longer re-pads per leaf and the comm/sched/exec
+layers share a single tiled layout.  The padded tail is always written as
+zeros and every consumer in the repo preserves that invariant (error
+feedback adds zeros to zeros; compressors re-pad with zeros), so planes can
+be added/scaled/selected without masking.
+
+Everything here is dtype-strict: one plane holds one dtype, and mixing
+dtypes in a tree is a loud error (casting would silently break the bitwise
+parity contracts the engine's plane mode is pinned by, see
+tests/test_plane.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The Pallas TPU lane width.  Kept in sync with repro.kernels.fused_prox
+# (pinned in tests/test_plane.py) without importing jax.experimental.pallas
+# at repro.core import time.
+LANES = 128
+
+
+@dataclass(frozen=True)
+class SegmentSpec:
+    """Static layout of a pytree inside one contiguous 1-D buffer.
+
+    ``treedef``/``shapes`` describe the tree; ``offsets``/``sizes`` locate
+    each leaf's segment inside the valid region ``[0, d)``; ``d_pad`` is the
+    buffer length after padding to a multiple of ``tile``.  ``batch_dims``
+    leading axes of every leaf are *batch* axes (client/queue axes) that
+    stay leading axes of the plane instead of being flattened into it.
+
+    Frozen and hashable: safe to close over in jitted code or to pass as a
+    static argument.
+    """
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]  # per-leaf shapes, batch axes excluded
+    dtype: Any                           # the single common leaf dtype
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    d: int        # valid elements (the paper's d)
+    d_pad: int    # buffer length (d padded to a multiple of ``tile``)
+    batch_dims: int = 0
+
+    @classmethod
+    def from_tree(cls, tree, *, batch_dims: int = 0,
+                  tile: int = LANES) -> "SegmentSpec":
+        """Build the layout of ``tree`` (arrays or ShapeDtypeStructs).
+
+        ``batch_dims`` leading axes of every leaf are excluded from the
+        flattened segments (they must agree across leaves and become the
+        plane's leading axes).  ``tile`` sets the padding granularity; use
+        ``LANES * block_rows`` for kernel-exact tiling, ``1`` for no
+        padding.
+        """
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if not leaves:
+            raise ValueError("cannot build a SegmentSpec from an empty tree")
+        if tile < 1:
+            raise ValueError(f"tile must be >= 1, got {tile}")
+        dtypes = {np.dtype(l.dtype) for l in leaves}
+        if len(dtypes) != 1:
+            raise ValueError(
+                "a flat plane holds exactly one dtype; got "
+                f"{sorted(d.name for d in dtypes)} -- flatten per-dtype "
+                "sub-trees separately (casting here would break the bitwise "
+                "plane/pytree parity contracts)")
+        batch_shape = None
+        shapes, sizes, offsets = [], [], []
+        off = 0
+        for l in leaves:
+            shape = tuple(int(s) for s in l.shape)
+            if len(shape) < batch_dims:
+                raise ValueError(
+                    f"leaf shape {shape} has fewer than batch_dims="
+                    f"{batch_dims} leading axes")
+            b, s = shape[:batch_dims], shape[batch_dims:]
+            if batch_shape is None:
+                batch_shape = b
+            elif b != batch_shape:
+                raise ValueError(
+                    f"inconsistent batch axes across leaves: {b} vs "
+                    f"{batch_shape}")
+            n = 1
+            for x in s:
+                n *= x
+            shapes.append(s)
+            sizes.append(n)
+            offsets.append(off)
+            off += n
+        d = off
+        d_pad = -(-max(d, 1) // tile) * tile
+        return cls(treedef=treedef, shapes=tuple(shapes),
+                   dtype=dtypes.pop(), offsets=tuple(offsets),
+                   sizes=tuple(sizes), d=d, d_pad=d_pad,
+                   batch_dims=batch_dims)
+
+    @property
+    def pad(self) -> int:
+        """Zero-filled tail elements of the plane."""
+        return self.d_pad - self.d
+
+    @property
+    def rows(self) -> int:
+        """Plane length in 128-lane rows (0 remainder iff tile % LANES == 0
+        or d_pad happens to align; kernel callers should build the spec with
+        an appropriate ``tile``)."""
+        return self.d_pad // LANES
+
+    def with_tile(self, tile: int) -> "SegmentSpec":
+        """The same layout re-padded to a multiple of ``tile``."""
+        d_pad = -(-max(self.d, 1) // tile) * tile
+        return replace(self, d_pad=d_pad)
+
+
+def flatten(spec: SegmentSpec, tree):
+    """Tree -> flat plane ``(*batch, d_pad)``; bitwise, zero-padded tail."""
+    leaves = spec.treedef.flatten_up_to(tree)
+    batch = None
+    flat = []
+    for l, shape in zip(leaves, spec.shapes):
+        l = jnp.asarray(l)
+        b = l.shape[:l.ndim - len(shape)]
+        if tuple(l.shape[l.ndim - len(shape):]) != shape:
+            raise ValueError(
+                f"leaf shape {tuple(l.shape)} does not match spec segment "
+                f"{shape} (+{spec.batch_dims} batch axes)")
+        if batch is None:
+            batch = b
+        elif b != batch:
+            raise ValueError(
+                f"inconsistent batch axes across leaves: {b} vs {batch}")
+        flat.append(l.reshape(b + (-1,)))
+    out = flat[0] if len(flat) == 1 else jnp.concatenate(flat, axis=-1)
+    if spec.pad:
+        out = jnp.pad(out, [(0, 0)] * (out.ndim - 1) + [(0, spec.pad)])
+    return out
+
+
+def unflatten(spec: SegmentSpec, plane):
+    """Flat plane ``(*batch, d_pad)`` -> tree (the inverse of
+    :func:`flatten`; padding is dropped).  This is a *view* in the XLA
+    sense: slices + reshapes that fuse into the surrounding computation."""
+    plane = jnp.asarray(plane)
+    if plane.shape[-1] != spec.d_pad:
+        raise ValueError(
+            f"plane has trailing length {plane.shape[-1]}, spec expects "
+            f"d_pad={spec.d_pad}")
+    batch = plane.shape[:-1]
+    leaves = [
+        jax.lax.slice_in_dim(plane, off, off + size,
+                             axis=plane.ndim - 1).reshape(batch + shape)
+        for off, size, shape in zip(spec.offsets, spec.sizes, spec.shapes)
+    ]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ``view_as_tree`` is the reading-direction alias: the tree is a cheap view
+# of the plane, not a copy you need to keep in sync.
+view_as_tree = unflatten
+
+
+def zeros(spec: SegmentSpec, *batch: int):
+    """A zero plane ``(*batch, d_pad)`` in the spec's dtype."""
+    return jnp.zeros(tuple(batch) + (spec.d_pad,), spec.dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class ParamPlane:
+    """A flat buffer + its static layout, usable anywhere a pytree is.
+
+    The buffer is the pytree leaf (so ``tree_map``/``lax.scan``/donation all
+    see one contiguous array); the spec rides as static aux data.
+    """
+
+    data: jax.Array   # (*batch, d_pad)
+    spec: SegmentSpec
+
+    @classmethod
+    def from_tree(cls, tree, *, batch_dims: int = 0,
+                  tile: int = LANES) -> "ParamPlane":
+        spec = SegmentSpec.from_tree(tree, batch_dims=batch_dims, tile=tile)
+        return cls(flatten(spec, tree), spec)
+
+    @property
+    def tree(self):
+        """The pytree view of the plane."""
+        return unflatten(self.spec, self.data)
+
+    def with_data(self, data) -> "ParamPlane":
+        return ParamPlane(data, self.spec)
+
+    def tree_flatten(self):
+        return (self.data,), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        return cls(children[0], spec)

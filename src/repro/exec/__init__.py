@@ -32,12 +32,33 @@ is kept as a deprecated alias that maps onto the equivalent stage
 combination; ``protocol=True`` is the one non-composable mode (the literal
 per-client message-passing form of Algorithm 1, for equivalence testing).
 
+**The flat parameter plane** (``EngineConfig(plane=True)``,
+:mod:`repro.core.plane`): the paper's communication object is ONE
+d-dimensional vector per client per round, and plane mode makes the engine
+carry exactly that -- the uplink message flows between the local/server
+halves as one contiguous lane-padded ``(n_clients, d_pad)`` buffer, the
+compressor error feedback is one flat residual array, and the async report
+buffers/queues are ``(clients, d_pad)`` / ``(depth, clients, d_pad)``
+planes.  What is *flat* is every message-shaped carry; what remains a
+*view* is the pytree the algorithm halves see (``plane.unflatten`` --
+slices + reshapes XLA fuses away) and the client-resident aux.  Pair it
+with a ``granularity="global"`` transport (:mod:`repro.comm`) to compress
+the d-vector as a whole: global top-k selection, one quantizer scale, and
+index bytes accounted once in ``uplink_bytes_per_client_round`` -- at the
+same ratio the global form keeps more of the message energy and FEWER
+wire bytes than the per-leaf form, which is why uplink byte counts change
+when you flip granularity (the trajectory changes too: it is a different,
+strictly stronger compressor).
+
 Parity contracts: every single-stage configuration is bitwise its legacy
 backend (tests/test_stages.py); chunked == unchunked and bare == placed ==
 protocol (tests/test_exec.py); uplink compression at ratio 1.0 == bare
 bitwise (tests/test_comm.py); asynchrony under a zero-delay clock + full
 buffer == bare bitwise, and stays bitwise with a ratio-1.0 transport
-stacked on top (tests/test_sched.py, tests/test_stages.py).
+stacked on top (tests/test_sched.py, tests/test_stages.py); the
+plane-backed engine == the per-leaf engine bitwise per stage combination,
+and ``ClockModel(upload=None)`` == the single-stream clock bitwise
+(tests/test_plane.py).
 
 On top of the stage stack, the engine owns device-resident *multi-round
 chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with

@@ -44,6 +44,11 @@ message-passing mode kept for equivalence testing).
 
 On top of the stage stack the engine owns:
 
+  * **flat carries** -- ``EngineConfig(plane=True)`` threads every
+    message-shaped carry slice as one contiguous lane-padded
+    ``(n_clients, d_pad)`` plane (:mod:`repro.core.plane`): the paper's
+    one-d-vector-per-round object, bitwise-pinned against the per-leaf
+    layout in tests/test_plane.py;
   * **chunking** -- ``chunk_rounds`` rounds are fused into one compiled call
     via ``lax.scan`` over pre-sampled batches; metrics come back as
     ``(chunk,)`` device arrays fetched with a single ``device_get``;
@@ -112,6 +117,20 @@ class EngineConfig:
                      Requires a round function with an ``active`` argument;
                      does not compose with Asynchrony (buffered aggregation
                      subsumes it -- set buffer_size < n_clients).
+    plane          : thread the communication-shaped stages' carries as
+                     FLAT PARAMETER PLANES (:mod:`repro.core.plane`): the
+                     uplink message flows between the local/server halves
+                     as one contiguous lane-padded ``(n_clients, d_pad)``
+                     buffer, the compressor error feedback is ONE flat
+                     residual array, and the async report buffers/queues
+                     hold ``(clients, d_pad)`` / ``(depth, clients,
+                     d_pad)`` planes instead of nested pytrees.  Bitwise
+                     identical to the per-leaf layout for every stage
+                     combination (pinned in tests/test_plane.py); False
+                     (the PR-4 per-leaf layout) remains the default until
+                     the flat layout is validated on a real accelerator
+                     (see ROADMAP).  A no-op without communication-shaped
+                     stages; requires a single-dtype uplink message.
 
     Placement stage (active when ``mesh`` is set):
     mesh/param_specs/plan : the device mesh, the logical-axis spec tree of
@@ -161,6 +180,7 @@ class EngineConfig:
     jit: bool = True
     donate_state: bool = True
     participation: Optional[float] = None
+    plane: bool = False
     mesh: Any = None
     param_specs: Any = None
     plan: str = "A"
@@ -209,10 +229,16 @@ class EngineConfig:
                      or async_on or downlink_on)
         placement_on = self.mesh is not None or self.backend == "sharded"
 
+        if self.plane and not self.jit:
+            raise ValueError("plane mode threads flat carries through the "
+                             "compiled scan and requires jit")
         if self.protocol or self.backend == "protocol":
             if self.participation is not None:
                 raise ValueError("the protocol mode does not support "
                                  "partial participation")
+            if self.plane:
+                raise ValueError("plane mode does not apply to the protocol "
+                                 "mode (literal per-client message passing)")
             if placement_on or uplink_on:
                 raise ValueError(
                     "the protocol mode (literal per-client message passing) "
@@ -368,6 +394,14 @@ class RoundEngine:
                 self.downlink = stack.downlink.compressor
             if stack.asynchrony is not None:
                 self._setup_async()
+            # the effective round halves + transport the compiled scan uses:
+            # identical to the algorithm's halves, or (plane mode) wrapped
+            # so the uplink message flows as one flat (n_clients, d_pad)
+            # buffer between them.  Plane wrapping needs the message shape,
+            # so it is installed by _init_extras.
+            self._local_eff = self._local_fn
+            self._server_eff = self._server_fn
+            self._transport_eff = self.transport
         else:
             self._round_fn = algorithm.make_round_fn(grad_fn)
             self._accepts_active = (
@@ -379,15 +413,18 @@ class RoundEngine:
                 "participation (round_fn has no 'active' argument)")
 
         self._use_active = config.participation is not None
+        self._plane = bool(config.plane) and stack.split
+        self._plane_spec = None  # SegmentSpec of the uplink message plane
         self._chunked_call = None  # compiled lazily (needs a state template)
         self._state_shardings = None
         self._extras = None  # dict of stage carry slices, built lazily
         self._donate_batches = False  # staged prefetch chunks (see run())
 
     def _setup_async(self) -> None:
-        """Resolve clock/staleness/buffer/queue and build the async step."""
-        from repro.sched import make_async_round
-
+        """Resolve and validate clock/staleness/buffer/queue.  The async
+        step itself is built lazily (_build_async_round): plane mode wraps
+        the round halves around the message shape, which is only known once
+        a batch template exists."""
         asyn = self.stack.asynchrony
         clock = asyn.resolve_clock()
         staleness = asyn.resolve_staleness()
@@ -400,13 +437,18 @@ class RoundEngine:
         self.clock, self.staleness, self.buffer_size = (clock, staleness,
                                                         buffer_size)
         self.queue_depth = asyn.queue_depth
+        self._async_round = None
+
+    def _build_async_round(self) -> None:
+        from repro.sched import make_async_round
+
         server_fields_fn = None
         if self.downlink is not None:
             server_fields_fn = (
                 lambda st: server_state_fields(self.algorithm, st))
         self._async_round = make_async_round(
-            self._local_fn, self._server_fn, self.transport, clock,
-            buffer_size, self.n_clients, staleness,
+            self._local_eff, self._server_eff, self._transport_eff,
+            self.clock, self.buffer_size, self.n_clients, self.staleness,
             accepts_active=self._accepts_active,
             queue_depth=self.queue_depth, downlink=self.downlink,
             server_fields_fn=server_fields_fn)
@@ -488,8 +530,8 @@ class RoundEngine:
             return chunk_fn
 
         if self.stack.split:
-            local_fn, server_fn = self._local_fn, self._server_fn
-            transport, downlink = self.transport, self.downlink
+            local_fn, server_fn = self._local_eff, self._server_eff
+            transport, downlink = self._transport_eff, self.downlink
             algorithm = self.algorithm
             # deterministic compressors ignore their key: skip the
             # per-round threefry split (measurable on µs-scale rounds)
@@ -602,12 +644,26 @@ class RoundEngine:
     def _init_extras(self, state, batches_stacked) -> dict:
         """Build the stage carry slices from the uplink message shape
         (eval_shape only, no FLOPs) -- compressor error-feedback state +
-        key, downlink shadow, and the async report buffer/queue."""
+        key, downlink shadow, and the async report buffer/queue.
+
+        In plane mode (``EngineConfig(plane=True)``) this is also where the
+        stack pivots onto the flat layout: the message's
+        :class:`repro.core.plane.SegmentSpec` is built once, the round
+        halves are wrapped so the message crosses them as one contiguous
+        ``(n_clients, d_pad)`` buffer, and every message-shaped carry slice
+        (error feedback, report buffers/queues, staleness residuals)
+        becomes a plane instead of a nested pytree.
+        """
         ex: dict = {}
         one_round = jax.tree_util.tree_map(lambda x: x[0], batches_stacked)
         msg_spec, aux_spec = jax.eval_shape(self._local_fn, state, one_round)
-        ex["comm"] = self.transport.init_state(msg_spec)
+        buf_spec = msg_spec  # what the carry slices are shaped like
+        if self._plane:
+            buf_spec = self._install_plane(msg_spec)
+        ex["comm"] = self._transport_eff.init_state(buf_spec)
         ex["key"] = jax.random.PRNGKey(self.config.comm_seed)
+        # wire bytes are a property of the MESSAGE, not the carry layout:
+        # always accounted from the pytree spec (granularity-aware)
         self.uplink_bytes_per_client_round = (
             self.transport.uplink_bytes(msg_spec))
         if self.downlink is not None:
@@ -626,16 +682,46 @@ class RoundEngine:
             start = int(state.round) if hasattr(state, "round") else 0
             if self.queue_depth is not None:
                 ex["sched"] = init_queue_state(
-                    msg_spec, aux_spec, self.n_clients, self.queue_depth,
+                    buf_spec, aux_spec, self.n_clients, self.queue_depth,
                     self.config.clock_seed, start_round=start,
                     with_resid=self.staleness.correct)
             else:
                 ex["sched"] = init_async_state(
-                    msg_spec, aux_spec, self.n_clients,
+                    buf_spec, aux_spec, self.n_clients,
                     self.config.clock_seed, start_round=start,
                     with_resid=(self.staleness.correct
                                 and self.buffer_size < self.n_clients))
+        if self.stack.asynchrony is not None and self._async_round is None:
+            self._build_async_round()
         return ex
+
+    def _install_plane(self, msg_spec):
+        """Build the message plane spec and wrap the round halves +
+        transport onto the flat layout.  Returns the flat carry template
+        (a bare ``(n_clients, d_pad)`` ShapeDtypeStruct)."""
+        from repro.comm import PlaneTransport
+        from repro.core import plane as pln
+
+        spec = pln.SegmentSpec.from_tree(msg_spec, batch_dims=1)
+        self._plane_spec = spec
+        local_fn, server_fn = self._local_fn, self._server_fn
+
+        def local_eff(state, batches):
+            msg, aux = local_fn(state, batches)
+            return pln.flatten(spec, msg), aux
+
+        if self._accepts_active:
+            def server_eff(state, flat, aux, active=None):
+                return server_fn(state, pln.unflatten(spec, flat), aux,
+                                 active=active)
+        else:
+            def server_eff(state, flat, aux):
+                return server_fn(state, pln.unflatten(spec, flat), aux)
+
+        self._local_eff = local_eff
+        self._server_eff = server_eff
+        self._transport_eff = PlaneTransport(self.transport, spec)
+        return jax.ShapeDtypeStruct((self.n_clients, spec.d_pad), spec.dtype)
 
     def _set_donate_batches(self, donate: bool) -> None:
         """Flip batch donation, invalidating the compiled call when the

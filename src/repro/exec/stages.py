@@ -75,6 +75,12 @@ class Placement:
         client-major, the queued buffer stacks a leading queue-depth axis
         (client axis 1) -- except its per-client residual/ledger fields --
         and PRNG keys plus the single-sender downlink shadow replicate.
+
+        Under the flat carry layout (``EngineConfig(plane=True)``) the
+        message-shaped slices are ``(n_clients, d_pad)`` planes (queued:
+        ``(depth, n_clients, d_pad)``), so the same declarations reduce to
+        simple 1-axis partitioning of the plane's client axis -- one
+        PartitionSpec per slice instead of one per leaf.
         """
         from repro.launch import sharding as shd
 

@@ -1,8 +1,14 @@
 """jit'd public wrappers around the Pallas kernels.
 
-These adapt arbitrary parameter pytrees / GQA head layouts to the kernels'
-tiled layouts, and select interpret mode automatically on non-TPU backends so
-the same call sites work on CPU (tests) and TPU (production).
+These adapt parameter pytrees / flat planes / GQA head layouts to the
+kernels' tiled layouts, and select interpret mode automatically on non-TPU
+backends so the same call sites work on CPU (tests) and TPU (production).
+
+Since the flat-plane refactor the pytree entry points flatten the whole
+tree onto ONE contiguous lane-padded buffer (:mod:`repro.core.plane`) and
+make a single kernel call over it, instead of padding and launching per
+leaf: the kernels see one tiled layout, and tiny leaves (biases, norms)
+stop costing a full tile each.
 """
 from __future__ import annotations
 
@@ -11,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import fused_prox, flash_attention as fa
+from repro.core import plane as pln
+from repro.kernels import fused_prox, plane_ops, flash_attention as fa
 
 LANES = fused_prox.LANES
 
@@ -20,35 +27,68 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _pad_to_tiles(flat, block_rows):
-    tile = block_rows * LANES
-    n = flat.shape[0]
-    pad = (-n) % tile
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, LANES), n
+def _block_rows_for(rows: int, block_rows: int) -> int:
+    """The largest kernel block height <= block_rows dividing ``rows``."""
+    b = min(block_rows, rows)
+    while rows % b:
+        b -= 1
+    return b
+
+
+def _as_tiles(flat_plane, block_rows):
+    """(\\*batch, d_pad) plane -> ((\\*batch, rows, LANES) tiles, block)."""
+    d_pad = flat_plane.shape[-1]
+    assert d_pad % LANES == 0, d_pad
+    rows = d_pad // LANES
+    tiles = flat_plane.reshape(flat_plane.shape[:-1] + (rows, LANES))
+    return tiles, _block_rows_for(rows, block_rows)
 
 
 def fused_local_update(z_hat, grads, c, eta, thresh, *, interpret=None,
                        block_rows=fused_prox.BLOCK_ROWS):
     """Fused Algorithm-1 local update + L1 prox over a whole pytree.
 
-    Returns (z_hat_next, z_next) with the same structure/shapes/dtypes.
+    Flattens (z_hat, grads, c) onto one contiguous plane (padded once to
+    the kernel tiling) and makes a single fused kernel call -- the
+    historical per-leaf pad/launch loop is gone.  Mixed-dtype trees cannot
+    share a plane and take a per-leaf fallback.  Returns
+    (z_hat_next, z_next) with the same structure/shapes/dtypes.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    try:
+        spec = pln.SegmentSpec.from_tree(z_hat, tile=block_rows * LANES)
+    except ValueError:  # mixed dtypes: no shared plane
+        return _fused_local_update_per_leaf(z_hat, grads, c, eta, thresh,
+                                            interpret=interpret,
+                                            block_rows=block_rows)
+    dt = spec.dtype
+    zf = pln.flatten(spec, z_hat).reshape(-1, LANES)
+    gf = pln.flatten(spec, jax.tree_util.tree_map(
+        lambda g: jnp.asarray(g).astype(dt), grads)).reshape(-1, LANES)
+    cf = pln.flatten(spec, jax.tree_util.tree_map(
+        lambda ci: jnp.asarray(ci).astype(dt), c)).reshape(-1, LANES)
+    zh2, z2 = fused_prox.fused_local_update_2d(
+        zf, gf, cf, eta, thresh, interpret=interpret, block_rows=block_rows)
+    return (pln.unflatten(spec, zh2.reshape(-1)),
+            pln.unflatten(spec, z2.reshape(-1)))
+
+
+def _fused_local_update_per_leaf(z_hat, grads, c, eta, thresh, *, interpret,
+                                 block_rows):
     leaves_zh, treedef = jax.tree_util.tree_flatten(z_hat)
     leaves_g = treedef.flatten_up_to(grads)
     leaves_c = treedef.flatten_up_to(c)
     out_zh, out_z = [], []
     for zh, g, ci in zip(leaves_zh, leaves_g, leaves_c):
-        flat, n = _pad_to_tiles(zh.reshape(-1), block_rows)
-        gflat, _ = _pad_to_tiles(g.reshape(-1).astype(zh.dtype), block_rows)
-        cflat, _ = _pad_to_tiles(ci.reshape(-1).astype(zh.dtype), block_rows)
+        spec = pln.SegmentSpec.from_tree(zh, tile=block_rows * LANES)
+        flat = pln.flatten(spec, zh).reshape(-1, LANES)
+        gflat = pln.flatten(spec, g.astype(zh.dtype)).reshape(-1, LANES)
+        cflat = pln.flatten(spec, ci.astype(zh.dtype)).reshape(-1, LANES)
         zh2, z2 = fused_prox.fused_local_update_2d(
             flat, gflat, cflat, eta, thresh,
             interpret=interpret, block_rows=block_rows)
-        out_zh.append(zh2.reshape(-1)[:n].reshape(zh.shape))
-        out_z.append(z2.reshape(-1)[:n].reshape(zh.shape))
+        out_zh.append(pln.unflatten(spec, zh2.reshape(-1)))
+        out_z.append(pln.unflatten(spec, z2.reshape(-1)))
     return (jax.tree_util.tree_unflatten(treedef, out_zh),
             jax.tree_util.tree_unflatten(treedef, out_z))
 
@@ -62,6 +102,47 @@ def fused_local_update_step(reg, eta, t, z_hat, grads, c, *,
     thresh = (t + 1) * eta * reg.lam
     return fused_local_update(z_hat, grads, c, eta, thresh,
                               interpret=None if interpret_ok else False)
+
+
+# ---------------------------------------------------------------------------
+# flat-plane communication / aggregation kernels
+# ---------------------------------------------------------------------------
+
+
+def plane_threshold_select(flat_plane, thresh, *, interpret=None,
+                           block_rows=fused_prox.BLOCK_ROWS):
+    """Global top-k select on a (clients, d_pad) plane: keep coordinates
+    whose magnitude reaches the per-client ``thresh``, zero the rest (one
+    fused pass; the k-th values come from one ``lax.top_k`` on the plane).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    tiles, b = _as_tiles(flat_plane, block_rows)
+    out = plane_ops.threshold_select_3d(tiles, thresh, interpret=interpret,
+                                        block_rows=b)
+    return out.reshape(flat_plane.shape)
+
+
+def plane_quantize(flat_plane, u, scale, levels: int, *, interpret=None,
+                   block_rows=fused_prox.BLOCK_ROWS):
+    """Fused stochastic uniform quantization on a (clients, d_pad) plane
+    given uniform draws ``u`` and per-client ``scale`` magnitudes."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    tiles, b = _as_tiles(flat_plane, block_rows)
+    utiles, _ = _as_tiles(u, block_rows)
+    out = plane_ops.quantize_3d(tiles, utiles, scale, levels,
+                                interpret=interpret, block_rows=b)
+    return out.reshape(flat_plane.shape)
+
+
+def plane_weighted_commit(buf, w, *, interpret=None,
+                          block_rows=fused_prox.BLOCK_ROWS):
+    """Staleness-weighted commit reduction ``sum_i w_i * buf_i`` over the
+    client axis of a (clients, d_pad) report-buffer plane, in one pass."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    tiles, b = _as_tiles(buf, block_rows)
+    out = plane_ops.weighted_commit_3d(tiles, w, interpret=interpret,
+                                       block_rows=b)
+    return out.reshape(buf.shape[-1:])
 
 
 def gqa_flash_attention(q, k, v, *, causal=True, window=None, softcap=None,

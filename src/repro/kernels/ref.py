@@ -25,6 +25,45 @@ def fused_local_update(z_hat, grads, c, eta, thresh):
     return z_hat_next, z_next.astype(z_hat_next.dtype)
 
 
+def plane_threshold_select(x, thresh):
+    """Fused global-top-k select on the flat plane.
+
+    ``x``: (clients, d_pad) plane; ``thresh``: (clients,) per-client k-th
+    magnitude.  Keeps every coordinate whose magnitude reaches the
+    threshold (ties kept, matching ``lax.top_k``-derived thresholds) and
+    zeroes the rest -- the select+scatter half of global top-k, after the
+    k-th value has been found.
+    """
+    return jnp.where(jnp.abs(x) >= thresh[:, None].astype(x.dtype), x,
+                     jnp.zeros((), x.dtype))
+
+
+def plane_quantize(x, u, scale, levels: int):
+    """Fused stochastic uniform quantization on the flat plane.
+
+    ``x``/``u``: (clients, d_pad) values and uniform draws; ``scale``:
+    (clients,) per-client max magnitude (0 -> identity-safe 1); ``levels``:
+    static level count.  Dequantized output: ``round_stoch(x/s*L)/L*s``.
+    """
+    s = jnp.where(scale == 0, jnp.ones_like(scale), scale)
+    s = s[:, None].astype(x.dtype)
+    y = x / s * levels
+    lo = jnp.floor(y)
+    q = lo + (u.astype(x.dtype) < (y - lo)).astype(x.dtype)
+    return q / levels * s
+
+
+def plane_weighted_commit(buf, w):
+    """Staleness-weighted buffered commit on the plane.
+
+    ``buf``: (clients, d_pad) delivered-report plane; ``w``: (clients,)
+    mixing weights (already zeroed for undelivered clients).  Returns the
+    (d_pad,) weighted sum -- the reduction the async aggregator's commit
+    performs, fused into one pass over the buffer.
+    """
+    return jnp.sum(buf * w[:, None].astype(buf.dtype), axis=0)
+
+
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
                     scale=None):
     """Reference attention.  q,k,v: (B, H, S, D).  Returns (B, H, S, D).

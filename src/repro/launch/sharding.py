@@ -223,6 +223,13 @@ def carry_slice_shardings(mesh, tree, plan: str, n_clients: int,
     client-role state fields; everything else (keys, scalar clocks, the
     single-sender downlink shadow) replicates.
 
+    The engine's flat carry layout (``EngineConfig(plane=True)``,
+    :mod:`repro.core.plane`) collapses each message-shaped slice to ONE
+    contiguous ``(n_clients, d_pad)`` buffer, so placement degenerates to
+    the simplest possible rule -- partition the plane's single client axis,
+    replicate the padded d axis -- with one PartitionSpec per slice instead
+    of one per message leaf.
+
     ``client_axis`` names which leaf axis carries clients for this slice
     (0 for message-shaped trees, 1 for queue-stacked buffers, ``None`` to
     replicate the whole slice).  The caller declares the axis structurally

@@ -111,6 +111,16 @@ def main(argv=None):
                     choices=["dense", "topk", "randk", "quantize"],
                     help="compress the broadcast direction too "
                          "(DownlinkComm stage; shares --compress-ratio)")
+    ap.add_argument("--granularity", default="leaf",
+                    choices=["leaf", "global"],
+                    help="compress per pytree leaf (historical) or the "
+                         "whole flat d-vector (global top-k/one quantizer "
+                         "scale; index bytes accounted once)")
+    ap.add_argument("--plane", action="store_true",
+                    help="thread the stage carries as flat parameter "
+                         "planes (repro.core.plane): one contiguous "
+                         "(clients, d_pad) buffer instead of per-leaf "
+                         "pytrees")
     ap.add_argument("--device-cache", action="store_true",
                     help="keep token streams device-resident (batches are "
                          "gathered on device, no host stack)")
@@ -139,6 +149,11 @@ def main(argv=None):
                     help="async: per-client in-flight report queue depth "
                          "(clients race ahead of delivery; default: the "
                          "one-slot buffer)")
+    ap.add_argument("--upload", type=float, default=None,
+                    help="async: constant per-report upload time, split "
+                         "from the clock's compute stream (uploads "
+                         "serialize FIFO under --queue-depth; default: "
+                         "single-stream clock)")
     args = ap.parse_args(argv)
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
@@ -165,6 +180,8 @@ def main(argv=None):
         def build(name):
             kw = ({"ratio": args.compress_ratio}
                   if name in ("topk", "randk") else {})
+            if name != "dense":
+                kw["granularity"] = args.granularity
             return get_transport(name, **kw)
 
         transport = build(args.transport) if args.transport else None
@@ -174,12 +191,14 @@ def main(argv=None):
     run_async = (args.run_async or args.clock is not None
                  or args.buffer_size is not None
                  or args.staleness is not None or args.staleness_correct
-                 or args.queue_depth is not None)
+                 or args.queue_depth is not None or args.upload is not None)
     clock = staleness = None
     if run_async:
         from repro.sched import Staleness, get_clock
 
-        clock = get_clock(args.clock or "straggler")
+        clock_kw = ({"upload": args.upload}
+                    if args.upload is not None else {})
+        clock = get_clock(args.clock or "straggler", **clock_kw)
         staleness = Staleness(args.staleness or "uniform",
                               correct=args.staleness_correct)
     engine = RoundEngine(
@@ -188,7 +207,7 @@ def main(argv=None):
                      participation=args.participation, transport=transport,
                      downlink=downlink, clock=clock,
                      buffer_size=args.buffer_size, staleness=staleness,
-                     queue_depth=args.queue_depth))
+                     queue_depth=args.queue_depth, plane=args.plane))
     state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 

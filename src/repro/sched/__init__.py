@@ -11,7 +11,12 @@ mesh placement and :mod:`repro.comm` uplink/downlink compression:
 
   * :mod:`repro.sched.clock` -- ``ClockModel`` protocol + deterministic,
     log-normal and straggler-mixture virtual-time round durations, all
-    PRNG-keyed and traceable;
+    PRNG-keyed and traceable.  Every clock optionally splits its round time
+    into compute + upload streams (``ClockModel(upload=...)``): uploads
+    (and only uploads) serialize FIFO behind a client's in-flight reports
+    under the multi-slot queue, making the upload-bandwidth-limited regime
+    quantitative.  ``upload=None`` preserves the single-stream draws
+    bitwise;
   * :mod:`repro.sched.aggregator` -- the FedBuff-style buffered commit step
     (``buffer_size`` earliest reports per commit), staleness-weighted
     mixing (``Staleness``), optional stale-innovation re-anchoring, the
@@ -31,9 +36,10 @@ from repro.sched.aggregator import (AGE_HIST_BUCKETS, AsyncState, QueueState,
                                     init_async_state, init_queue_state,
                                     make_async_round)
 from repro.sched.clock import (ClockModel, DeterministicClock, LogNormalClock,
-                               StragglerClock, get_clock)
+                               StragglerClock, clock_is_stochastic, get_clock)
 
 __all__ = ["ClockModel", "DeterministicClock", "LogNormalClock",
-           "StragglerClock", "get_clock", "Staleness", "as_staleness",
-           "AsyncState", "QueueState", "init_async_state",
-           "init_queue_state", "make_async_round", "AGE_HIST_BUCKETS"]
+           "StragglerClock", "get_clock", "clock_is_stochastic",
+           "Staleness", "as_staleness", "AsyncState", "QueueState",
+           "init_async_state", "init_queue_state", "make_async_round",
+           "AGE_HIST_BUCKETS"]

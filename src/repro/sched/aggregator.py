@@ -64,7 +64,8 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.sched.clock import ClockModel
+from repro.sched.clock import (ClockModel, clock_is_stochastic,
+                               split_durations)
 
 AGE_HIST_BUCKETS = 8  # report-age histogram buckets (last bucket = overflow)
 
@@ -301,7 +302,7 @@ def make_async_round(
     # deterministic transports/clocks ignore their key: skip the per-round
     # threefry splits (measurable on µs-scale rounds)
     tr_stochastic = getattr(transport, "stochastic", True)
-    clk_stochastic = getattr(clock, "stochastic", True)
+    clk_stochastic = clock_is_stochastic(clock)
     dl_stochastic = (downlink is not None
                      and getattr(downlink.transport, "stochastic", True))
 
@@ -391,7 +392,12 @@ def make_async_round(
             clock_key, ksub = jax.random.split(sched.clock_key)
         else:
             clock_key = ksub = sched.clock_key
-        dur = clock.durations(ksub, sched.round_idx, n_clients)
+        # two-stream clock: a report delivers after compute + upload (the
+        # one-slot buffer never queues uploads, so the streams just add;
+        # upload=None draws zeros and reproduces the single-stream times
+        # bitwise)
+        comp, upl = split_durations(clock, ksub, sched.round_idx, n_clients)
+        dur = comp.astype(jnp.float32) + upl.astype(jnp.float32)
         if full_buffer:
             # every client delivered at the last commit, so every slot is
             # refreshed: skip the per-client selects entirely.  This is not
@@ -400,7 +406,7 @@ def make_async_round(
             # and the zero-delay bitwise contract forbids that.
             comm_state = cs_new
             pending_msg, pending_aux = msg_hat, aux_new
-            deliver_time = sched.vtime + dur.astype(jnp.float32)
+            deliver_time = sched.vtime + dur
         else:
             # only refreshing clients actually compressed a report this
             # step: everyone else's error-feedback residual must not
@@ -410,8 +416,7 @@ def make_async_round(
             pending_msg = _where_clients(refresh, msg_hat, sched.pending_msg)
             pending_aux = _where_clients(refresh, aux_new, sched.pending_aux)
             deliver_time = jnp.where(
-                refresh, sched.vtime + dur.astype(jnp.float32),
-                sched.deliver_time)
+                refresh, sched.vtime + dur, sched.deliver_time)
 
         # --- 2. commit: the buffer_size earliest arrivals form the buffer.
         if full_buffer:
@@ -510,12 +515,18 @@ def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
             clock_key, ksub = jax.random.split(sched.clock_key)
         else:
             clock_key = ksub = sched.clock_key
-        dur = clock.durations(ksub, sched.round_idx, n_clients)
-        # FIFO uploads: the new report lands after everything already in
-        # flight from this client (-inf when the queue is empty)
+        comp, upl = split_durations(clock, ksub, sched.round_idx, n_clients)
+        # FIFO uploads: the report finishes *computing* at vtime + compute,
+        # but its upload cannot start before the client's in-flight uploads
+        # drain (-inf when the queue is empty) -- only the upload stream
+        # serializes behind the queue, which is what makes the two-stream
+        # clock model the upload-bandwidth-limited regime quantitative.
+        # With upload=None (upl = 0) this is bitwise the historical
+        # single-stream FIFO: max(vtime + dur, busy) + 0.
         busy = jnp.max(jnp.where(filled, sched.deliver_time, -jnp.inf),
                        axis=0)
-        arrive = jnp.maximum(sched.vtime + dur.astype(jnp.float32), busy)
+        arrive = (jnp.maximum(sched.vtime + comp.astype(jnp.float32), busy)
+                  + upl.astype(jnp.float32))
         put = (jnp.arange(queue_depth)[:, None] == slot[None, :]) & free
 
         def enq(buf, new):

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,14 +39,76 @@ class ClockModel:
     """Interface: per-client virtual round durations, PRNG-keyed.
 
     ``stochastic = False`` marks clocks that ignore the key, letting the
-    engine skip the per-round key split."""
+    engine skip the per-round key split.
+
+    **Queue-aware two-stream form**: every clock optionally splits a round
+    into a *compute* stream and an *upload* stream via its ``upload``
+    field (``None`` | a constant upload time | another :class:`ClockModel`
+    drawing per-client upload times).  The aggregator uses the split to
+    model upload-bandwidth-limited deployments: a report *finishes
+    computing* after the compute duration, then *uploads* for the upload
+    duration -- and under the multi-slot report queue, uploads from the
+    same client serialize FIFO, so only the upload stream (not compute)
+    stacks behind in-flight reports.  ``upload=None`` (the default)
+    reproduces the historical single-stream draws bitwise: the whole
+    duration is compute, upload is zero, and the PRNG key is consumed
+    exactly as before.
+    """
 
     name: str = "base"
     stochastic: bool = True
+    upload: Any = None
 
     def durations(self, key, round_idx, n_clients: int) -> jax.Array:
         """``(n_clients,)`` float32 vector of strictly positive durations."""
         raise NotImplementedError
+
+    def split_durations(self, key, round_idx,
+                        n_clients: int) -> Tuple[jax.Array, jax.Array]:
+        """``(compute, upload)`` per-client duration vectors.
+
+        With ``upload=None`` this is ``(durations(key), zeros)`` -- the key
+        reaches ``durations`` unsplit, so the historical single-stream
+        draws are reproduced bitwise.  The key is split between the two
+        streams only when BOTH consume randomness (a deterministic upload
+        constant never perturbs the compute draws).
+        """
+        up = self.upload
+        if up is None:
+            return (self.durations(key, round_idx, n_clients),
+                    jnp.zeros((n_clients,), jnp.float32))
+        k_c = k_u = key
+        if self.stochastic and _upload_stochastic(up):
+            k_c, k_u = jax.random.split(key)
+        if isinstance(up, ClockModel):
+            upl = up.durations(k_u, round_idx, n_clients)
+        else:
+            upl = jnp.full((n_clients,), float(up), jnp.float32)
+        return self.durations(k_c, round_idx, n_clients), upl
+
+
+def _upload_stochastic(upload) -> bool:
+    return isinstance(upload, ClockModel) and upload.stochastic
+
+
+def clock_is_stochastic(clock) -> bool:
+    """Whether either duration stream consumes its PRNG key (the engine
+    skips per-round key splits otherwise).  Tolerates duck-typed clocks
+    that only implement ``durations`` (assumed stochastic, no upload)."""
+    return (getattr(clock, "stochastic", True)
+            or _upload_stochastic(getattr(clock, "upload", None)))
+
+
+def split_durations(clock, key, round_idx, n_clients: int):
+    """``(compute, upload)`` streams of any clock -- the aggregator-facing
+    form of :meth:`ClockModel.split_durations` that also accepts duck-typed
+    clocks implementing only ``durations`` (single stream, zero upload,
+    exactly the historical behavior)."""
+    fn = getattr(clock, "split_durations", None)
+    if fn is not None:
+        return fn(key, round_idx, n_clients)
+    return (clock.durations(key, round_idx, n_clients),
+            jnp.zeros((n_clients,), jnp.float32))
 
 
 @dataclass(frozen=True)
@@ -62,6 +124,7 @@ class DeterministicClock(ClockModel):
 
     duration: float = 1.0
     per_client: Optional[Tuple[float, ...]] = None
+    upload: Any = None
     name: str = "deterministic"
     stochastic: bool = False
 
@@ -83,6 +146,7 @@ class LogNormalClock(ClockModel):
 
     median: float = 1.0
     sigma: float = 0.5
+    upload: Any = None
     name: str = "lognormal"
 
     def durations(self, key, round_idx, n_clients):
@@ -106,6 +170,7 @@ class StragglerClock(ClockModel):
     slowdown: float = 4.0
     jitter: float = 0.1
     persistent: bool = True
+    upload: Any = None
     name: str = "straggler"
 
     def durations(self, key, round_idx, n_clients):
