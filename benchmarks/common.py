@@ -50,7 +50,7 @@ def make_engine(algorithm, grad_fn, n_clients, *, chunk_rounds=16,
                 participation=None, jit=True, transport=None, downlink=None,
                 clock=None, buffer_size=None, staleness=None,
                 queue_depth=None, mesh=None, param_specs=None, plan="A",
-                plane=False):
+                plane=False, edges=None, population=None, cohort=None):
     """RoundEngine with benchmark defaults (chunked, no stages).
 
     Benchmarks that drive the engine directly (exec_bench, sched_sweep)
@@ -58,8 +58,9 @@ def make_engine(algorithm, grad_fn, n_clients, *, chunk_rounds=16,
     ``repro.fed.simulator.run``, which builds its own bare engine
     internally.  Stage fields activate their stage and compose freely:
     ``transport``/``downlink`` (repro.comm) for the communication stages,
-    ``clock``/``buffer_size``/``staleness``/``queue_depth`` (repro.sched)
-    for asynchrony, ``mesh``/``param_specs``/``plan`` for placement."""
+    ``clock``/``buffer_size``/``staleness``/``queue_depth``/``edges``
+    (repro.sched) for asynchrony, ``mesh``/``param_specs``/``plan`` for
+    placement, ``population``/``cohort`` for cohort-resident state."""
     from repro.exec import EngineConfig, RoundEngine
 
     return RoundEngine(
@@ -69,7 +70,8 @@ def make_engine(algorithm, grad_fn, n_clients, *, chunk_rounds=16,
                      transport=transport, downlink=downlink, clock=clock,
                      buffer_size=buffer_size, staleness=staleness,
                      queue_depth=queue_depth, mesh=mesh,
-                     param_specs=param_specs, plan=plan, plane=plane))
+                     param_specs=param_specs, plan=plan, plane=plane,
+                     edges=edges, population=population, cohort=cohort))
 
 
 class Timer:

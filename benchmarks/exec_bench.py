@@ -27,6 +27,15 @@ Experiments on the paper's sparse-logreg problem (tau=10):
     (ONE selection over the d-vector instead of one per leaf) and a
     plane-under-queue async row.  The acceptance bar is the plane
     compressed row at parity or better vs its per-leaf twin.
+  * ``exec/cohort_*``      -- the Cohort stage (cohort-resident client
+    state, :mod:`repro.sched.cohort`) paired against the dense engine:
+    ``cohort == population`` isolates the pure swap overhead (the
+    trajectory is the dense one bitwise, tests/test_cohort.py), a strict
+    sub-cohort shows the cohort-width working set, and a
+    million-simulated-client smoke pins the memory contract -- the host
+    footprint is O(cohort x row) + O(population) for the slot map, NOT
+    O(population x row) (derived column = store bytes vs the dense
+    estimate; the smoke asserts the ratio).
   * ``exec/async_*``       -- the Asynchrony stage at equal work: zero-delay
     deterministic clock + full buffer (trajectory-identical to the bare
     engine, so the ratio isolates the buffered-aggregation overhead: clock
@@ -267,6 +276,81 @@ def bench_async(alg, grad_fn, data, params0, rounds, tau) -> None:
                f"mean_age={np.mean(m.get('staleness_mean', [0.0])):.2f}")
 
 
+def bench_cohort(alg, grad_fn, data, params0, rounds, tau) -> None:
+    """Cohort-resident state vs the dense engine, plus the million-client
+    memory smoke.
+
+    The paired rows run the bench problem (population = the dense engine's
+    n_clients): the full cohort isolates the chunk-boundary swap overhead
+    at identical math (bitwise parity is pinned in tests/test_cohort.py),
+    the strict sub-cohort runs a third-width working set.  The million row
+    simulates 1e6 clients with a 64-client resident cohort and asserts the
+    memory contract the stage exists for: host bytes scale with the cohort
+    (plus touched rows and the int32 slot map), not the population.
+    """
+    import numpy as np
+
+    from repro.exec import ArraySupplier
+
+    n = data.n_clients
+    chunk = 32
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    dense = make_engine(alg, grad_fn, n, chunk_rounds=chunk)
+    state = dense.init(params0)
+    state, _ = dense.run(state, sup, chunk, seed=1)
+    base_us = _time_run(dense, state, sup, rounds)
+
+    for name, kw in [("cohort_full", dict(population=n, cohort=n)),
+                     ("cohort_third", dict(population=n, cohort=n // 3))]:
+        engine = make_engine(alg, grad_fn, n, chunk_rounds=chunk, **kw)
+        state = engine.init(params0)
+        state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
+        best = _time_run(engine, state, sup, rounds)
+        record(f"exec/{name}", best,
+               f"{base_us / best:.2f}x_vs_dense,"
+               f"touched={engine.population_store.touched}")
+
+    # -- million-client smoke: population >> cohort ----------------------
+    population, cohort, m_rounds = 1_000_000, 64, 8
+    feats, labs = np.asarray(data.features), np.asarray(data.labels)
+
+    def million_batches(r, rng, *, client_ids=None):
+        # a simulated population: global client g serves the bench
+        # problem's client g mod n data, so batch assembly touches ONLY
+        # the cohort's rows
+        rows = np.asarray(client_ids) % feats.shape[0]
+        g = np.random.default_rng((7, r))
+        idx = g.integers(0, feats.shape[1], size=(len(rows), tau, 4))
+        c = rows[:, None, None]
+        return {"a": feats[c, idx], "y": labs[c, idx]}
+
+    engine = make_engine(alg, grad_fn, population, chunk_rounds=4,
+                         cohort=cohort)
+    state = engine.init(params0)
+    with Timer() as t:
+        state, metrics = engine.run(state, million_batches, m_rounds, seed=2)
+    assert len(metrics["train_loss"]) == m_rounds
+    store = engine.population_store
+    import jax
+
+    row_bytes = sum(
+        np.asarray(leaf).nbytes
+        for name in store.entry_names
+        for leaf in jax.tree_util.tree_leaves(store.default_row(name)))
+    dense_est = row_bytes * population
+    # the contract: O(touched x row) + O(population) slot map, never
+    # O(population x row).  touched <= chunks x cohort keeps the bound
+    # tied to the cohort width; the slot map is 4 B/client by design
+    slot_bytes = 4 * population
+    row_store = store.nbytes - slot_bytes
+    assert store.touched <= (m_rounds // 4 + 1) * cohort, store.touched
+    assert row_store < dense_est / 100, (row_store, dense_est)
+    assert store.nbytes < dense_est / 10, (store.nbytes, dense_est)
+    record("exec/cohort_million", t.seconds / m_rounds * 1e6,
+           f"store={store.nbytes}B(rows={row_store}B),"
+           f"dense_est={dense_est}B,touched={store.touched}/{population}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry", action="store_true",
@@ -289,6 +373,7 @@ def main(argv=None) -> None:
     bench_compressed(alg, grad_fn, data, params0, rounds, tau)
     bench_plane(alg, grad_fn, data, params0, rounds, tau)
     bench_async(alg, grad_fn, data, params0, rounds, tau)
+    bench_cohort(alg, grad_fn, data, params0, rounds, tau)
 
     if args.dry:
         print("dry run: BENCH_exec.json not written", flush=True)

@@ -171,3 +171,42 @@ print(f"    prox-gradient norm {opt:.1e}, "
       f"uplink {engine.uplink_bytes_per_client_round} B/client/round, "
       f"downlink {engine.downlink_bytes_per_client_round} B/client/round, "
       f"mean report age {np.mean(m['staleness_mean']):.2f} rounds")
+
+# --- cohort-resident state: simulate a population far larger than memory.
+# EngineConfig(population=P, cohort=C) activates the Cohort stage
+# (repro.sched.cohort): every per-client carry -- algorithm client state,
+# EF residuals, report buffers -- is C-wide inside the compiled scan, and
+# at each chunk boundary the engine scatters the working set home to a
+# host-resident PopulationStore (rows keyed by global client id,
+# materialized lazily: an untouched client costs 4 bytes of slot map) and
+# gathers the next deterministically-sampled cohort.  Host memory is
+# O(C*row) + O(P), never O(P*row) -- exec_bench's exec/cohort_million row
+# runs 1M simulated clients this way.  cohort == population degenerates
+# to the dense engine BITWISE per stage combination (tests/test_cohort.py
+# pins it).  A sub-cohort needs a supplier that accepts client_ids (global
+# int64 ids) and serves THOSE clients' batches -- here global client g
+# trains on data stream g mod 30; repro.exec.ArraySupplier supports the
+# keyword natively (client g's draw depends only on (seed, round), never
+# on who shares its cohort).
+population, cohort = 3000, 30
+
+
+def cohort_batches(r, rng, *, client_ids=None):
+    ids = (np.arange(population) if client_ids is None
+           else np.asarray(client_ids))
+    rows = ids % 30
+    full = make_round_batches(data, tau, None, rng)
+    return {k: np.asarray(v)[rows] for k, v in full.items()}
+
+
+engine = RoundEngine(ours, grad_fn, population,
+                     EngineConfig(chunk_rounds=16, population=population,
+                                  cohort=cohort, transport=TopK(ratio=0.25)))
+state = engine.init(params0)
+state, m = engine.run(state, cohort_batches, 200, seed=0)
+store = engine.population_store
+print(f" dprox over a {population}-client population, {cohort} resident "
+      f"(stages: {', '.join(engine.stack.names())}):")
+print(f"    final loss {m['train_loss'][-1]:.4f}, store holds "
+      f"{store.touched}/{population} materialized rows "
+      f"({store.nbytes / 1e3:.0f} KB host)")

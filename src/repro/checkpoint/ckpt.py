@@ -1,8 +1,24 @@
 """Pytree checkpointing: npz payload + json tree manifest.
 
 Saves any pytree of arrays (model params, full DProxState including the
-per-client correction terms) with dtype/shape manifest so restore can verify
-against a template.  Atomic write (tmp + rename).
+per-client correction terms, the cohort population store) with a
+dtype/shape manifest so restore can verify against a template.  Atomic
+write (tmp + rename; the tmp file is unlinked on any failure mid-write).
+
+Leaf keys are the escaped tree paths joined with ``"/"``: each path
+component backslash-escapes ``"\\"`` and ``"/"`` first, so a dict key that
+*contains* a slash (or a key whose joined string collides with another
+path) cannot silently overwrite a different leaf in the npz payload.  The
+manifest rides under the reserved ``__manifest__`` entry; a leaf whose own
+path escapes to that name is rejected loudly.
+
+Restore templates may be arrays **or** ``jax.ShapeDtypeStruct``-like leaves
+(anything with ``.shape``/``.dtype``) -- restore never reads a template's
+values, only its layout, and verifies the *manifest* dtype against the
+template instead of silently casting whatever is on disk.  (``_storable``
+widens bf16 to f32 on disk; the manifest records the original dtype, so a
+bf16 template round-trips losslessly while an f32 template against a bf16
+checkpoint is a loud mismatch.)
 """
 from __future__ import annotations
 
@@ -15,6 +31,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+MANIFEST_KEY = "__manifest__"
+
 
 def _storable(v: np.ndarray) -> np.ndarray:
     """npz only speaks standard numpy dtypes: widen bf16/f8 etc. to f32
@@ -26,13 +44,37 @@ def _storable(v: np.ndarray) -> np.ndarray:
     return v
 
 
-def _flatten_with_paths(tree):
+def _path_component(p) -> str:
+    """One tree-path entry as a string (DictKey.key / SequenceKey.idx /
+    GetAttrKey.name / FlattenedIndexKey.key, falling back to str(p))."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _escape(component: str) -> str:
+    """Escape one path component so joining with "/" is unambiguous: the
+    escape char itself first, then the separator."""
+    return component.replace("\\", "\\\\").replace("/", "\\/")
+
+
+def _flatten_with_paths(tree, *, as_arrays: bool = True):
+    """Map escaped-path key -> leaf.  ``as_arrays=False`` keeps leaves
+    as-is (restore templates only need ``.shape``/``.dtype``)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        out[key] = np.asarray(leaf)
+        key = "/".join(_escape(_path_component(p)) for p in path)
+        if key == MANIFEST_KEY:
+            raise ValueError(
+                f"leaf path {key!r} collides with the reserved npz manifest "
+                "entry; rename that key")
+        if key in out:
+            raise ValueError(
+                f"two tree paths flatten to the same npz key {key!r}; "
+                "saving would silently drop one leaf")
+        out[key] = np.asarray(leaf) if as_arrays else leaf
     return out, treedef
 
 
@@ -40,37 +82,63 @@ def save(tree: Any, path: str | os.PathLike, metadata: Optional[dict] = None):
     path = pathlib.Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     leaves, _ = _flatten_with_paths(tree)
-    manifest = {
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                   for k, v in leaves.items()},
-        "metadata": metadata or {},
-    }
-    with tempfile.NamedTemporaryFile(dir=path.parent, suffix=".tmp",
-                                     delete=False) as f:
-        np.savez(f, __manifest__=json.dumps(manifest),
-                 **{k: _storable(v) for k, v in leaves.items()})
-        tmp = f.name
-    os.replace(tmp, path)
+    f = tempfile.NamedTemporaryFile(dir=path.parent, suffix=".tmp",
+                                    delete=False)
+    tmp = f.name
+    try:
+        with f:
+            manifest = {
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in leaves.items()},
+                "metadata": metadata or {},
+            }
+            np.savez(f, **{MANIFEST_KEY: json.dumps(manifest)},
+                     **{k: _storable(v) for k, v in leaves.items()})
+        os.replace(tmp, path)
+    except BaseException:
+        # anything between tmp creation and the rename (a non-storable
+        # leaf mid-savez, unserializable metadata, ENOSPC) must not leak
+        # the tmp file
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def restore(path: str | os.PathLike, like: Any) -> Any:
-    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    """Restore into the structure of ``like`` (manifest dtype and shape
+    verified against the template; no silent casts).  ``like`` leaves may
+    be arrays or ShapeDtypeStructs -- only their layout is read."""
     with np.load(path, allow_pickle=False) as z:
-        manifest = json.loads(str(z["__manifest__"]))
-        leaves, treedef = _flatten_with_paths(like)
+        manifest = json.loads(str(z[MANIFEST_KEY]))["leaves"]
+        leaves, treedef = _flatten_with_paths(like, as_arrays=False)
         out = []
         for k, template in leaves.items():
             if k not in z:
                 raise KeyError(f"checkpoint missing leaf {k!r}")
-            arr = z[k]
-            if list(arr.shape) != list(template.shape):
+            if k not in manifest:
+                raise KeyError(f"checkpoint manifest missing leaf {k!r}")
+            shape = tuple(int(s) for s in template.shape)
+            dtype = np.dtype(template.dtype)
+            if manifest[k]["dtype"] != str(dtype):
                 raise ValueError(
-                    f"{k}: checkpoint shape {arr.shape} != template "
-                    f"{template.shape}")
-            out.append(jax.numpy.asarray(arr.astype(template.dtype)))
+                    f"{k}: template dtype {dtype} != checkpointed dtype "
+                    f"{manifest[k]['dtype']} (restore refuses to silently "
+                    "cast; pass a template in the dtype the checkpoint was "
+                    "saved with, or convert explicitly after restoring)")
+            arr = z[k]
+            if list(arr.shape) != list(shape):
+                raise ValueError(
+                    f"{k}: checkpoint shape {tuple(arr.shape)} != template "
+                    f"{shape}")
+            # the on-disk array may be the widened _storable form (bf16
+            # stored as f32): the manifest check above guarantees the cast
+            # back to the template dtype is the saved dtype, not a guess
+            out.append(jax.numpy.asarray(arr.astype(dtype)))
         return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def metadata(path: str | os.PathLike) -> dict:
     with np.load(path, allow_pickle=False) as z:
-        return json.loads(str(z["__manifest__"]))["metadata"]
+        return json.loads(str(z[MANIFEST_KEY]))["metadata"]

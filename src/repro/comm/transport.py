@@ -184,6 +184,26 @@ class Transport:
         new_state = (target - hat) if self.error_feedback else comm_state
         return hat, new_state
 
+    def select_clients(self, mask, new_state, old_state):
+        """The generalized partial-participation guard: advance the
+        compressor state only for the clients in ``mask``.
+
+        Error feedback must not advance for a client that did not actually
+        transmit this round (partial participation, async non-refresh,
+        cohort non-membership) -- otherwise the telescoping identity
+        ``sum m_hat = sum m - e_T`` breaks.  Rows are keyed by position on
+        the client axis, so the same guard works whether that axis indexes
+        global client ids (dense engine) or cohort slots backed by the
+        global-id-keyed population store (:mod:`repro.sched.cohort`
+        scatters the rows home under their global ids at chunk
+        boundaries).  State-free transports pass through untouched."""
+        if not self.error_feedback:
+            return new_state
+        return jax.tree_util.tree_map(
+            lambda n, o: jnp.where(
+                mask.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            new_state, old_state)
+
     def uplink_bytes(self, msg_template) -> int:
         """Bytes on the wire per client per round for this message."""
         raise NotImplementedError
@@ -508,6 +528,13 @@ class PlaneTransport:
 
     def compress(self, comm_state, flat, key):
         return self.inner.compress_plane(comm_state, flat, key, self.spec)
+
+    def select_clients(self, mask, new_state, old_state):
+        """Per-client-row EF advance guard on the flat residual (see
+        :meth:`Transport.select_clients`)."""
+        if not self.inner.error_feedback:
+            return new_state
+        return jnp.where(mask[:, None], new_state, old_state)
 
     def uplink_bytes(self, msg_template) -> int:
         return self.inner.uplink_bytes(msg_template)

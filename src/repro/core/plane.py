@@ -135,6 +135,13 @@ class SegmentSpec:
         return self.d_pad - self.d
 
     @property
+    def row_nbytes(self) -> int:
+        """Bytes of one plane row (one client's padded d-vector) -- what
+        cohort-resident memory accounting multiplies by the cohort width,
+        and dense accounting multiplies by the population."""
+        return self.d_pad * np.dtype(self.dtype).itemsize
+
+    @property
     def rows(self) -> int:
         """Plane length in 128-lane rows (0 remainder iff tile % LANES == 0
         or d_pad happens to align; kernel callers should build the spec with
@@ -197,6 +204,23 @@ view_as_tree = unflatten
 def zeros(spec: SegmentSpec, *batch: int):
     """A zero plane ``(*batch, d_pad)`` in the spec's dtype."""
     return jnp.zeros(tuple(batch) + (spec.d_pad,), spec.dtype)
+
+
+def take_rows(plane, ids, axis: int = 0):
+    """Cohort-sliced view of a population plane: rows ``ids`` along the
+    client axis.  A ``(population, d_pad)`` plane becomes the fixed-width
+    ``(cohort, d_pad)`` working set of :mod:`repro.sched.cohort`; queued
+    buffers pass ``axis=1`` for their ``(depth, clients, d_pad)`` layout."""
+    return jnp.take(jnp.asarray(plane), jnp.asarray(ids), axis=axis)
+
+
+def put_rows(plane, ids, rows, axis: int = 0):
+    """Scatter cohort rows back into a population plane (the inverse of
+    :func:`take_rows` for unique ``ids``); returns the updated plane."""
+    plane = jnp.asarray(plane)
+    idx: list = [slice(None)] * plane.ndim
+    idx[axis] = jnp.asarray(ids)
+    return plane.at[tuple(idx)].set(rows)
 
 
 @jax.tree_util.register_pytree_node_class

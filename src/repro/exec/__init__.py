@@ -22,9 +22,18 @@ compiled ``lax.scan``:
   Asynchrony   ``clock=``,      simulated asynchrony (:mod:`repro.sched`):
                ``buffer_size=``,virtual-time clocks, FedBuff-style
                ``staleness=``,  buffered commits, staleness weighting +
-               ``queue_depth=`` ledger, and an optional per-client
-                                report queue (clients race ahead of
-                                delivery)
+               ``queue_depth=`` ledger, an optional per-client report
+               ``edges=``       queue (clients race ahead of delivery),
+                                and an optional client->edge->root
+                                aggregation tree for the commit
+  Cohort       ``population=``, cohort-resident client state
+               ``cohort=``      (:mod:`repro.sched.cohort`): per-client
+                                carries are cohort-width inside the scan,
+                                gathered/scattered against a host-resident
+                                lazily-materialized population store at
+                                chunk boundaries, so host memory scales
+                                with the cohort (plus touched rows), not
+                                the population
   ============ ================ ========================================
 
 ``backend=`` ("inline" / "sharded" / "protocol" / "compressed" / "async")
@@ -58,7 +67,8 @@ buffer == bare bitwise, and stays bitwise with a ratio-1.0 transport
 stacked on top (tests/test_sched.py, tests/test_stages.py); the
 plane-backed engine == the per-leaf engine bitwise per stage combination,
 and ``ClockModel(upload=None)`` == the single-stream clock bitwise
-(tests/test_plane.py).
+(tests/test_plane.py); ``cohort == population`` == the dense engine
+bitwise per stage combination (tests/test_cohort.py).
 
 On top of the stage stack, the engine owns device-resident *multi-round
 chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with
@@ -95,13 +105,14 @@ first-class engine option (``EngineConfig.participation``).
 from repro.exec.engine import (EngineConfig, RoundEngine,
                                rounds_to_boundary, sample_active_masks,
                                server_state_fields)
-from repro.exec.stages import (Asynchrony, DownlinkComm, Placement,
+from repro.exec.stages import (Asynchrony, Cohort, DownlinkComm, Placement,
                                StageStack, UplinkComm)
 from repro.exec.suppliers import (ArraySupplier, BatchSupplier,
-                                  CallableSupplier, as_supplier)
+                                  CallableSupplier, as_supplier,
+                                  supports_client_ids)
 
 __all__ = ["EngineConfig", "RoundEngine", "rounds_to_boundary",
            "sample_active_masks", "server_state_fields", "ArraySupplier",
            "BatchSupplier", "CallableSupplier", "as_supplier",
-           "StageStack", "Placement", "UplinkComm", "DownlinkComm",
-           "Asynchrony"]
+           "supports_client_ids", "StageStack", "Placement", "UplinkComm",
+           "DownlinkComm", "Asynchrony", "Cohort"]

@@ -81,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import FedAlgorithm
-from repro.exec.stages import (Asynchrony, DownlinkComm, Placement,
+from repro.exec.stages import (Asynchrony, Cohort, DownlinkComm, Placement,
                                StageStack, UplinkComm)
 from repro.exec.suppliers import BatchSupplier, as_supplier
 
@@ -164,6 +164,32 @@ class EngineConfig:
                      serialize FIFO); ``None`` keeps the historical
                      one-slot buffer; ``1`` is its queue-form equivalent.
     clock_seed     : seed of the clock model's PRNG key stream.
+    edges          : if set, the client->edge->root aggregation tree of the
+                     buffered commit: arrival selection and the commit
+                     normalization reduce per-edge first, so the root only
+                     touches ``edges * buffer_size`` candidates instead of
+                     the full client axis.  Must divide the working client
+                     width (the cohort width under cohort-resident state);
+                     ``None``/1 is the flat selection, bitwise the
+                     historical path.
+
+    Cohort stage (active when ``population`` or ``cohort`` is set; see
+    :mod:`repro.sched.cohort`):
+    population     : total simulated clients.  The engine's ``n_clients``
+                     argument IS the population under cohort-resident
+                     state, so when both are given they must agree; the
+                     per-client state lives in a host-resident, lazily
+                     materialized population store, and only ``cohort``
+                     rows are device-resident at a time.
+    cohort         : the participating working-set width per scan chunk
+                     (every per-client carry -- algorithm client fields,
+                     error-feedback residuals, report buffers -- becomes
+                     ``(cohort, ...)`` inside the compiled scan, gathered/
+                     scattered against the store at chunk boundaries).
+                     Defaults to the population; ``cohort == population``
+                     reproduces the dense engine bitwise (pinned in
+                     tests/test_cohort.py).
+    cohort_seed    : seed of the per-chunk cohort id draws.
 
     protocol       : the literal per-client message-passing form of
                      Algorithm 1 (equivalence testing); composes with no
@@ -192,6 +218,10 @@ class EngineConfig:
     staleness: Any = None
     queue_depth: Optional[int] = None
     clock_seed: int = 0
+    edges: Optional[int] = None
+    population: Optional[int] = None
+    cohort: Optional[int] = None
+    cohort_seed: int = 0
     protocol: bool = False
 
     def resolve(self) -> StageStack:
@@ -222,7 +252,9 @@ class EngineConfig:
         async_on = (self.backend == "async" or self.clock is not None
                     or self.buffer_size is not None
                     or self.staleness is not None
-                    or self.queue_depth is not None)
+                    or self.queue_depth is not None
+                    or self.edges is not None)
+        cohort_on = self.population is not None or self.cohort is not None
         downlink_on = self.downlink is not None
         uplink_on = (self.transport is not None
                      or self.backend == "compressed"
@@ -232,6 +264,42 @@ class EngineConfig:
         if self.plane and not self.jit:
             raise ValueError("plane mode threads flat carries through the "
                              "compiled scan and requires jit")
+        if cohort_on:
+            if not self.jit:
+                raise ValueError(
+                    "cohort-resident state gathers/scatters the compiled "
+                    "scan's carry slices at chunk boundaries and requires "
+                    "jit")
+            if self.protocol or self.backend == "protocol":
+                raise ValueError(
+                    "cohort-resident state does not apply to the protocol "
+                    "mode (literal per-client message passing has no "
+                    "fixed-width working set)")
+            if self.participation is not None:
+                raise ValueError(
+                    "cohort-resident state subsumes participation: the "
+                    "sampled cohort IS the participating subset (set "
+                    "cohort < population instead of a participation "
+                    "fraction)")
+            if self.mesh is not None or self.backend == "sharded":
+                raise ValueError(
+                    "cohort-resident state does not yet compose with the "
+                    "placement stage (mapping the edge level onto the mesh "
+                    "axis lands with the accelerator validation batch); "
+                    "drop mesh= or run the dense engine")
+            if self.population is not None and self.population < 1:
+                raise ValueError(f"population must be >= 1, got "
+                                 f"{self.population}")
+            if self.cohort is not None and self.cohort < 1:
+                raise ValueError(f"cohort must be >= 1, got {self.cohort}")
+            if (self.population is not None and self.cohort is not None
+                    and self.cohort > self.population):
+                raise ValueError(
+                    f"cohort={self.cohort} exceeds population="
+                    f"{self.population}; the cohort is the participating "
+                    "subset of the population")
+        if self.edges is not None and self.edges < 1:
+            raise ValueError(f"edges must be >= 1, got {self.edges}")
         if self.protocol or self.backend == "protocol":
             if self.participation is not None:
                 raise ValueError("the protocol mode does not support "
@@ -291,12 +359,42 @@ class EngineConfig:
                       if downlink_on else None),
             asynchrony=(Asynchrony(self.clock, self.buffer_size,
                                    self.staleness, self.queue_depth,
-                                   self.clock_seed)
+                                   self.clock_seed, edges=self.edges)
                         if async_on else None),
+            cohort=(Cohort(self.population, self.cohort, self.cohort_seed)
+                    if cohort_on else None),
         )
 
-    def validate(self) -> None:
+    def validate(self, n_clients: Optional[int] = None) -> None:
+        """Validate the config; with ``n_clients`` (the engine's client
+        count -- the population under cohort-resident state) also check the
+        width-dependent geometry: cohort vs population, buffer_size and
+        edges vs the working client width.  These are exactly the checks
+        the engine itself performs at construction, surfaced early."""
         self.resolve()
+        if n_clients is None:
+            return
+        working = n_clients
+        if self.population is not None or self.cohort is not None:
+            from repro.sched.cohort import CohortSpec
+
+            if self.population is not None and self.population != n_clients:
+                raise ValueError(
+                    f"EngineConfig(population={self.population}) disagrees "
+                    f"with n_clients={n_clients}; the engine's client count "
+                    "IS the population under cohort-resident state")
+            working = self.cohort if self.cohort is not None else n_clients
+            CohortSpec(n_clients, working, self.cohort_seed).validate()
+        if (self.buffer_size is not None or self.edges is not None
+                or self.clock is not None or self.staleness is not None
+                or self.queue_depth is not None or self.backend == "async"):
+            from repro.sched.aggregator import _validate_buffer
+
+            _validate_buffer(
+                self.buffer_size if self.buffer_size is not None
+                else working,
+                working,
+                self.edges if self.edges is not None else 1)
 
 
 def rounds_to_boundary(r: int, every: int, total: int) -> int:
@@ -359,10 +457,28 @@ class RoundEngine:
         self.algorithm = algorithm
         self.grad_fn = grad_fn
         self.n_clients = n_clients
+        self.population = n_clients
         self.config = config
         self.stack = stack
         self.transport = None
         self.downlink = None
+        self._cohort = None
+        self._cohort_round = 0
+        if stack.cohort is not None:
+            from repro.sched.cohort import ResidentCohort
+
+            if (stack.cohort.population is not None
+                    and stack.cohort.population != n_clients):
+                raise ValueError(
+                    f"EngineConfig(population={stack.cohort.population}) "
+                    f"disagrees with the engine's n_clients={n_clients}; "
+                    "the engine's client count IS the population under "
+                    "cohort-resident state (pass the same value, or drop "
+                    "the population field)")
+            self._cohort = ResidentCohort(stack.cohort.spec(n_clients))
+            # every stage below sees the WORKING width: carries, buffers
+            # and round halves are cohort-wide inside the compiled scan
+            self.n_clients = self._cohort.spec.cohort
         # per-client wire bytes of one uplink message / one broadcast;
         # filled in lazily by the communication stages once the message
         # shape is known
@@ -428,12 +544,15 @@ class RoundEngine:
         asyn = self.stack.asynchrony
         clock = asyn.resolve_clock()
         staleness = asyn.resolve_staleness()
+        from repro.sched.aggregator import _validate_buffer
+
         buffer_size = (asyn.buffer_size if asyn.buffer_size is not None
                        else self.n_clients)
-        if not 1 <= buffer_size <= self.n_clients:
-            raise ValueError(
-                f"buffer_size must be in [1, n_clients={self.n_clients}], "
-                f"got {buffer_size}")
+        self.edges = asyn.edges if asyn.edges is not None else 1
+        # n_clients here is the WORKING width (the cohort width under
+        # cohort-resident state): the buffer and the edge tree partition
+        # the participating clients, not the population
+        _validate_buffer(buffer_size, self.n_clients, self.edges)
         self.clock, self.staleness, self.buffer_size = (clock, staleness,
                                                         buffer_size)
         self.queue_depth = asyn.queue_depth
@@ -451,7 +570,7 @@ class RoundEngine:
             self.clock, self.buffer_size, self.n_clients, self.staleness,
             accepts_active=self._accepts_active,
             queue_depth=self.queue_depth, downlink=self.downlink,
-            server_fields_fn=server_fields_fn)
+            server_fields_fn=server_fields_fn, edges=self.edges)
 
     # -- carry slices (read-only views of the stage state) ----------------
 
@@ -570,11 +689,7 @@ class RoundEngine:
                         # error-feedback residuals must not advance -- else
                         # the telescoping identity (sent = produced - e_T)
                         # breaks per skipped round
-                        cs = jax.tree_util.tree_map(
-                            lambda new, old: jnp.where(
-                                a.reshape((-1,) + (1,) * (new.ndim - 1)),
-                                new, old),
-                            cs_new, cs)
+                        cs = transport.select_clients(a, cs_new, cs)
                         st, info = server_fn(st_v, msg_hat, aux, active=a)
                     else:
                         cs = cs_new
@@ -769,6 +884,136 @@ class RoundEngine:
         state, infos = self._invoke_stacked(state, batches, act)
         return state, jax.device_get(infos)  # the chunk's ONE host sync
 
+    # -- cohort residency (stack.cohort; see repro.sched.cohort) ----------
+
+    @property
+    def population_store(self):
+        """The host-resident population store (``None`` without the cohort
+        stage).  Current as of the last chunk boundary / :meth:`run`
+        return; call :meth:`flush_cohort` first after ``step`` loops."""
+        return None if self._cohort is None else self._cohort.store
+
+    @property
+    def cohort_ids(self):
+        """Global client ids of the resident working set (``None`` without
+        the cohort stage).  Before the first chunk this is the cohort the
+        NEXT :meth:`step` will materialize (sampling is deterministic in
+        the round index), so a ``step`` caller can gather its cohort-width
+        batches before ever stepping."""
+        if self._cohort is None:
+            return None
+        if self._cohort.current_ids is None:
+            return self._cohort.spec.sample(self._cohort_round)
+        return self._cohort.current_ids
+
+    def _cohort_entries(self, state) -> dict:
+        """``name -> (tree, client_axes)`` of every per-client carry slice
+        the resident cohort swaps: the algorithm's client-role state
+        fields, the uplink error-feedback state, and the per-client fields
+        of the async report buffer/queue.  (The downlink shadow is
+        single-sender server state; PRNG keys and scalar ledgers are
+        global -- none of them carry a client axis.)"""
+        try:
+            roles = self.algorithm.state_roles()
+        except NotImplementedError as e:
+            raise ValueError(
+                f"algorithm {self.algorithm.name!r} declares no state "
+                "roles; cohort-resident state needs state_roles() to know "
+                "which fields carry the client axis") from e
+        entries: dict = {}
+        client = {f: getattr(state, f)
+                  for f, r in roles.items() if r == "client"}
+        if client:
+            entries["alg"] = (client, {f: 0 for f in client})
+        if self._extras is not None:
+            comm = self._extras.get("comm")
+            if comm is not None and jax.tree_util.tree_leaves(comm):
+                entries["comm"] = (comm, 0)
+            sched = self._extras.get("sched")
+            if sched is not None:
+                from repro.sched.cohort import sched_client_axes
+
+                axes = sched_client_axes(sched)
+                fields = {f: getattr(sched, f)
+                          for f, a in axes.items() if a is not None}
+                entries["sched"] = (fields,
+                                    {f: axes[f] for f in fields})
+        return entries
+
+    def _cohort_swap(self, state, chunk_start: int):
+        """Advance the resident cohort to the chunk starting at global
+        round ``chunk_start``: scatter the current working set home under
+        its global ids, gather the newly sampled cohort's rows.  The first
+        call registers the store entries from the initial working set
+        (federated per-client init is client-uniform, so the init rows ARE
+        the store's default rows and nothing needs gathering)."""
+        rc = self._cohort
+        ids = rc.sample(chunk_start)
+        entries = self._cohort_entries(state)
+        if rc.current_ids is None:
+            for name, (tree, axes) in entries.items():
+                rc.register(name, tree, axes)
+            rc.current_ids = ids
+            return state
+        for name, (tree, _axes) in entries.items():
+            rc.scatter(name, rc.current_ids, tree)
+        rc.current_ids = ids
+        gathered = {name: rc.gather(name, ids) for name in entries}
+        if "alg" in gathered:
+            state = state._replace(**gathered["alg"])
+        if "comm" in gathered:
+            self._extras["comm"] = gathered["comm"]
+        if "sched" in gathered:
+            self._extras["sched"] = self._extras["sched"]._replace(
+                **gathered["sched"])
+        return state
+
+    def flush_cohort(self, state) -> None:
+        """Scatter the resident working set home to the population store.
+        :meth:`run` does this before returning; call it manually after a
+        ``step``-driven loop before reading or checkpointing the store."""
+        rc = self._cohort
+        if rc is None or rc.current_ids is None:
+            return
+        for name, (tree, _axes) in self._cohort_entries(state).items():
+            rc.scatter(name, rc.current_ids, tree)
+
+    def _run_cohort_chunk(self, state, supplier, r0: int, c: int, rng,
+                          use_stacked: bool):
+        """One chunk under cohort residency: sample the cohort's global
+        ids, draw THEIR batches, swap the working set at the boundary, run
+        the compiled chunk."""
+        from repro.exec.suppliers import supports_client_ids
+
+        rc = self._cohort
+        ids = rc.sample(r0)
+        kw = {}
+        if not rc.spec.is_full:
+            # the full cohort keeps the suppliers' historical call shape
+            # (bitwise the dense engine); a strict sub-cohort needs the
+            # supplier to draw batches for specific global ids
+            if not supports_client_ids(supplier):
+                raise ValueError(
+                    f"supplier {type(supplier).__name__} does not accept "
+                    "client_ids: a strict sub-cohort (cohort < population) "
+                    "needs per-id batch draws -- accept a client_ids "
+                    "keyword (an int64 array of global ids) in "
+                    "sample_round/sample_chunk, or use "
+                    "repro.exec.ArraySupplier")
+            kw["client_ids"] = ids
+        if use_stacked:
+            batches = supplier.sample_chunk(r0, c, rng, **kw)
+        else:
+            batches = _stack_batches([
+                supplier.sample_round(r0 + i, rng, **kw) for i in range(c)])
+        if self.stack.split and self._extras is None:
+            # the stage carries must exist before the first swap registers
+            # them (their init rows are the store's default rows)
+            self._extras = self._init_extras(state, batches)
+        state = self._cohort_swap(state, r0)
+        state, infos = self._invoke_stacked(state, batches, None)
+        return state, jax.device_get(infos)  # the chunk's ONE host sync
+
     # -- public API -------------------------------------------------------
 
     def run(
@@ -819,7 +1064,10 @@ class RoundEngine:
         done = 0
         while done < rounds:
             c = min(chunk, rounds - done)
-            if use_stacked:
+            if self._cohort is not None:
+                state, infos = self._run_cohort_chunk(
+                    state, supplier, start_round + done, c, rng, use_stacked)
+            elif use_stacked:
                 batches = supplier.sample_chunk(start_round + done, c, rng)
                 state, infos = self._invoke_stacked(state, batches, None)
                 infos = jax.device_get(infos)  # the chunk's ONE host sync
@@ -848,6 +1096,9 @@ class RoundEngine:
                 for i in range(c):
                     metrics_cb(start_round + done + i, per_round_infos[i])
             done += c
+        if self._cohort is not None:
+            self._cohort_round = start_round + rounds
+            self.flush_cohort(state)
         return state, metrics
 
     def step(self, state, batches, active=None):
@@ -877,6 +1128,15 @@ class RoundEngine:
         act = None
         if self._use_active:
             act = jnp.asarray(np.asarray(active)[None])
+        if self._cohort is not None:
+            # step() runs against the CURRENT resident cohort (batches are
+            # caller-supplied, so the engine cannot resample ids for them;
+            # use run() for per-chunk cohort resampling).  The first call
+            # samples + registers the working set.
+            if self.stack.split and self._extras is None:
+                self._extras = self._init_extras(state, per_chunk)
+            if self._cohort.current_ids is None:
+                state = self._cohort_swap(state, self._cohort_round)
         state, infos = self._invoke_stacked(state, per_chunk, act)
         return state, {k: v[0] for k, v in infos.items()}
 

@@ -19,7 +19,12 @@ carry, and each freely composable with the others:
                client-visible shadow state)
   Asynchrony   simulated client asynchrony via :mod:`repro.sched`
                (carry: the in-flight report buffer/queue + staleness
-               ledger + clock key)
+               ledger + clock key; optionally a client->edge->root
+               aggregation tree via ``edges``)
+  Cohort       cohort-resident client state (:mod:`repro.sched.cohort`):
+               per-client carry slices are cohort-width inside the scan,
+               gathered from / scattered to a host-resident population
+               store at chunk boundaries (no carry slice of its own)
   ============ =========================================================
 
 :meth:`repro.exec.EngineConfig.resolve` builds a :class:`StageStack` from
@@ -176,6 +181,11 @@ class Asynchrony:
     queue_depth: Optional[int] = None
     seed: int = 0
     name: str = "asynchrony"
+    # client->edge->root aggregation tree: arrival selection and commit
+    # normalization reduce per-edge first, so the root never touches the
+    # full client axis (None/1 = flat selection, bitwise the historical
+    # path; see repro.sched.aggregator._earliest_k)
+    edges: Optional[int] = None
 
     def resolve_clock(self):
         from repro.sched import DeterministicClock, get_clock
@@ -198,6 +208,37 @@ class Asynchrony:
 
 
 @dataclass(frozen=True)
+class Cohort:
+    """Cohort-resident client state (:mod:`repro.sched.cohort`).
+
+    Unlike the other stages this one lives at the *chunk boundary*, not in
+    the scan carry: the engine's per-client carry slices (algorithm client
+    fields, compressor error-feedback residuals, report buffers) are
+    cohort-width inside the compiled scan, and this stage gathers/scatters
+    them against the host-resident population store between chunks.
+    ``cohort == population`` degenerates bitwise to the dense engine.
+    """
+
+    population: Optional[int] = None  # None: the engine's n_clients
+    cohort: Optional[int] = None      # None: the full population
+    seed: int = 0
+    name: str = "cohort"
+
+    def spec(self, n_clients: int):
+        """The resolved :class:`repro.sched.cohort.CohortSpec` for an
+        engine with ``n_clients`` clients (the population)."""
+        from repro.sched.cohort import CohortSpec
+
+        population = (self.population if self.population is not None
+                      else n_clients)
+        spec = CohortSpec(population,
+                          self.cohort if self.cohort is not None
+                          else population, self.seed)
+        spec.validate()
+        return spec
+
+
+@dataclass(frozen=True)
 class StageStack:
     """The resolved, validated stage combination one engine runs.
 
@@ -210,6 +251,7 @@ class StageStack:
     uplink: Optional[UplinkComm] = None
     downlink: Optional[DownlinkComm] = None
     asynchrony: Optional[Asynchrony] = None
+    cohort: Optional[Cohort] = None
     protocol: bool = False
 
     @property
@@ -223,5 +265,6 @@ class StageStack:
         if self.protocol:
             return ("protocol",)
         return tuple(s.name for s in (self.placement, self.uplink,
-                                      self.downlink, self.asynchrony)
+                                      self.downlink, self.asynchrony,
+                                      self.cohort)
                      if s is not None)

@@ -63,28 +63,74 @@ class BatchSupplier:
 
     donate_chunks: bool = False
 
-    def sample_round(self, round_idx: int, rng: np.random.Generator) -> Batch:
+    def sample_round(self, round_idx: int, rng: np.random.Generator,
+                     *, client_ids=None) -> Batch:
+        """One round's batches ``(n_clients, tau, ...)``.  ``client_ids``
+        (an int64 array of global client ids, passed by the engine's
+        cohort-resident mode) restricts the draw to those clients' data,
+        leading axis ``len(client_ids)``; suppliers that cannot serve
+        per-id draws simply don't accept the keyword (the engine checks
+        :func:`supports_client_ids` before passing it)."""
         raise NotImplementedError
 
     def sample_chunk(self, start_round: int, n_rounds: int,
-                     rng: np.random.Generator) -> Batch:
+                     rng: np.random.Generator, *, client_ids=None) -> Batch:
         """Batches for ``n_rounds`` rounds, leaves gaining a leading rounds
         axis.  Default: per-round sampling + host stack (correct everywhere;
         subclasses override with a vectorized path)."""
         from repro.exec.engine import _stack_batches
 
-        return _stack_batches([self.sample_round(start_round + i, rng)
+        kw = {} if client_ids is None else {"client_ids": client_ids}
+        return _stack_batches([self.sample_round(start_round + i, rng, **kw)
                                for i in range(n_rounds)])
 
 
 class CallableSupplier(BatchSupplier):
-    """Adapter giving a plain ``fn(round_idx, rng)`` the supplier surface."""
+    """Adapter giving a plain ``fn(round_idx, rng)`` the supplier surface.
+
+    A callable that accepts a ``client_ids`` keyword (or ``**kwargs``)
+    serves per-id draws for the engine's cohort-resident mode; plain
+    ``fn(round_idx, rng)`` callables keep working and simply don't."""
 
     def __init__(self, fn):
-        self.fn = fn
+        import inspect
 
-    def sample_round(self, round_idx, rng):
+        self.fn = fn
+        try:
+            params = inspect.signature(fn).parameters.values()
+            self.accepts_client_ids = any(
+                p.name == "client_ids"
+                or p.kind is inspect.Parameter.VAR_KEYWORD for p in params)
+        except (TypeError, ValueError):
+            self.accepts_client_ids = False
+
+    def sample_round(self, round_idx, rng, *, client_ids=None):
+        if client_ids is not None:
+            return self.fn(round_idx, rng, client_ids=client_ids)
         return self.fn(round_idx, rng)
+
+
+def supports_client_ids(supplier) -> bool:
+    """Whether a supplier serves per-id batch draws (the ``client_ids``
+    keyword a strict sub-cohort needs).  A supplier may declare it
+    explicitly via an ``accepts_client_ids`` attribute; otherwise both
+    ``sample_round`` and ``sample_chunk`` must accept the keyword."""
+    import inspect
+
+    explicit = getattr(supplier, "accepts_client_ids", None)
+    if explicit is not None:
+        return bool(explicit)
+
+    def accepts(fn):
+        try:
+            params = inspect.signature(fn).parameters.values()
+        except (TypeError, ValueError):
+            return False
+        return any(p.name == "client_ids"
+                   or p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params)
+
+    return accepts(supplier.sample_round) and accepts(supplier.sample_chunk)
 
 
 def as_supplier(supplier) -> BatchSupplier:
@@ -150,24 +196,31 @@ class ArraySupplier(BatchSupplier):
 
     # -- internals --------------------------------------------------------
 
-    def _round_idx(self, r: int) -> np.ndarray:
+    def _round_idx(self, r: int, client_ids=None) -> np.ndarray:
+        # the draw is always the full (n_clients, ...) stream, subset AFTER:
+        # a client's minibatch stream depends only on (seed, round), never
+        # on which other clients share its cohort
         rng = np.random.default_rng((self.seed, r))
-        return rng.integers(0, self.n_examples,
-                            size=(self.n_clients, self.tau, self.batch_size))
+        idx = rng.integers(0, self.n_examples,
+                           size=(self.n_clients, self.tau, self.batch_size))
+        return idx if client_ids is None else idx[np.asarray(client_ids)]
 
-    def _gather(self, idx: np.ndarray) -> Batch:
-        # idx: (..., n_clients, tau, b); result leaves (..., n_clients, tau,
+    def _gather(self, idx: np.ndarray, client_ids=None) -> Batch:
+        # idx: (..., clients, tau, b); result leaves (..., clients, tau,
         # b, *example_shape) -- one fancy-gather per array, on device when
         # the cache is device-resident
-        cidx = np.arange(self.n_clients).reshape(
-            (1,) * (idx.ndim - 3) + (self.n_clients, 1, 1))
+        rows = (np.arange(self.n_clients) if client_ids is None
+                else np.asarray(client_ids))
+        cidx = rows.reshape((1,) * (idx.ndim - 3) + (len(rows), 1, 1))
         return {k: v[cidx, idx] for k, v in self._arrays.items()}
 
-    def _full_batch(self, lead: tuple) -> Batch:
+    def _full_batch(self, lead: tuple, client_ids=None) -> Batch:
         xp = jnp if self.device_cache else np
 
         def one(v):
-            shape = lead + (self.n_clients, self.tau) + tuple(v.shape[1:])
+            if client_ids is not None:
+                v = v[np.asarray(client_ids)]  # copy: the cohort's rows
+            shape = lead + (v.shape[0], self.tau) + tuple(v.shape[1:])
             src = v[:, None] if not lead else v[None, :, None]
             return xp.broadcast_to(src, shape)
 
@@ -175,15 +228,16 @@ class ArraySupplier(BatchSupplier):
 
     # -- supplier protocol ------------------------------------------------
 
-    def sample_round(self, round_idx, rng=None):
+    def sample_round(self, round_idx, rng=None, *, client_ids=None):
         if self.batch_size is None:
-            return self._full_batch(())
-        return self._gather(self._round_idx(round_idx))
+            return self._full_batch((), client_ids)
+        return self._gather(self._round_idx(round_idx, client_ids),
+                            client_ids)
 
-    def _chunk(self, start_round, n_rounds):
-        idx = np.stack([self._round_idx(start_round + i)
+    def _chunk(self, start_round, n_rounds, client_ids=None):
+        idx = np.stack([self._round_idx(start_round + i, client_ids)
                         for i in range(n_rounds)])
-        chunk = self._gather(idx)
+        chunk = self._gather(idx, client_ids)
         if (self.prefetch and not self.device_cache
                 and jax.default_backend() != "cpu"):
             # stage the host gather onto the accelerator from the staging
@@ -193,9 +247,16 @@ class ArraySupplier(BatchSupplier):
             chunk = jax.device_put(chunk)
         return chunk
 
-    def sample_chunk(self, start_round, n_rounds, rng=None):
+    def sample_chunk(self, start_round, n_rounds, rng=None, *,
+                     client_ids=None):
         if self.batch_size is None:
-            return self._full_batch((n_rounds,))  # broadcast view: no copy
+            # broadcast view (full population) / cohort-rows copy: no
+            # per-round duplication either way
+            return self._full_batch((n_rounds,), client_ids)
+        if client_ids is not None:
+            # per-id draws bypass the double-buffer: the NEXT chunk's
+            # cohort ids are not known yet, so there is nothing to stage
+            return self._chunk(start_round, n_rounds, client_ids)
         if not self.prefetch:
             return self._chunk(start_round, n_rounds)
         if self._executor is None:

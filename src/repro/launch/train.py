@@ -13,10 +13,14 @@ compresses the uplink, ``--downlink ...`` compresses the broadcast,
 ``--clock {deterministic,lognormal,straggler}`` / ``--buffer-size K`` /
 ``--staleness {uniform,poly}`` + ``--staleness-correct`` /
 ``--queue-depth Q`` activate simulated asynchrony (``--async`` alone picks
-the straggler clock), and batches come from a chunk-aware
-:class:`repro.exec.ArraySupplier` over the token streams (``--device-cache``
-keeps them device-resident, ``--prefetch`` overlaps the next chunk's batch
-assembly with the current compiled call and donates the staged chunks).
+the straggler clock), ``--edges E`` aggregates commits through a
+client->edge->root tree, ``--population P`` / ``--cohort C`` keep only a
+C-wide working set of per-client state resident (the rest lives in a host
+population store, checkpointed as a ``.store.npz`` sidecar of ``--ckpt``),
+and batches come from a chunk-aware :class:`repro.exec.ArraySupplier` over
+the token streams (``--device-cache`` keeps them device-resident,
+``--prefetch`` overlaps the next chunk's batch assembly with the current
+compiled call and donates the staged chunks).
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm_1_6b \
         --scale smoke --rounds 50 --tau 4 --clients 4 --ckpt out/ck.npz
@@ -154,6 +158,20 @@ def main(argv=None):
                          "from the clock's compute stream (uploads "
                          "serialize FIFO under --queue-depth; default: "
                          "single-stream clock)")
+    ap.add_argument("--edges", type=int, default=None,
+                    help="async: aggregate commits through a client->edge"
+                         "->root tree with this many edge servers (must "
+                         "divide --clients; default: flat aggregation)")
+    ap.add_argument("--population", type=int, default=None,
+                    help="cohort: total simulated client population "
+                         "(default: --clients); with --cohort the engine "
+                         "keeps only a cohort-width working set resident "
+                         "and swaps per-client state against a host "
+                         "population store at chunk boundaries")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="cohort: resident working-set width (default: the "
+                         "full population; cohort == population reproduces "
+                         "the dense engine bitwise)")
     args = ap.parse_args(argv)
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
@@ -191,7 +209,8 @@ def main(argv=None):
     run_async = (args.run_async or args.clock is not None
                  or args.buffer_size is not None
                  or args.staleness is not None or args.staleness_correct
-                 or args.queue_depth is not None or args.upload is not None)
+                 or args.queue_depth is not None or args.upload is not None
+                 or args.edges is not None)
     clock = staleness = None
     if run_async:
         from repro.sched import Staleness, get_clock
@@ -201,13 +220,17 @@ def main(argv=None):
         clock = get_clock(args.clock or "straggler", **clock_kw)
         staleness = Staleness(args.staleness or "uniform",
                               correct=args.staleness_correct)
+    population = args.population if args.population is not None \
+        else args.clients
     engine = RoundEngine(
-        alg, grad_fn, args.clients,
+        alg, grad_fn, population,
         EngineConfig(chunk_rounds=args.chunk,
                      participation=args.participation, transport=transport,
                      downlink=downlink, clock=clock,
                      buffer_size=args.buffer_size, staleness=staleness,
-                     queue_depth=args.queue_depth, plane=args.plane))
+                     queue_depth=args.queue_depth, plane=args.plane,
+                     edges=args.edges, population=args.population,
+                     cohort=args.cohort))
     state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 
@@ -217,6 +240,17 @@ def main(argv=None):
         {"tokens": streams.astype(np.int32)}, args.tau, args.batch,
         seed=args.seed, device_cache=args.device_cache,
         prefetch=args.prefetch)
+    if population != args.clients:
+        # simulated population >> data streams: global client g trains on
+        # stream g mod --clients, so batch assembly only ever touches the
+        # resident cohort's rows (never population-width)
+        inner = sample_batches
+
+        def sample_batches(r, rng, *, client_ids=None):
+            ids = (np.arange(population) if client_ids is None
+                   else np.asarray(client_ids))
+            return inner.sample_round(r, rng,
+                                      client_ids=ids % args.clients)
 
     t0 = time.time()
     last_loss = float("nan")
@@ -245,13 +279,26 @@ def main(argv=None):
             ckpt.save(state, args.ckpt,
                       metadata={"round": r, "arch": cfg.name,
                                 "algorithm": args.algorithm})
+            if engine.population_store is not None:
+                # run() flushed the resident cohort at the segment end, so
+                # the store rows are current; the sidecar checkpoint keeps
+                # the swapped-out per-client state restorable too
+                engine.population_store.save(
+                    args.ckpt + ".store.npz", metadata={"round": r})
     final = engine.global_params(state)
     if args.ckpt:
-        print(f"checkpoint -> {args.ckpt}")
+        print(f"checkpoint -> {args.ckpt}"
+              + (f" (+ {args.ckpt}.store.npz)"
+                 if engine.population_store is not None else ""))
     from repro.core.metrics import sparsity
 
     print(f"done: final loss {last_loss:.4f}, "
           f"global-model sparsity {float(sparsity(final)):.3f}")
+    if engine.population_store is not None:
+        st_ = engine.population_store
+        print(f"cohort: {engine.n_clients}/{population} clients resident, "
+              f"store {st_.touched} touched rows "
+              f"({st_.nbytes / 1e6:.2f} MB host)")
     if run_async and metrics.get("vtime"):
         sm = metrics.get("staleness_mean", [0.0])
         depth = f" queue={engine.queue_depth}" if engine.queue_depth else ""

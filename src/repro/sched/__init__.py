@@ -25,7 +25,17 @@ mesh placement and :mod:`repro.comm` uplink/downlink compression:
     engine's metrics path, and the in-flight report state: the one-slot
     :class:`AsyncState` buffer or the ``queue_depth``-deep
     :class:`QueueState` per-client queue (clients race ahead of delivery,
-    uploads serialize FIFO).
+    uploads serialize FIFO).  The commit's arrival selection and
+    normalization optionally reduce through a client->edge->root
+    aggregation tree (``edges=``), so the root never touches the full
+    client axis;
+  * :mod:`repro.sched.cohort` -- cohort-resident client state for
+    population >> cohort simulations: :class:`CohortSpec` (deterministic
+    per-chunk cohort sampling), the lazily-materialized, checkpoint-backed
+    :class:`PopulationStore` of per-client state rows keyed by global
+    client id, and the :class:`ResidentCohort` gather/scatter the engine
+    runs at scan-chunk boundaries.  ``cohort == population`` degenerates
+    to the dense engine bitwise.
 
 Zero-delay contract: ``DeterministicClock()`` + ``buffer_size=n_clients``
 reproduces the synchronous engine trajectory bitwise
@@ -37,9 +47,12 @@ from repro.sched.aggregator import (AGE_HIST_BUCKETS, AsyncState, QueueState,
                                     make_async_round)
 from repro.sched.clock import (ClockModel, DeterministicClock, LogNormalClock,
                                StragglerClock, clock_is_stochastic, get_clock)
+from repro.sched.cohort import (CohortSpec, PopulationStore, ResidentCohort,
+                                sched_client_axes)
 
 __all__ = ["ClockModel", "DeterministicClock", "LogNormalClock",
            "StragglerClock", "get_clock", "clock_is_stochastic",
            "Staleness", "as_staleness", "AsyncState", "QueueState",
            "init_async_state", "init_queue_state", "make_async_round",
-           "AGE_HIST_BUCKETS"]
+           "AGE_HIST_BUCKETS", "CohortSpec", "PopulationStore",
+           "ResidentCohort", "sched_client_axes"]

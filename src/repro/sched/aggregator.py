@@ -256,6 +256,66 @@ def _where_clients(mask, new, old):
         new, old)
 
 
+def _earliest_k(deliver_time, k: int, edges: int = 1):
+    """Indices + threshold time of the ``k`` earliest arrivals.
+
+    ``edges == 1`` is the flat selection (one ``lax.top_k`` over all
+    clients; ties break toward lower client id).  ``edges > 1`` runs the
+    client->edge->root tournament of the hierarchical aggregation tree:
+    each edge pre-selects its ``min(k, n/edges)`` earliest local arrivals,
+    the root selects the global ``k`` among the edge candidates -- so the
+    root never reduces over the full client axis, only over
+    ``edges * min(k, n/edges)`` candidates.  Exact: the k earliest overall
+    contain at most ``min(k, n/edges)`` clients from any one edge, so every
+    true winner survives its edge round.  Tie-breaking among *exactly*
+    equal delivery times may differ from the flat order (edge-major rather
+    than id-major); with distinct times (any stochastic clock, almost
+    surely) the selected set is identical.
+    """
+    if edges <= 1:
+        neg_t, idx = jax.lax.top_k(-deliver_time, k)
+        return idx, -neg_t[k - 1]
+    n = deliver_time.shape[0]
+    per = n // edges
+    ke = min(k, per)
+    neg_e, loc = jax.lax.top_k(-deliver_time.reshape(edges, per), ke)
+    gidx = loc + (jnp.arange(edges, dtype=loc.dtype) * per)[:, None]
+    neg_r, pos = jax.lax.top_k(neg_e.reshape(-1), k)
+    return gidx.reshape(-1)[pos], -neg_r[k - 1]
+
+
+def _edge_sum(x, edges: int = 1):
+    """Client-axis sum reduced client->edge->root.  ``edges == 1`` is the
+    flat ``jnp.sum`` (bitwise today's commit normalization); ``edges > 1``
+    fixes the association order to per-edge partial sums first, matching
+    where the reduction physically runs under the plane's 1-axis
+    partitioning (the edge level IS the mesh axis)."""
+    if edges <= 1:
+        return jnp.sum(x, axis=0)
+    return jnp.sum(jnp.sum(x.reshape((edges, -1) + x.shape[1:]), axis=1),
+                   axis=0)
+
+
+def _validate_buffer(buffer_size: int, n_clients: int, edges: int) -> None:
+    """Loud, actionable geometry checks shared by the engine config and the
+    direct :func:`make_async_round` entry point."""
+    if not 1 <= buffer_size <= n_clients:
+        raise ValueError(
+            f"buffer_size must be in [1, n_clients={n_clients}], got "
+            f"{buffer_size}: the commit waits for the buffer_size earliest "
+            "arrivals, so a buffer wider than the participating clients can "
+            "never fill (and feeds an invalid k into lax.top_k on the "
+            "delivery times)")
+    if edges < 1:
+        raise ValueError(f"edges must be >= 1, got {edges}")
+    if n_clients % edges:
+        raise ValueError(
+            f"edges={edges} must divide n_clients={n_clients}: the "
+            "client->edge->root aggregation tree partitions the client axis "
+            "into equal edge groups (pick an edge count that divides the "
+            "cohort width)")
+
+
 def _scale_msg(msg, scale):
     return jax.tree_util.tree_map(
         lambda m: m * scale.reshape((-1,) + (1,) * (m.ndim - 1)).astype(
@@ -274,6 +334,7 @@ def make_async_round(
     queue_depth: Optional[int] = None,
     downlink=None,
     server_fields_fn=None,
+    edges: int = 1,
 ):
     """Build the async round step the engine scans over.
 
@@ -283,6 +344,12 @@ def make_async_round(
     ``queue_depth=None`` runs the one-slot :class:`AsyncState` buffer (the
     historical behavior); an explicit depth runs the :class:`QueueState`
     multi-slot queue (depth 1 reproduces the one-slot trajectory).
+
+    ``edges`` partitions the client axis into a client->edge->root
+    aggregation tree: arrival selection and the commit normalization reduce
+    per-edge first, so the root only ever touches ``edges * buffer_size``
+    candidates instead of the full client axis (``edges=1`` is bitwise the
+    flat path; see :func:`_earliest_k`).
 
     ``downlink`` (a :class:`repro.comm.DownlinkCompressor`) composes the
     broadcast direction with asynchrony: clients compute against the
@@ -298,6 +365,7 @@ def make_async_round(
             "downlink compression under asynchrony needs server_fields_fn "
             "(state -> broadcast field dict) to rebuild the client-visible "
             "state from the shadow")
+    _validate_buffer(buffer_size, n_clients, edges)
     full_buffer = buffer_size == n_clients
     # deterministic transports/clocks ignore their key: skip the per-round
     # threefry splits (measurable on µs-scale rounds)
@@ -337,7 +405,7 @@ def make_async_round(
             msg_in, norm = target, jnp.float32(1.0)
         else:
             msg_in = msg
-            norm = buffer_size / jnp.maximum(jnp.sum(w), 1e-30)
+            norm = buffer_size / jnp.maximum(_edge_sum(w, edges), 1e-30)
         if accepts_active:
             # server's active-mean divides by the delivered count; the
             # scale turns that into the staleness-weighted mean
@@ -355,7 +423,7 @@ def make_async_round(
         info = dict(info)
         info["vtime"] = commit_time
         d_age = jnp.where(delivered, age, 0)
-        info["staleness_mean"] = (jnp.sum(d_age).astype(jnp.float32)
+        info["staleness_mean"] = (_edge_sum(d_age, edges).astype(jnp.float32)
                                   / buffer_size)
         info["staleness_max"] = jnp.max(d_age).astype(jnp.float32)
         info["report_age_hist"] = jnp.bincount(
@@ -373,7 +441,7 @@ def make_async_round(
         return _make_queued_step(
             local_fn, server_fn, transport, clock, buffer_size, n_clients,
             queue_depth, clk_stochastic, split_keys, visible, commit, ledger,
-            downlink, rebroadcast)
+            downlink, rebroadcast, edges)
 
     def step(state, sched: AsyncState, comm_state, comm_key, batch,
              dl_state=None):
@@ -410,9 +478,11 @@ def make_async_round(
         else:
             # only refreshing clients actually compressed a report this
             # step: everyone else's error-feedback residual must not
-            # advance (same telescoping guard as partial participation in
-            # the compressed backend)
-            comm_state = _where_clients(refresh, cs_new, comm_state)
+            # advance (the transport's generalized partial-participation
+            # guard -- EF rows are keyed by the client row whether that row
+            # is a global id or a cohort slot)
+            comm_state = transport.select_clients(refresh, cs_new,
+                                                  comm_state)
             pending_msg = _where_clients(refresh, msg_hat, sched.pending_msg)
             pending_aux = _where_clients(refresh, aux_new, sched.pending_aux)
             deliver_time = jnp.where(
@@ -423,8 +493,7 @@ def make_async_round(
             commit_time = jnp.max(deliver_time)
             delivered = jnp.ones((n_clients,), bool)
         else:
-            neg_t, idx = jax.lax.top_k(-deliver_time, buffer_size)
-            commit_time = -neg_t[buffer_size - 1]
+            idx, commit_time = _earliest_k(deliver_time, buffer_size, edges)
             delivered = jnp.zeros((n_clients,), bool).at[idx].set(True)
         birth = pending_aux["round"].astype(jnp.int32)
         age = sched.round_idx - birth  # 0 for reports computed this step
@@ -480,7 +549,8 @@ def make_async_round(
 
 def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
                       n_clients, queue_depth, clk_stochastic, split_keys,
-                      visible, commit, ledger, downlink, rebroadcast):
+                      visible, commit, ledger, downlink, rebroadcast,
+                      edges=1):
     """The multi-slot (:class:`QueueState`) async step; see
     :func:`make_async_round`.
 
@@ -509,8 +579,9 @@ def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
         msg_new, aux_new = local_fn(st_v, batch)
         msg_hat, cs_new = transport.compress(comm_state, msg_new, sub)
         # only enqueueing clients actually transmitted: everyone else's
-        # error-feedback residual must not advance (telescoping guard)
-        comm_state = _where_clients(free, cs_new, comm_state)
+        # error-feedback residual must not advance (the transport's
+        # generalized partial-participation guard)
+        comm_state = transport.select_clients(free, cs_new, comm_state)
         if clk_stochastic:
             clock_key, ksub = jax.random.split(sched.clock_key)
         else:
@@ -544,8 +615,7 @@ def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
         t = jnp.where(filled, deliver_time, jnp.inf)
         head_time = jnp.min(t, axis=0)
         head_slot = jnp.argmin(t, axis=0)
-        neg_t, idx = jax.lax.top_k(-head_time, buffer_size)
-        commit_time = -neg_t[buffer_size - 1]
+        idx, commit_time = _earliest_k(head_time, buffer_size, edges)
         delivered = jnp.zeros((n_clients,), bool).at[idx].set(True)
 
         def take_head(buf):

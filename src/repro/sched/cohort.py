@@ -1,0 +1,338 @@
+"""Cohort-resident client state: million-client populations, cohort-width
+working sets.
+
+The paper's algorithm (and the FedBuff regime :mod:`repro.sched` simulates)
+assumes a *population* of clients far larger than any single round's
+participating *cohort* -- yet every engine carry historically materialized
+dense ``(population, ...)`` state: per-client correction pytrees,
+``(population, d_pad)`` planes, error-feedback residuals, report buffers.
+This module turns participation sparsity into memory sparsity:
+
+  * :class:`CohortSpec` -- the sampling law: population size, cohort width,
+    seed.  ``sample(round_idx)`` draws the cohort's global client ids for
+    the scan chunk starting at ``round_idx`` (uniform without replacement,
+    deterministic in the round index); ``cohort == population`` returns the
+    identity ``arange(population)``, which is what makes the engine's
+    cohort mode degenerate bitwise to the dense engine.
+  * :class:`PopulationStore` -- the host-resident population state.  Rows
+    are materialized *lazily on first touch*: an untouched client costs 4
+    bytes (one int32 slot-index entry), a touched one costs its state row.
+    Every entry shares one slot map, so entries stay row-consistent; new
+    slots are default-initialized across all entries (federated init is
+    client-uniform -- every algorithm in the repo initializes per-client
+    state identically, which is what makes "default row" well-defined).
+    Peak memory is ``O(touched * row) + O(population * 4B)``, not
+    ``O(population * row)``.  Checkpoint-backed via
+    :mod:`repro.checkpoint.ckpt` (``save``/``load``): the materialized rows
+    + their global ids round-trip through the npz format, so a million-
+    client run checkpoints only what it touched.
+  * :class:`ResidentCohort` -- the engine-facing gather/scatter: registers
+    each per-client carry slice (algorithm client-role fields, compressor
+    EF residuals, report buffers -- each leaf with a declared client axis),
+    pulls the sampled ids into a fixed-width ``(cohort, ...)`` working set
+    at chunk boundaries, and writes the working set back afterwards.  EF
+    residuals and the staleness ledger are thereby keyed by *global* client
+    id in the store while the compiled scan only ever sees cohort-width
+    arrays.
+
+Gather/scatter round-trips are bitwise (numpy <-> jax moves preserve float
+bits), so ``cohort == population`` reproduces the dense engine's
+trajectories exactly -- pinned in tests/test_cohort.py for the per-leaf and
+flat-plane layouts across inline/top-k/async/queued stage combinations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CohortSpec:
+    """Sampling law of the participating cohort.
+
+    population : total number of clients (global ids are ``[0, population)``)
+    cohort     : fixed working-set width per scan chunk
+    seed       : seed of the per-chunk id draws
+    """
+
+    population: int
+    cohort: int
+    seed: int = 0
+
+    def validate(self) -> None:
+        if self.population < 1:
+            raise ValueError(
+                f"population must be >= 1, got {self.population}")
+        if not 1 <= self.cohort <= self.population:
+            raise ValueError(
+                f"cohort must be in [1, population={self.population}], got "
+                f"{self.cohort} (the cohort is the participating subset of "
+                "the population)")
+
+    @property
+    def is_full(self) -> bool:
+        """Whether the cohort is the whole population (the dense-engine
+        degeneration: ``sample`` is the identity and trajectories are
+        bitwise the dense engine's)."""
+        return self.cohort == self.population
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        """Global ids of the cohort for the chunk starting at ``round_idx``
+        -- sorted, unique, deterministic in ``(seed, round_idx)``.  The
+        full cohort is the identity permutation (bitwise degeneration)."""
+        if self.is_full:
+            return np.arange(self.population, dtype=np.int64)
+        rng = np.random.default_rng((self.seed, int(round_idx)))
+        ids = rng.choice(self.population, size=self.cohort, replace=False)
+        return np.sort(ids).astype(np.int64)
+
+
+class _Entry:
+    """One named per-client state family: a pytree row template (defaults)
+    plus per-leaf ``(capacity, *row_shape)`` storage over touched rows."""
+
+    def __init__(self, defaults: List[np.ndarray], treedef):
+        self.defaults = defaults
+        self.treedef = treedef
+        self.storage: List[np.ndarray] = [
+            np.empty((0,) + d.shape, d.dtype) for d in defaults]
+
+    def grow(self, capacity: int) -> None:
+        for i, (d, s) in enumerate(zip(self.defaults, self.storage)):
+            if s.shape[0] >= capacity:
+                continue
+            new = np.empty((capacity,) + d.shape, d.dtype)
+            new[:s.shape[0]] = s
+            new[s.shape[0]:] = d  # new slots start at the default row
+            self.storage[i] = new
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.storage)
+
+
+class PopulationStore:
+    """Host-resident, lazily-materialized per-client state rows.
+
+    ``add_entry`` registers a named state family from its default row (one
+    client's worth of state, leading client axis removed); ``gather`` pulls
+    rows for a batch of global ids into a dense ``(len(ids), ...)`` pytree
+    (untouched ids read the default row); ``scatter`` writes rows back,
+    materializing first-touch ids.  All entries share one slot map, so a
+    client's rows stay aligned across entries.
+    """
+
+    def __init__(self, population: int):
+        if population < 1:
+            raise ValueError(f"population must be >= 1, got {population}")
+        self.population = population
+        self._slot = np.full((population,), -1, np.int32)
+        self._entries: Dict[str, _Entry] = {}
+        self._n_used = 0
+        self._capacity = 0
+
+    # -- registration -----------------------------------------------------
+
+    def add_entry(self, name: str, default_row: Any) -> None:
+        """Register state family ``name`` with per-client default rows
+        (``default_row`` is ONE client's pytree, no client axis)."""
+        if name in self._entries:
+            raise ValueError(f"store entry {name!r} already registered")
+        leaves, treedef = jax.tree_util.tree_flatten(default_row)
+        entry = _Entry([np.asarray(l) for l in leaves], treedef)
+        entry.grow(self._capacity)
+        self._entries[name] = entry
+
+    @property
+    def entry_names(self):
+        return tuple(self._entries)
+
+    def default_row(self, name: str) -> Any:
+        e = self._entries[name]
+        return jax.tree_util.tree_unflatten(e.treedef, list(e.defaults))
+
+    # -- gather / scatter -------------------------------------------------
+
+    def gather(self, name: str, ids: np.ndarray) -> Any:
+        """Rows ``ids`` of entry ``name`` as a ``(len(ids), ...)`` pytree;
+        untouched ids produce the default row."""
+        e = self._entries[name]
+        ids = np.asarray(ids)
+        slots = self._slot[ids]
+        touched = slots >= 0
+        out = []
+        for d, s in zip(e.defaults, e.storage):
+            buf = np.empty((len(ids),) + d.shape, d.dtype)
+            buf[...] = d
+            if touched.any():
+                buf[touched] = s[slots[touched]]
+            out.append(buf)
+        return jax.tree_util.tree_unflatten(e.treedef, out)
+
+    def scatter(self, name: str, ids: np.ndarray, rows: Any) -> None:
+        """Write ``rows`` (leading axis ``len(ids)``) into entry ``name``,
+        materializing first-touch ids across every entry."""
+        e = self._entries[name]
+        ids = np.asarray(ids)
+        self._ensure_slots(ids)
+        slots = self._slot[ids]
+        leaves = e.treedef.flatten_up_to(rows)
+        for s, leaf in zip(e.storage, leaves):
+            s[slots] = np.asarray(leaf)
+
+    def _ensure_slots(self, ids: np.ndarray) -> None:
+        fresh = ids[self._slot[ids] < 0]
+        if fresh.size == 0:
+            return
+        fresh = np.unique(fresh)
+        need = self._n_used + fresh.size
+        if need > self._capacity:
+            self._capacity = max(2 * self._capacity, need, 16)
+            for e in self._entries.values():
+                e.grow(self._capacity)
+        self._slot[fresh] = np.arange(self._n_used, need, dtype=np.int32)
+        self._n_used = need
+
+    # -- accounting -------------------------------------------------------
+
+    @property
+    def touched(self) -> int:
+        """Clients with materialized rows."""
+        return self._n_used
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes held: materialized row storage (allocated capacity)
+        + the O(population) int32 slot map."""
+        return self._slot.nbytes + sum(e.nbytes
+                                       for e in self._entries.values())
+
+    # -- checkpointing (repro.checkpoint.ckpt) ----------------------------
+
+    def _touched_ids(self) -> np.ndarray:
+        return np.nonzero(self._slot >= 0)[0].astype(np.int64)
+
+    def save(self, path, metadata: Optional[dict] = None) -> None:
+        """Persist the materialized rows (only what was touched) through
+        :func:`repro.checkpoint.ckpt.save`."""
+        from repro.checkpoint import ckpt
+
+        ids = self._touched_ids()
+        order = self._slot[ids]
+        tree = {"__ids__": ids}
+        for name, e in self._entries.items():
+            rows = [s[order] for s in e.storage]
+            tree[name] = jax.tree_util.tree_unflatten(e.treedef, rows)
+        meta = {"population": self.population, "touched": int(ids.size)}
+        meta.update(metadata or {})
+        ckpt.save(tree, path, metadata=meta)
+
+    def load(self, path) -> dict:
+        """Restore rows saved by :meth:`save` into this store (entries must
+        already be registered with matching templates); returns the
+        checkpoint metadata.  Existing materialized rows are replaced."""
+        from repro.checkpoint import ckpt
+
+        meta = ckpt.metadata(path)
+        if meta.get("population") != self.population:
+            raise ValueError(
+                f"population store checkpoint holds population="
+                f"{meta.get('population')}, this store has "
+                f"{self.population}")
+        n = int(meta["touched"])
+        like = {"__ids__": jax.ShapeDtypeStruct((n,), np.int64)}
+        for name, e in self._entries.items():
+            like[name] = jax.tree_util.tree_unflatten(e.treedef, [
+                jax.ShapeDtypeStruct((n,) + d.shape, d.dtype)
+                for d in e.defaults])
+        tree = ckpt.restore(path, like)
+        self._slot[:] = -1
+        self._n_used = 0
+        ids = np.asarray(tree["__ids__"])
+        for name in self._entries:
+            self.scatter(name, ids, jax.tree_util.tree_map(
+                np.asarray, tree[name]))
+        return meta
+
+
+def sched_client_axes(sched) -> Dict[str, Optional[int]]:
+    """Per-field client axis of an async scheduler carry (``None`` =
+    global, not per-client).  This is the same structural declaration the
+    placement stage uses for carry shardings: the one-slot buffer is
+    client-major, the queued buffer stacks a leading queue-depth axis."""
+    from repro.sched.aggregator import QueueState
+
+    queued = isinstance(sched, QueueState)
+    axes: Dict[str, Optional[int]] = {
+        "pending_msg": 1 if queued else 0,
+        "pending_aux": 1 if queued else 0,
+        "resid": 0, "last_synced": 0,
+        "deliver_time": 1 if queued else 0,
+        "slot_filled": 1, "need_refresh": 0,
+        "vtime": None, "round_idx": None, "clock_key": None,
+    }
+    return {f: axes[f] for f in sched._fields}
+
+
+class ResidentCohort:
+    """The engine-facing cohort residency manager: sampling + gather/
+    scatter between the :class:`PopulationStore` and the fixed-width
+    working set the compiled scan runs over.
+
+    Each registered entry is a pytree whose leaves carry a *client axis*
+    (an int for the whole tree, or a ``{field: axis}`` dict matching a
+    dict-shaped tree); rows live in the store with the client axis moved
+    to the front, and ``gather`` moves it back.  Registration derives the
+    default row from index 0 of the initial working set -- valid because
+    federated per-client init is client-uniform.
+    """
+
+    def __init__(self, spec: CohortSpec,
+                 store: Optional[PopulationStore] = None):
+        spec.validate()
+        self.spec = spec
+        self.store = (store if store is not None
+                      else PopulationStore(spec.population))
+        self.current_ids: Optional[np.ndarray] = None
+        self._axes: Dict[str, Any] = {}
+
+    def sample(self, round_idx: int) -> np.ndarray:
+        return self.spec.sample(round_idx)
+
+    def _axes_tree(self, name: str, tree):
+        """A full per-leaf axis tree matching ``tree``."""
+        axes = self._axes[name]
+        if isinstance(axes, int):
+            return jax.tree_util.tree_map(lambda _: axes, tree)
+        # dict of per-field axes over a dict-shaped tree
+        return {f: jax.tree_util.tree_map(lambda _, a=a: a, sub)
+                for (f, sub), a in zip(tree.items(),
+                                       (axes[f] for f in tree))}
+
+    def register(self, name: str, working, client_axes) -> None:
+        """Register a per-client carry slice from its initial working set
+        (``client_axes``: int, or ``{field: axis}`` for dict trees)."""
+        self._axes[name] = client_axes
+        axes = self._axes_tree(name, working)
+        default = jax.tree_util.tree_map(
+            lambda l, a: np.take(np.asarray(l), 0, axis=a), working, axes)
+        self.store.add_entry(name, default)
+
+    def gather(self, name: str, ids: np.ndarray):
+        """Rows ``ids`` as a device-ready working slice (client axis
+        restored to its declared position)."""
+        rows = self.store.gather(name, ids)
+        axes = self._axes_tree(name, rows)
+        return jax.tree_util.tree_map(
+            lambda l, a: jnp.asarray(np.moveaxis(l, 0, a)), rows, axes)
+
+    def scatter(self, name: str, ids: np.ndarray, working) -> None:
+        """Persist a working slice back to the store under ``ids``."""
+        axes = self._axes_tree(name, working)
+        rows = jax.tree_util.tree_map(
+            lambda l, a: np.moveaxis(np.asarray(l), a, 0), working, axes)
+        self.store.scatter(name, ids, rows)

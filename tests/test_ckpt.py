@@ -1,0 +1,200 @@
+"""Checkpoint round-trip properties (repro.checkpoint.ckpt).
+
+The npz leaf keys are ESCAPED tree paths joined with "/": a dict key that
+itself contains a slash (or backslash) must not alias a different nested
+path, the reserved ``__manifest__`` entry must stay unreachable, and any
+true collision must raise instead of silently dropping a leaf.  Restore
+verifies the *manifest* dtype against the template (no silent casts) and
+accepts ShapeDtypeStruct-like templates; bf16 leaves are widened to f32 on
+disk and round-trip losslessly.  ``save`` is atomic: an exception mid-write
+leaves neither the target nor a stray tmp file behind.
+
+Property tests run under hypothesis when installed and fall back to the
+deterministic edge-case grid of tests/_hypo.py otherwise.
+"""
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+from _hypo import given, settings, st
+
+HOSTILE_KEYS = ["plain", "a/b", "a/b/c", "tr/ailing/", "/leading",
+                "back\\slash", "mix\\/ed", "\\", "//", "w|c", "  spaced  ",
+                "__manifest", "__manifest__x", "0", "None"]
+
+
+def _assert_tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- hostile-key round-trips ----------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(k1=st.sampled_from(HOSTILE_KEYS), k2=st.sampled_from(HOSTILE_KEYS),
+       nest=st.booleans())
+def test_hostile_keys_roundtrip(tmp_path, k1, k2, nest):
+    inner = {k2: jnp.arange(3.0)} if nest else jnp.arange(3.0)
+    if nest and k1 == k2:
+        tree = {k1: inner}
+    else:
+        tree = {k1: inner, k2 + "_sibling": jnp.ones((2,))}
+    p = tmp_path / "h.npz"
+    ckpt.save(tree, p)
+    out = ckpt.restore(p, like=jax.tree_util.tree_map(jnp.zeros_like, tree))
+    _assert_tree_equal(tree, out)
+
+
+def test_slash_key_does_not_alias_nested_path(tmp_path):
+    # pre-fix, {"a/b": x} and {"a": {"b": y}} flattened to the SAME npz key
+    flat = {"a/b": jnp.full((2,), 1.0)}
+    nested = {"a": {"b": jnp.full((2,), 2.0)}}
+    p1, p2 = tmp_path / "f.npz", tmp_path / "n.npz"
+    ckpt.save(flat, p1)
+    ckpt.save(nested, p2)
+    # each restores against its own template...
+    _assert_tree_equal(flat, ckpt.restore(p1, like=flat))
+    _assert_tree_equal(nested, ckpt.restore(p2, like=nested))
+    # ...and NOT against the other structure (distinct escaped keys)
+    with pytest.raises(KeyError):
+        ckpt.restore(p1, like=nested)
+    with pytest.raises(KeyError):
+        ckpt.restore(p2, like=flat)
+
+
+def test_true_collision_raises(tmp_path):
+    # escaping makes str-key collisions impossible, but non-str dict keys
+    # can still STRINGIFY identically -- that must raise, not drop a leaf
+    class K:
+        def __init__(self, tag):
+            self.tag = tag
+
+        def __hash__(self):
+            return hash(self.tag)
+
+        def __eq__(self, other):
+            return isinstance(other, K) and self.tag == other.tag
+
+        def __lt__(self, other):
+            return self.tag < other.tag
+
+        def __str__(self):
+            return "same"
+
+    tree = {"x": {"1": jnp.ones(2)}, "y": [jnp.zeros(2), jnp.ones(2)]}
+    ckpt.save(tree, tmp_path / "ok.npz")  # list idx "0"/"1" under distinct
+    with pytest.raises(ValueError, match="same npz key"):
+        ckpt._flatten_with_paths({"a": {K(1): jnp.ones(2),
+                                        K(2): jnp.zeros(2)}})
+
+
+def test_manifest_key_is_reserved(tmp_path):
+    with pytest.raises(ValueError, match="reserved"):
+        ckpt.save({ckpt.MANIFEST_KEY: jnp.ones(2)}, tmp_path / "m.npz")
+
+
+# -- dtype strictness + templates -----------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(dt=st.sampled_from(["float32", "float64", "int32", "bfloat16"]))
+def test_dtype_roundtrip_and_mismatch(tmp_path, dt):
+    dtype = jnp.dtype(dt)
+    tree = {"w": jnp.arange(6, dtype=jnp.float64).astype(dtype),
+            "step": jnp.asarray(3, jnp.int64)}
+    p = tmp_path / "d.npz"
+    ckpt.save(tree, p)
+    like = {"w": jax.ShapeDtypeStruct((6,), dtype),
+            "step": jax.ShapeDtypeStruct((), jnp.int64)}
+    out = ckpt.restore(p, like=like)
+    _assert_tree_equal(tree, out)
+    wrong = jnp.float32 if dtype != jnp.float32 else jnp.float64
+    with pytest.raises(ValueError, match="refuses to silently cast"):
+        ckpt.restore(p, like={"w": jax.ShapeDtypeStruct((6,), wrong),
+                              "step": like["step"]})
+
+
+def test_bf16_widened_on_disk_losslessly(tmp_path):
+    # every bf16 value is exactly representable in f32: the widened
+    # on-disk form plus the manifest dtype round-trips bit-identically
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal(64), jnp.bfloat16)
+    p = tmp_path / "bf.npz"
+    ckpt.save({"w": w}, p)
+    with np.load(p, allow_pickle=False) as z:
+        assert z["w"].dtype == np.float32  # storable form
+    out = ckpt.restore(p, like={"w": jax.ShapeDtypeStruct((64,),
+                                                          jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(w, np.float32))
+
+
+def test_full_engine_state_roundtrip(tmp_path):
+    """The real thing: a DProxState with per-client corrections, saved and
+    restored into a zeros template of the same structure."""
+    from repro.core.algorithm import DProxConfig
+    from repro.core.prox import L1
+    from repro.data.synthetic import logistic_heterogeneous
+    from repro.exec import ArraySupplier, EngineConfig, RoundEngine
+    from repro.fed.simulator import DProxAlgorithm
+    from repro.models import logreg
+
+    n, d = 6, 8
+    data = logistic_heterogeneous(n_clients=n, m_per_client=20, d=d,
+                                  alpha=5, beta=5, seed=0)
+    data.features = data.features.astype(np.float64)
+    data.labels = data.labels.astype(np.float64)
+    alg = DProxAlgorithm(L1(lam=0.01), DProxConfig(tau=2, eta=0.05,
+                                                   eta_g=2.0))
+    eng = RoundEngine(alg, logreg.make_grad_fn(), n,
+                      EngineConfig(chunk_rounds=2))
+    state = eng.init({"w": jnp.zeros(d, jnp.float64),
+                      "b": jnp.zeros((), jnp.float64)})
+    sup = ArraySupplier.from_dataset(data, tau=2, batch_size=4, seed=1)
+    state, _ = eng.run(state, sup, rounds=4, seed=0)
+    p = tmp_path / "state.npz"
+    ckpt.save(state, p, metadata={"round": 4})
+    out = ckpt.restore(p, like=jax.tree_util.tree_map(jnp.zeros_like, state))
+    _assert_tree_equal(state, out)
+    assert ckpt.metadata(p)["round"] == 4
+
+
+# -- atomicity ------------------------------------------------------------
+
+def _no_tmp_files(dirpath):
+    return [f for f in os.listdir(dirpath) if f.endswith(".tmp")]
+
+
+def test_save_failure_leaves_no_tmp_file(tmp_path, monkeypatch):
+    p = tmp_path / "fail.npz"
+    # unserializable metadata raises after the tmp file exists
+    with pytest.raises(TypeError):
+        ckpt.save({"ok": jnp.ones(2)}, p, metadata={"f": lambda: 0})
+    assert not p.exists()
+    assert _no_tmp_files(tmp_path) == []
+    # a mid-write I/O failure (ENOSPC and friends) must not leak either
+
+    def boom(*a, **kw):
+        raise OSError("no space left on device")
+
+    monkeypatch.setattr(ckpt.np, "savez", boom)
+    with pytest.raises(OSError):
+        ckpt.save({"ok": jnp.ones(2)}, p)
+    monkeypatch.undo()
+    assert not p.exists()
+    assert _no_tmp_files(tmp_path) == []
+    # and a successful save still lands atomically with no leftovers
+    ckpt.save({"ok": jnp.ones(2)}, p)
+    assert p.exists()
+    assert _no_tmp_files(tmp_path) == []

@@ -1,0 +1,352 @@
+"""Cohort-resident state (repro.sched.cohort + the engine's Cohort stage).
+
+The contracts the million-client path is built on:
+
+  * ``CohortSpec`` sampling is deterministic in ``(seed, round)``, sorted,
+    without replacement; ``cohort == population`` samples the identity;
+  * ``PopulationStore`` materializes rows lazily -- untouched clients cost
+    4 bytes (the slot map), gather of an untouched id returns the default
+    row, scatter/gather round-trips bitwise, and the store checkpoints
+    through :mod:`repro.checkpoint.ckpt`;
+  * the HARD invariant: ``cohort == population`` reproduces the dense
+    engine's trajectory BITWISE, per stage combination (inline, top-k
+    uplink, per-leaf and plane layouts, async one-slot and queued);
+  * the hierarchical client->edge->root commit (``edges=``) selects the
+    same earliest-k set as flat selection; with uniform weights the
+    trajectory stays bitwise (0/1 sums are associativity-free);
+  * a strict sub-cohort trains, bounds the store to touched rows, and
+    demands a ``client_ids``-capable supplier -- loudly;
+  * invalid ``buffer_size``/``edges``/cohort configs raise actionable
+    errors at validate/build time, never ``lax.top_k`` shape errors.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm import DProxConfig
+from repro.core.prox import L1
+from repro.data.synthetic import logistic_heterogeneous
+from repro.exec import ArraySupplier, EngineConfig, RoundEngine
+from repro.fed.simulator import DProxAlgorithm
+from repro.models import logreg
+from repro.sched import (CohortSpec, PopulationStore, Staleness,
+                         StragglerClock, init_async_state, init_queue_state,
+                         make_async_round, sched_client_axes)
+
+N, D = 12, 8
+
+
+def _problem(n=N, m=24, d=D, seed=0):
+    data = logistic_heterogeneous(n_clients=n, m_per_client=m, d=d,
+                                  alpha=5, beta=5, seed=seed)
+    s = np.linalg.norm(data.features.reshape(-1, d), axis=1).max()
+    data.features = (data.features / s).astype(np.float64)
+    data.labels = data.labels.astype(np.float64)
+    return data
+
+
+def _alg():
+    return DProxAlgorithm(L1(lam=0.01), DProxConfig(tau=2, eta=0.05,
+                                                    eta_g=2.0))
+
+
+def _params0(d=D):
+    return {"w": jnp.zeros(d, jnp.float64), "b": jnp.zeros((), jnp.float64)}
+
+
+def _run(data, cfg, rounds=6, sup_seed=3):
+    eng = RoundEngine(_alg(), logreg.make_grad_fn(), data.n_clients, cfg)
+    state = eng.init(_params0())
+    sup = ArraySupplier.from_dataset(data, tau=2, batch_size=4, seed=sup_seed)
+    state, metrics = eng.run(state, sup, rounds=rounds, seed=0)
+    return eng, state, metrics
+
+
+def _assert_bitwise(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- CohortSpec -----------------------------------------------------------
+
+def test_spec_sampling_deterministic_sorted_unique():
+    spec = CohortSpec(population=100, cohort=16, seed=4)
+    a, b = spec.sample(7), spec.sample(7)
+    np.testing.assert_array_equal(a, b)  # deterministic in (seed, round)
+    assert a.dtype == np.int64
+    assert np.all(np.diff(a) > 0)  # sorted, no replacement
+    assert a.min() >= 0 and a.max() < 100
+    assert not np.array_equal(spec.sample(7), spec.sample(8))
+    assert not np.array_equal(CohortSpec(100, 16, seed=5).sample(7), a)
+
+
+def test_spec_full_cohort_is_identity():
+    spec = CohortSpec(population=9, cohort=9)
+    assert spec.is_full
+    np.testing.assert_array_equal(spec.sample(3), np.arange(9))
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        CohortSpec(10, 11).validate()
+    with pytest.raises(ValueError):
+        CohortSpec(10, 0).validate()
+
+
+# -- PopulationStore ------------------------------------------------------
+
+def test_store_lazy_defaults_and_roundtrip():
+    store = PopulationStore(population=1000)
+    default = {"x": np.zeros((3,), np.float64), "k": np.full((), -1, np.int32)}
+    store.add_entry("s", default)
+    assert store.touched == 0
+    # gather of untouched ids returns default rows
+    got = store.gather("s", np.array([5, 900]))
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.zeros((2, 3)))
+    np.testing.assert_array_equal(np.asarray(got["k"]), [-1, -1])
+    # scatter two rows; only those materialize
+    rows = {"x": np.arange(6.0).reshape(2, 3), "k": np.array([7, 8],
+                                                             np.int32)}
+    store.scatter("s", np.array([5, 900]), rows)
+    assert store.touched == 2
+    back = store.gather("s", np.array([900, 5, 33]))
+    np.testing.assert_array_equal(np.asarray(back["x"][0]), [3.0, 4.0, 5.0])
+    np.testing.assert_array_equal(np.asarray(back["x"][1]), [0.0, 1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(back["x"][2]), np.zeros(3))
+    # memory: O(touched x row) + the int32 slot map
+    assert store.nbytes < 4 * 1000 + 64 * (3 * 8 + 4)
+    with pytest.raises(ValueError):
+        store.add_entry("s", default)  # duplicate entry name
+
+
+def test_store_save_load(tmp_path):
+    store = PopulationStore(population=50)
+    store.add_entry("e", {"v": np.zeros((2,), np.float32)})
+    store.scatter("e", np.array([3, 14]),
+                  {"v": np.array([[1, 2], [3, 4]], np.float32)})
+    p = tmp_path / "store.npz"
+    store.save(p, metadata={"round": 9})
+    other = PopulationStore(population=50)
+    other.add_entry("e", {"v": np.zeros((2,), np.float32)})
+    meta = other.load(p)
+    assert meta["round"] == 9
+    assert other.touched == 2
+    _assert_bitwise(store.gather("e", np.arange(50)),
+                    other.gather("e", np.arange(50)))
+    wrong = PopulationStore(population=49)
+    wrong.add_entry("e", {"v": np.zeros((2,), np.float32)})
+    with pytest.raises(ValueError, match="population"):
+        wrong.load(p)
+
+
+def test_sched_client_axes_layouts():
+    one = init_async_state({"g": jnp.zeros((N, D))}, None, N, clock_seed=0)
+    axes = sched_client_axes(one)
+    assert axes["deliver_time"] == 0 and axes["pending_msg"] == 0
+    assert "slot_filled" not in axes  # a queue-only field
+    assert axes["vtime"] is None and axes["clock_key"] is None
+    queued = init_queue_state({"g": jnp.zeros((N, D))}, None, N, 2,
+                              clock_seed=0)
+    qaxes = sched_client_axes(queued)
+    assert (qaxes["pending_msg"] == 1 and qaxes["deliver_time"] == 1
+            and qaxes["slot_filled"] == 1)
+    # every declared per-client axis indexes a real client-length dim
+    for st_, ax in ((one, axes), (queued, qaxes)):
+        for f, a in ax.items():
+            if a is None:
+                continue
+            for leaf in jax.tree_util.tree_leaves(getattr(st_, f)):
+                assert leaf.shape[a] == N, (f, leaf.shape, a)
+
+
+# -- the hard invariant: cohort == population is the dense engine bitwise --
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                                    # inline
+    dict(transport="topk"),                                    # uplink
+    dict(transport="topk", plane=True),                        # plane
+    dict(clock=True, buffer_size=N // 2,
+         staleness=Staleness("poly")),                         # one-slot
+    dict(clock=True, buffer_size=N // 2, queue_depth=2),       # queued
+], ids=["inline", "topk", "topk_plane", "async", "queued"])
+def test_full_cohort_bitwise_parity(kw):
+    from repro.comm import TopK
+
+    kw = dict(kw)
+    if kw.pop("transport", None):
+        kw["transport"] = TopK(ratio=0.3)
+    if kw.pop("clock", None):
+        kw["clock"] = StragglerClock(slowdown=3.0)
+    data = _problem()
+    _, dense, m_d = _run(data, EngineConfig(chunk_rounds=2, **kw))
+    _, coh, m_c = _run(data, EngineConfig(chunk_rounds=2, population=N,
+                                          cohort=N, **kw))
+    _assert_bitwise(dense, coh)
+    np.testing.assert_array_equal(m_d["train_loss"], m_c["train_loss"])
+
+
+def test_full_cohort_step_parity():
+    data = _problem()
+    sup = ArraySupplier.from_dataset(data, tau=2, batch_size=4, seed=3)
+    grad = logreg.make_grad_fn()
+    e_d = RoundEngine(_alg(), grad, N, EngineConfig())
+    e_c = RoundEngine(_alg(), grad, N, EngineConfig(cohort=N))
+    sd, sc = e_d.init(_params0()), e_c.init(_params0())
+    for r in range(3):
+        b = sup.sample_round(r)
+        sd, _ = e_d.step(sd, b)
+        sc, _ = e_c.step(sc, b)
+    _assert_bitwise(sd, sc)
+
+
+# -- hierarchical aggregation --------------------------------------------
+
+def test_edges_bitwise_parity_uniform_weights():
+    # straggler times are distinct, uniform weights are 0/1: the edge-wise
+    # sum is associativity-free and the trajectory stays bitwise
+    data = _problem()
+    kw = dict(chunk_rounds=2, clock=StragglerClock(slowdown=3.0),
+              buffer_size=4)
+    _, flat, _ = _run(data, EngineConfig(**kw))
+    _, tree, _ = _run(data, EngineConfig(edges=3, **kw))
+    _assert_bitwise(flat, tree)
+
+
+def test_edges_selects_same_commit_set():
+    from repro.sched.aggregator import _earliest_k
+
+    rng = np.random.default_rng(0)
+    for n, k, edges in [(12, 4, 3), (16, 5, 4), (8, 8, 2), (30, 3, 5)]:
+        t = jnp.asarray(rng.permutation(n).astype(np.float64))
+        fi, ft = _earliest_k(t, k)
+        ei, et = _earliest_k(t, k, edges)
+        assert set(np.asarray(fi).tolist()) == set(np.asarray(ei).tolist())
+        assert float(ft) == float(et)  # commit time = k-th earliest
+
+
+def test_edges_poly_staleness_close():
+    # non-uniform weights reduce in a different association order under
+    # the tree -- same committed set, float-equal only to tolerance
+    data = _problem()
+    kw = dict(chunk_rounds=2, clock=StragglerClock(slowdown=3.0),
+              buffer_size=4, staleness=Staleness("poly"))
+    _, flat, m_f = _run(data, EngineConfig(**kw))
+    _, tree, m_t = _run(data, EngineConfig(edges=3, **kw))
+    for x, y in zip(jax.tree_util.tree_leaves(flat),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(m_f["staleness_mean"], m_t["staleness_mean"],
+                               rtol=1e-12)
+
+
+# -- strict sub-cohorts ---------------------------------------------------
+
+def test_sub_cohort_trains_and_bounds_store():
+    from repro.comm import TopK
+
+    data = _problem()
+    eng, state, metrics = _run(
+        data, EngineConfig(chunk_rounds=2, transport=TopK(ratio=0.3),
+                           population=N, cohort=4), rounds=6)
+    assert eng.n_clients == 4 and eng.population == N
+    assert np.all(np.isfinite(metrics["train_loss"]))
+    store = eng.population_store
+    # <= one cohort per chunk materializes; never the full population
+    assert 4 <= store.touched <= min(N, 3 * 4)
+    assert set(store.entry_names) >= {"alg", "comm"}
+    assert len(eng.cohort_ids) == 4
+    # continuation resamples fresh cohorts (deterministic in start_round)
+    sup = ArraySupplier.from_dataset(data, tau=2, batch_size=4, seed=3)
+    state, _ = eng.run(state, sup, rounds=4, seed=0, start_round=6)
+    assert store.touched >= 4
+
+
+def test_sub_cohort_async_carries_report_state():
+    data = _problem()
+    eng, state, metrics = _run(
+        data, EngineConfig(chunk_rounds=2, clock=StragglerClock(slowdown=3.0),
+                           buffer_size=3, population=N, cohort=6, edges=2),
+        rounds=4)
+    assert "sched" in eng.population_store.entry_names
+    assert np.all(np.isfinite(metrics["train_loss"]))
+
+
+def test_sub_cohort_step_uses_announced_ids():
+    data = _problem()
+    sup = ArraySupplier.from_dataset(data, tau=2, batch_size=4, seed=3)
+    eng = RoundEngine(_alg(), logreg.make_grad_fn(), N,
+                      EngineConfig(population=N, cohort=4))
+    state = eng.init(_params0())
+    for r in range(3):
+        ids = eng.cohort_ids  # announced BEFORE the first step
+        assert ids is not None and len(ids) == 4
+        state, _ = eng.step(state, sup.sample_round(r, client_ids=ids))
+    eng.flush_cohort(state)
+    assert eng.population_store.touched == 4  # step never resamples
+
+
+def test_sub_cohort_requires_client_ids_supplier():
+    data = _problem()
+    sup = ArraySupplier.from_dataset(data, tau=2, batch_size=4, seed=3)
+    cache = [sup.sample_round(r) for r in range(2)]
+    eng = RoundEngine(_alg(), logreg.make_grad_fn(), N,
+                      EngineConfig(chunk_rounds=2, cohort=4))
+    state = eng.init(_params0())
+    with pytest.raises(ValueError, match="client_ids"):
+        eng.run(state, lambda r, rng: cache[r % 2], rounds=2, seed=0)
+
+
+def test_engine_store_checkpoint_roundtrip(tmp_path):
+    data = _problem()
+    cfg = EngineConfig(chunk_rounds=2, population=N, cohort=4)
+    eng, state, _ = _run(data, cfg, rounds=6)
+    p = tmp_path / "store.npz"
+    eng.population_store.save(p, metadata={"round": 6})
+    other, state2, _ = _run(data, cfg, rounds=2)  # registers entries
+    meta = other.population_store.load(p)
+    assert meta["round"] == 6
+    ids = np.arange(N)
+    for name in eng.population_store.entry_names:
+        _assert_bitwise(eng.population_store.gather(name, ids),
+                        other.population_store.gather(name, ids))
+
+
+# -- validation -----------------------------------------------------------
+
+def test_buffer_size_and_edges_validation():
+    data = _problem()
+    with pytest.raises(ValueError, match="buffer_size"):
+        EngineConfig(buffer_size=N + 5).validate(N)
+    with pytest.raises(ValueError, match="buffer_size"):
+        RoundEngine(_alg(), logreg.make_grad_fn(), N,
+                    EngineConfig(buffer_size=N + 5))
+    with pytest.raises(ValueError, match="buffer_size"):
+        make_async_round(None, None, None, None, N + 5, N, Staleness())
+    with pytest.raises(ValueError, match="divide"):
+        EngineConfig(buffer_size=4, edges=5).validate(N)
+    with pytest.raises(ValueError, match="edges"):
+        make_async_round(None, None, None, None, 4, N, Staleness(), edges=0)
+    # the buffer bound reads the WORKING width under a sub-cohort
+    with pytest.raises(ValueError, match="buffer_size"):
+        EngineConfig(population=N, cohort=4, buffer_size=6,
+                     clock=StragglerClock()).validate(N)
+
+
+def test_cohort_config_validation():
+    with pytest.raises(ValueError, match="population"):
+        EngineConfig(population=10, cohort=20).validate()
+    with pytest.raises(ValueError, match="participation"):
+        EngineConfig(population=10, participation=0.5).validate()
+    with pytest.raises(ValueError):
+        EngineConfig(population=10, protocol=True).validate()
+    with pytest.raises(ValueError, match="population"):
+        # engine n_clients must agree with the declared population
+        RoundEngine(_alg(), logreg.make_grad_fn(), N,
+                    EngineConfig(population=N + 1, cohort=2))
