@@ -1,0 +1,206 @@
+"""Wire-overlap benchmark: real bytes on a localhost socket, hidden (or not)
+behind compute.
+
+Three execution shapes on the SAME problem (repro.fed.runtime, server as a
+real subprocess, worker rank 0 in this process):
+
+  * ``wire/single``      -- the single-process engine: pure compute, no wire.
+  * ``wire/blocking_*``  -- uplink sent on the compute thread: each chunk's
+    frame (pack + sendall + ACK) stalls the round loop.
+  * ``wire/overlapped_*``-- uplink handed to the sender thread through the
+    depth-1 queue (the double buffer): the send rides behind the NEXT
+    chunk's compute.
+
+Localhost is far faster than any real uplink, so the sender is paced with
+``--throttle-bw`` to a bandwidth CALIBRATED against this machine's measured
+compute rate (bytes stay real; only the pacing is synthetic):
+
+  * the *hiding* runs throttle so dense wire time ~ compute time per chunk
+    -- the regime where overlap can hide (almost) everything.  Acceptance:
+    overlapped hides >= 50% of the blocking-send overhead,
+        hidden = 1 - (t_overlapped - t_single) / (t_blocking - t_single).
+  * the *crossover* sweep throttles so the dense wire costs ~2x compute,
+    then sweeps top-k ratios.  The sparse encoding ships (i64 idx, f64 val)
+    pairs -- 2r of the dense bytes -- so the wire should equal compute near
+    r = 0.25.  The roofline wire model (repro.roofline.analysis:
+    ``crossover_ratio``) predicts r* analytically from (compute_s/chunk,
+    dense bytes/chunk, bw); acceptance: prediction within 2x of the
+    measured crossing (interpolated from per-ratio sender-busy time).
+
+Per-round compute is measured as a DIFFERENCE of two single-process runs
+(2R rounds vs R rounds) so jit compile time cancels; the same cancellation
+makes the hiding fraction robust: compile appears identically in all three
+shapes and drops out of both differences.
+
+Emits CSV rows via benchmarks.common.emit AND ``BENCH_wire.json`` (path
+override: REPRO_BENCH_JSON).  ``--dry`` shrinks the problem, skips the JSON
+and the (timing-based) assertions -- the CI smoke leg that keeps the whole
+runtime path (subprocess spawn, HELLO, frames, ACKs, BYE) exercised.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from benchmarks.common import emit
+
+ROWS: list[dict] = []
+
+
+def record(name: str, us_per_round: float, derived, **extra) -> None:
+    emit(name, us_per_round, derived)
+    ROWS.append({"name": name, "us_per_round": round(us_per_round, 3),
+                 "derived": derived, **extra})
+
+
+def _args(dry: bool, **kw):
+    from repro.fed.runtime import RuntimeArgs
+
+    base = dict(clients=16, m=32, dim=256, tau=4, rounds=8, chunk=4,
+                replay=False, timeout=120.0)
+    if not dry:
+        base.update(m=128, dim=2048, tau=4, rounds=32)
+    base.update(kw)
+    return RuntimeArgs(**base)
+
+
+def _pair(a):
+    from repro.fed.runtime import run_pair
+
+    return run_pair(dataclasses.replace(a))  # run_pair mutates a.port
+
+
+def measure_compute(dry: bool):
+    """(wall_s at R rounds, steady compute seconds/round) -- the difference
+    of a 2R-round and an R-round single-process run cancels compile."""
+    from repro.fed.runtime import run_local
+
+    a = _args(dry)
+    t_single = run_local(a)["wall_s"]
+    t_double = run_local(_args(dry, rounds=2 * a.rounds))["wall_s"]
+    per_round = max((t_double - t_single) / a.rounds, 1e-6)
+    return t_single, per_round
+
+
+def bench_hiding(dry: bool, t_single: float, per_round: float) -> float:
+    """Dense uplink throttled to wire ~ compute; returns hidden fraction."""
+    a = _args(dry)
+    probe = _pair(_args(dry, mode="blocking"))  # unthrottled: byte count
+    dense_bytes = probe["bytes_sent"]
+    bw = dense_bytes / max(per_round * a.rounds, 1e-9)  # wire == compute
+    t_block = _pair(_args(dry, mode="blocking", throttle_bw=bw))["wall_s"]
+    t_over = _pair(_args(dry, mode="overlapped", throttle_bw=bw))["wall_s"]
+
+    overhead = max(t_block - t_single, 1e-9)
+    hidden = 1.0 - (t_over - t_single) / overhead
+    record("wire/single", t_single / a.rounds * 1e6, "no_wire")
+    record("wire/blocking_dense", t_block / a.rounds * 1e6,
+           f"{dense_bytes}B,bw={bw:.3g}B/s", bytes=dense_bytes, bw=bw)
+    record("wire/overlapped_dense", t_over / a.rounds * 1e6,
+           f"hidden={hidden:.1%}", bytes=dense_bytes, bw=bw,
+           hidden_fraction=round(hidden, 4))
+    return hidden
+
+
+def bench_crossover(dry: bool, per_round: float):
+    """Top-k ratio sweep vs the roofline wire model's predicted r*."""
+    from repro.roofline.analysis import WireModel, crossover_ratio
+
+    a = _args(dry)
+    compute_chunk = per_round * a.chunk
+    probe = _pair(_args(dry, mode="blocking"))
+    n_chunks = probe["chunks"]
+    dense_chunk_bytes = probe["bytes_sent"] / n_chunks
+    bw = dense_chunk_bytes / (2.0 * compute_chunk)  # dense wire = 2x compute
+
+    predicted = crossover_ratio(compute_chunk, dense_chunk_bytes,
+                                WireModel(bw=bw, latency_s=0.0),
+                                encoding="sparse")
+
+    ratios = [0.125, 0.25, 0.5] if dry else [0.0625, 0.125, 0.25, 0.5, 1.0]
+    busy = []
+    for r in ratios:
+        rep = _pair(_args(dry, mode="overlapped", transport="topk",
+                          ratio=r, throttle_bw=bw))
+        per_chunk_busy = rep["sender_busy_s"] / max(rep["chunks"], 1)
+        busy.append(per_chunk_busy)
+        record(f"wire/overlapped_topk{r:g}",
+               rep["wall_s"] / a.rounds * 1e6,
+               f"{rep['bytes_sent']}B,busy={rep['sender_busy_s']:.3f}s",
+               ratio=r, bytes=rep["bytes_sent"],
+               sender_busy_per_chunk_s=round(per_chunk_busy, 6))
+
+    # first ratio whose per-chunk wire time crosses per-chunk compute,
+    # linearly interpolated between sweep points
+    measured = float("inf")
+    for i, b in enumerate(busy):
+        if b >= compute_chunk:
+            if i == 0:
+                measured = ratios[0]
+            else:
+                r0, r1, b0, b1 = ratios[i - 1], ratios[i], busy[i - 1], b
+                measured = r0 + (r1 - r0) * (compute_chunk - b0) / (b1 - b0)
+            break
+    record("wire/crossover", 0.0,
+           f"predicted={predicted:.3f},measured={measured:.3f}",
+           predicted=predicted, measured=measured,
+           compute_chunk_s=round(compute_chunk, 6), bw=bw)
+    return predicted, measured
+
+
+def bench_quantize(dry: bool) -> None:
+    """Palette-encoded quantized uplink: wire bytes track the bit width."""
+    for bits in ([4] if dry else [4, 8]):
+        a = _args(dry, mode="overlapped", transport="quantize", bits=bits)
+        rep = _pair(a)
+        record(f"wire/overlapped_quantize{bits}",
+               rep["wall_s"] / a.rounds * 1e6,
+               f"{rep['bytes_sent']}B", bits=bits, bytes=rep["bytes_sent"])
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry", action="store_true",
+                    help="smoke mode: tiny problem, no JSON, no "
+                         "timing assertions (CI keeps the subprocess + "
+                         "socket path exercised)")
+    args = ap.parse_args(argv)
+
+    t_single, per_round = measure_compute(args.dry)
+    print(f"# compute: {per_round*1e3:.3f} ms/round steady "
+          f"({t_single:.3f}s wall incl. compile)", flush=True)
+
+    hidden = bench_hiding(args.dry, t_single, per_round)
+    predicted, measured = bench_crossover(args.dry, per_round)
+    bench_quantize(args.dry)
+
+    if args.dry:
+        print(f"dry run: hidden={hidden:.1%} predicted_r*={predicted:.3f} "
+              f"measured_r*={measured:.3f}; BENCH_wire.json not written",
+              flush=True)
+        return
+
+    assert hidden >= 0.5, (
+        f"overlap hid only {hidden:.1%} of the blocking-send overhead "
+        "(acceptance: >= 50% at dense ratio)")
+    ratio = predicted / measured if measured not in (0.0, float("inf")) \
+        else float("inf")
+    assert 0.5 <= ratio <= 2.0, (
+        f"roofline crossover prediction {predicted:.3f} vs measured "
+        f"{measured:.3f} (acceptance: within 2x)")
+
+    out = os.environ.get("REPRO_BENCH_JSON", "BENCH_wire.json")
+    with open(out, "w") as f:
+        json.dump({"bench": "wire",
+                   "hidden_fraction": round(hidden, 4),
+                   "crossover": {"predicted": predicted,
+                                 "measured": measured},
+                   "rows": ROWS}, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

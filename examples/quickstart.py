@@ -210,3 +210,43 @@ print(f" dprox over a {population}-client population, {cohort} resident "
 print(f"    final loss {m['train_loss'][-1]:.4f}, store holds "
       f"{store.touched}/{population} materialized rows "
       f"({store.nbytes / 1e3:.0f} KB host)")
+
+# --- running across processes: everything above simulates federation in
+# ONE process.  repro.fed.runtime makes the bytes real -- workers and a
+# server exchange length-prefixed frames (repro.comm.wire) over a socket,
+# and the engine hands each committed chunk to a sender thread BEFORE its
+# host sync (RoundEngine.set_uplink_sink) so the send overlaps the next
+# chunk's compute.  The full form re-execs separate OS processes:
+#
+#     PYTHONPATH=src python -m repro.launch.train --processes 2 \
+#         --clients 16 --rounds 32 --transport topk --ratio 0.1 --plane
+#
+# Here we run the same server/worker pair in-process (server on a thread,
+# real socket in between) to show the degeneration contract: with one
+# worker the server installs the worker's committed fields verbatim, so
+# the multi-process trajectory is BITWISE the single-process engine's
+# (tests/test_runtime.py pins dense, ratio-1.0 top-k, plane and palette).
+import threading
+
+from repro.fed.runtime import (RuntimeArgs, _fields_bitwise, run_local,
+                               run_server, run_worker)
+
+ra = RuntimeArgs(clients=8, m=16, dim=24, tau=2, rounds=8, chunk=4,
+                 transport="topk", ratio=0.25, mode="overlapped")
+ready = threading.Event()
+box = {}
+srv = threading.Thread(
+    target=lambda: box.update(server=run_server(
+        ra, ready_cb=lambda p: (box.update(port=p), ready.set()))),
+    daemon=True)
+srv.start()
+ready.wait(30)
+ra.port = box["port"]
+rep = run_worker(ra, rank=0)
+srv.join(30)
+res = box["server"]
+same = _fields_bitwise(run_local(ra)["fields"], res["fields"])
+print(f" multi-process runtime (top-k 25% over a real socket): "
+      f"{rep['bytes_sent']} wire bytes in {rep['chunks']} frames,")
+print(f"    server replay drift {res['max_replay_drift']:.1e}, "
+      f"vs single-process: {'BITWISE' if same else 'MISMATCH'}")

@@ -19,15 +19,32 @@ that exchange a first-class, swappable layer:
     server-state innovation (new state minus what clients currently hold)
     goes through any transport with its own error-feedback stream, so
     total wire bytes shrink in both directions
-    (``EngineConfig(downlink=...)``).
+    (``EngineConfig(downlink=...)``);
+  * :mod:`repro.comm.wire` turns the accounting into *traffic*: a
+    length-prefixed, checksummed frame format whose encode/decode of any
+    uplink message pytree (flat plane or per-leaf, any dtype mix) is
+    bitwise, with sparse/palette re-encodings so a compressed message ships
+    its compressed byte count over a real socket.  Each transport declares
+    its natural wire form via ``Transport.wire_encoding``; the
+    multi-process runtime (:mod:`repro.fed.runtime`) is built on these
+    frames.
 """
 from repro.comm.transport import (GRANULARITIES, Dense, DownlinkCompressor,
                                   PlaneTransport, Quantize, RandK, TopK,
                                   Transport, broadcast_elements,
                                   get_transport, message_elements_per_client,
                                   uplink_message_spec)
+from repro.comm.wire import (PLANE_ENCODINGS, WireError, decode, decode_frame,
+                             encode, encode_frame, pack_message, pack_plane,
+                             payload_nbytes, recv_frame, send_frame,
+                             spec_from_wire, spec_to_wire, unpack_message,
+                             unpack_plane)
 
 __all__ = ["Transport", "Dense", "TopK", "RandK", "Quantize",
            "DownlinkCompressor", "PlaneTransport", "GRANULARITIES",
            "get_transport", "message_elements_per_client",
-           "uplink_message_spec", "broadcast_elements"]
+           "uplink_message_spec", "broadcast_elements",
+           "WireError", "PLANE_ENCODINGS", "encode", "decode",
+           "encode_frame", "decode_frame", "send_frame", "recv_frame",
+           "pack_plane", "unpack_plane", "pack_message", "unpack_message",
+           "spec_to_wire", "spec_from_wire", "payload_nbytes"]

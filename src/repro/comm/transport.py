@@ -129,6 +129,9 @@ class Transport:
     name: str = "base"
     error_feedback: bool = False
     stochastic: bool = False
+    # natural wire re-encoding of this transport's output
+    # (see repro.comm.wire.pack_plane): "dense" | "sparse" | "palette"
+    wire_encoding: str = "dense"
 
     def init_state(self, msg_template):
         if not self.error_feedback:
@@ -241,6 +244,7 @@ class TopK(Transport):
     error_feedback: bool = True
     granularity: str = "leaf"
     name: str = "topk"
+    wire_encoding: str = "sparse"
 
     def __post_init__(self):
         _check_granularity(self.granularity)
@@ -297,6 +301,7 @@ class RandK(Transport):
     granularity: str = "leaf"
     name: str = "randk"
     stochastic: bool = True
+    wire_encoding: str = "sparse"
 
     def __post_init__(self):
         _check_granularity(self.granularity)
@@ -362,6 +367,7 @@ class Quantize(Transport):
     granularity: str = "leaf"
     name: str = "quantize"
     stochastic: bool = True
+    wire_encoding: str = "palette"
 
     def __post_init__(self):
         _check_granularity(self.granularity)
@@ -520,6 +526,10 @@ class PlaneTransport:
     @property
     def stochastic(self) -> bool:
         return self.inner.stochastic
+
+    @property
+    def wire_encoding(self) -> str:
+        return self.inner.wire_encoding
 
     def init_state(self, flat_template):
         if not self.inner.error_feedback:

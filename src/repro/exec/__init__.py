@@ -74,7 +74,27 @@ On top of the stage stack, the engine owns device-resident *multi-round
 chunking*: ``chunk_rounds`` rounds are fused under one ``lax.scan`` with
 pre-sampled batches, metrics accumulated on device and fetched once per
 chunk -- so Python dispatch and the device->host sync are paid once per
-chunk instead of once per round.  Batches come from *chunk-aware suppliers*
+chunk instead of once per round.
+
+**The uplink hand-off** (``RoundEngine.set_uplink_sink``): with a split
+transport active, the scan additionally stacks each round's committed
+uplink messages, and the sink fires once per chunk *before* the engine's
+per-chunk host sync -- the hand-off point the multi-process runtime
+(:mod:`repro.fed.runtime`) taps to ship real bytes while the next chunk
+computes:
+
+    per chunk k:   scan(chunk k) ----------------- device
+                     |            \\
+                     |             sink(start_round, msgs, state)   (async)
+                     |               \\-> sender thread: host fetch,
+                     |                   pack (repro.comm.wire), sendall
+                     v
+                   device_get(infos)  <- the ONE host sync per chunk
+                   scan(chunk k+1)    ... overlaps the chunk-k send
+
+The sink receives device-side values (the stacked per-round message
+pytrees and the post-chunk state); whoever consumes them owns the host
+fetch, so the compute thread never blocks on the wire.  Batches come from *chunk-aware suppliers*
 (:mod:`repro.exec.suppliers`): a supplier can produce a whole chunk in one
 vectorized call (optionally gathering from a device-resident cache, and
 optionally double-buffered on a staging thread whose chunks the engine

@@ -535,6 +535,8 @@ class RoundEngine:
         self._state_shardings = None
         self._extras = None  # dict of stage carry slices, built lazily
         self._donate_batches = False  # staged prefetch chunks (see run())
+        self._uplink_sink = None  # per-chunk uplink hand-off (runtime)
+        self._uplink_tap = None  # device-resident msgs of the last chunk
 
     def _setup_async(self) -> None:
         """Resolve and validate clock/staleness/buffer/queue.  The async
@@ -652,6 +654,7 @@ class RoundEngine:
             local_fn, server_fn = self._local_eff, self._server_eff
             transport, downlink = self._transport_eff, self.downlink
             algorithm = self.algorithm
+            tap = self._uplink_sink is not None
             # deterministic compressors ignore their key: skip the
             # per-round threefry split (measurable on µs-scale rounds)
             needs_key = getattr(transport, "stochastic", True) or (
@@ -699,7 +702,10 @@ class RoundEngine:
                         _, dls = downlink.broadcast(
                             dls, server_state_fields(algorithm, st), sub_dl)
                         ex2["dl"] = dls
-                    return (st, ex2), info
+                    # tapped: the scan also stacks the compressed uplink
+                    # messages so run() can hand the chunk's wire payload
+                    # to the sink without recomputing anything
+                    return (st, ex2), ((info, msg_hat) if tap else info)
 
                 xs = (batches, active) if with_active else batches
                 return jax.lax.scan(body, carry, xs)
@@ -838,6 +844,61 @@ class RoundEngine:
         self._transport_eff = PlaneTransport(self.transport, spec)
         return jax.ShapeDtypeStruct((self.n_clients, spec.d_pad), spec.dtype)
 
+    def set_uplink_sink(self, sink) -> None:
+        """Register a per-chunk uplink hand-off: after each compiled chunk,
+        ``sink(start_round, msgs, state)`` receives the chunk's compressed
+        uplink messages (``msgs`` stacked ``(chunk, n_clients, ...)`` per
+        leaf -- one ``(chunk, n_clients, d_pad)`` buffer in plane mode) and
+        the committed post-chunk state, all still DEVICE-RESIDENT.
+
+        This is the engine half of the overlap pipeline in
+        :mod:`repro.fed.runtime`: the sink fires right after the chunk is
+        *dispatched* and before the engine's own per-chunk host sync, so a
+        background sender can fetch + serialize chunk k's bytes while the
+        scan for chunk k+1 computes.  The sink must not mutate its
+        arguments; whether it blocks is its own business (the runtime's
+        blocking mode does, its overlapped mode hands off to a sender
+        thread).
+
+        The tap rides the jit'd split path only: stages that re-route the
+        uplink off the scan's straight line (asynchrony's report buffers,
+        cohort residency, partial participation, placement) and the eager /
+        fused-``round_fn`` paths raise.  Pass ``None`` to remove the sink.
+        """
+        if sink is not None:
+            if not self.stack.split:
+                raise ValueError(
+                    "uplink sink needs the split (local/server) engine "
+                    "path; a fused or protocol round_fn never materializes "
+                    "the uplink message")
+            blockers = []
+            if self.stack.asynchrony is not None:
+                blockers.append("asynchrony")
+            if self._cohort is not None:
+                blockers.append("cohort")
+            if self._use_active:
+                blockers.append("participation")
+            if self.stack.placement is not None:
+                blockers.append("placement")
+            if not self.config.jit:
+                blockers.append("jit=False")
+            if blockers:
+                raise ValueError(
+                    "uplink sink is unsupported with stage(s): "
+                    f"{', '.join(blockers)}; the per-chunk hand-off taps "
+                    "the plain compiled scan")
+        if (sink is None) != (self._uplink_sink is None):
+            self._chunked_call = None  # tap output is baked into the jit
+        self._uplink_sink = sink
+        self._uplink_tap = None
+
+    def _fire_uplink_sink(self, start_round: int, state) -> None:
+        if self._uplink_sink is None:
+            return
+        tap, self._uplink_tap = self._uplink_tap, None
+        if tap is not None:
+            self._uplink_sink(start_round, tap, state)
+
     def _set_donate_batches(self, donate: bool) -> None:
         """Flip batch donation, invalidating the compiled call when the
         flag is actually baked into it (accelerator + jit)."""
@@ -860,9 +921,13 @@ class RoundEngine:
         if self._chunked_call is None:
             self._chunked_call = self._build_chunked_call(state)
         if self.stack.split:
-            (state, ex), infos = self._chunked_call((state, self._extras),
-                                                    batches, active)
+            (state, ex), ys = self._chunked_call((state, self._extras),
+                                                 batches, active)
             self._extras = ex
+            if self._uplink_sink is not None:
+                infos, self._uplink_tap = ys
+            else:
+                infos = ys
             return state, infos
         return self._chunked_call(state, batches, active)
 
@@ -1070,6 +1135,10 @@ class RoundEngine:
             elif use_stacked:
                 batches = supplier.sample_chunk(start_round + done, c, rng)
                 state, infos = self._invoke_stacked(state, batches, None)
+                # hand the chunk's uplink to the sink BEFORE the host sync:
+                # an overlapping sender starts fetching chunk k's bytes
+                # while this thread blocks on (and then dispatches) k+1
+                self._fire_uplink_sink(start_round + done, state)
                 infos = jax.device_get(infos)  # the chunk's ONE host sync
             else:
                 # interleave batch and mask draws per round (not per chunk)
@@ -1085,6 +1154,7 @@ class RoundEngine:
                             rng)[0])
                 active = np.stack(masks) if self._use_active else None
                 state, infos = self._invoke_chunk(state, per_round, active)
+                self._fire_uplink_sink(start_round + done, state)
             per_round_infos = [{} for _ in range(c)]
             for k, v in infos.items():
                 arr = np.asarray(v)

@@ -1,63 +1,29 @@
-"""Sharded federated execution: place federated rounds on a device mesh.
+"""DEPRECATED alias -- the sharded-engine helpers live in
+:mod:`repro.launch.sharding` now.
 
-Since the exec refactor this is a thin compatibility surface over the
-unified round-execution engine (:mod:`repro.exec`) with the Placement
-stage active (``EngineConfig(mesh=...)``): the engine owns the jit, the
-explicit in/out shardings, buffer donation and (optionally) multi-round
-chunking.  The math is bitwise the single-device simulator's --
-tests/test_distributed.py asserts it.
+This module once built the *simulated* distribution path: mesh-sharded
+federated rounds where the client "uplink" was an XLA reduce over the data
+axis.  Everything it did is pure mesh placement over the unified execution
+engine, so the helpers moved next to the placement rule tables in
+``repro.launch.sharding``.  The `fed` package's distribution story is now
+the real one -- :mod:`repro.fed.runtime` puts workers in separate OS
+processes with bytes on a socket.
+
+Importing from here keeps working (with a DeprecationWarning) so existing
+scripts don't break; new code should import from ``repro.launch.sharding``.
 """
 from __future__ import annotations
 
-import jax
+import warnings
 
-from repro.core import algorithm as A
-from repro.core.prox import Regularizer
-from repro.exec import EngineConfig, RoundEngine
-from repro.launch import sharding as shd
+from repro.launch.sharding import (make_sharded_algorithm_engine,
+                                   make_sharded_engine,
+                                   make_sharded_round_fn, shard_fed_state)
 
+__all__ = ["shard_fed_state", "make_sharded_algorithm_engine",
+           "make_sharded_engine", "make_sharded_round_fn"]
 
-def shard_fed_state(mesh, state: A.DProxState, param_specs, plan: str):
-    n_clients = jax.tree_util.tree_leaves(state.c)[0].shape[0]
-    sh = shd.fed_state_shardings(mesh, state.x_bar, param_specs, plan,
-                                 n_clients)
-    return jax.device_put(state, sh), sh
-
-
-def make_sharded_algorithm_engine(mesh, algorithm, grad_fn, param_specs,
-                                  plan: str, n_clients: int,
-                                  *, chunk_rounds: int = 1) -> RoundEngine:
-    """A sharded-backend RoundEngine for ANY algorithm declaring
-    ``state_roles`` (all of :mod:`repro.core.baselines` do) -- baselines are
-    no longer restricted to inline execution."""
-    return RoundEngine(
-        algorithm, grad_fn, n_clients,
-        EngineConfig(chunk_rounds=chunk_rounds,
-                     mesh=mesh, param_specs=param_specs, plan=plan))
-
-
-def make_sharded_engine(mesh, fed_cfg: A.DProxConfig, reg: Regularizer,
-                        grad_fn, param_specs, plan: str, n_clients: int,
-                        *, chunk_rounds: int = 1) -> RoundEngine:
-    """A sharded-backend RoundEngine for Algorithm 1 on ``mesh``."""
-    from repro.fed.simulator import DProxAlgorithm
-
-    return make_sharded_algorithm_engine(
-        mesh, DProxAlgorithm(reg, fed_cfg), grad_fn, param_specs, plan,
-        n_clients, chunk_rounds=chunk_rounds)
-
-
-def make_sharded_round_fn(mesh, fed_cfg: A.DProxConfig, reg: Regularizer,
-                          grad_fn, param_specs, plan: str, n_clients: int,
-                          params_template):
-    """Historical surface: jit'd round_fn with explicit shardings + donation.
-
-    Returns ``(step, state_shardings)`` where ``step(state, batches)`` runs
-    one round through the engine's compiled chunk path.
-    """
-    engine = make_sharded_engine(mesh, fed_cfg, reg, grad_fn, param_specs,
-                                 plan, n_clients)
-    state_sh = shd.fed_state_shardings(mesh, params_template, param_specs,
-                                       plan, n_clients)
-    engine.set_state_shardings(state_sh)
-    return engine.step, state_sh
+warnings.warn(
+    "repro.fed.distributed is deprecated; import the sharded-engine helpers "
+    "from repro.launch.sharding (real multi-process federation lives in "
+    "repro.fed.runtime)", DeprecationWarning, stacklevel=2)

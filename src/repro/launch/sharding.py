@@ -288,3 +288,61 @@ def batch_shardings(mesh, batches, plan: str, *, chunk_axis: bool = False):
         return NamedSharding(mesh, spec_for(x.shape, axes, rules, mesh))
 
     return jax.tree_util.tree_map(one, batches)
+
+
+# ---------------------------------------------------------------------------
+# sharded engine construction
+# ---------------------------------------------------------------------------
+#
+# Historically these lived in repro.fed.distributed; they moved here because
+# everything they do is mesh placement over the unified round-execution
+# engine (repro.exec with the Placement stage active) -- there is no
+# federation-specific logic left, and `fed` now hosts the REAL distribution
+# (repro.fed.runtime: separate OS processes and bytes on a socket).
+# repro.fed.distributed remains as a deprecated alias module.
+
+
+def shard_fed_state(mesh, state, param_specs, plan: str):
+    """Place a DProxState on ``mesh``; returns (placed_state, shardings)."""
+    n_clients = jax.tree_util.tree_leaves(state.c)[0].shape[0]
+    sh = fed_state_shardings(mesh, state.x_bar, param_specs, plan, n_clients)
+    return jax.device_put(state, sh), sh
+
+
+def make_sharded_algorithm_engine(mesh, algorithm, grad_fn, param_specs,
+                                  plan: str, n_clients: int,
+                                  *, chunk_rounds: int = 1):
+    """A sharded-backend RoundEngine for ANY algorithm declaring
+    ``state_roles`` (all of :mod:`repro.core.baselines` do) -- baselines are
+    no longer restricted to inline execution."""
+    from repro.exec import EngineConfig, RoundEngine
+
+    return RoundEngine(
+        algorithm, grad_fn, n_clients,
+        EngineConfig(chunk_rounds=chunk_rounds,
+                     mesh=mesh, param_specs=param_specs, plan=plan))
+
+
+def make_sharded_engine(mesh, fed_cfg, reg, grad_fn, param_specs,
+                        plan: str, n_clients: int, *, chunk_rounds: int = 1):
+    """A sharded-backend RoundEngine for Algorithm 1 on ``mesh``."""
+    from repro.fed.simulator import DProxAlgorithm
+
+    return make_sharded_algorithm_engine(
+        mesh, DProxAlgorithm(reg, fed_cfg), grad_fn, param_specs, plan,
+        n_clients, chunk_rounds=chunk_rounds)
+
+
+def make_sharded_round_fn(mesh, fed_cfg, reg, grad_fn, param_specs,
+                          plan: str, n_clients: int, params_template):
+    """Historical surface: jit'd round_fn with explicit shardings + donation.
+
+    Returns ``(step, state_shardings)`` where ``step(state, batches)`` runs
+    one round through the engine's compiled chunk path.
+    """
+    engine = make_sharded_engine(mesh, fed_cfg, reg, grad_fn, param_specs,
+                                 plan, n_clients)
+    state_sh = fed_state_shardings(mesh, params_template, param_specs,
+                                   plan, n_clients)
+    engine.set_state_shardings(state_sh)
+    return engine.step, state_sh

@@ -31,10 +31,21 @@ compiled call and donates the staged chunks).
 
 Baselines are selectable with --algorithm {dprox,fedda,fedmid,fedavg,scaffold}
 so the paper's comparisons run at LM scale too.
+
+``--processes N`` switches to REAL multi-process federation
+(:mod:`repro.fed.runtime`): N worker processes + a server process exchange
+uplink frames over a localhost socket (overlapped with compute by default),
+instead of simulating all clients in one process.  The runtime has its own
+flag set (shared with ``python -m repro.fed.runtime``) -- the single-process
+LM flags above do not apply in this mode:
+
+    PYTHONPATH=src python -m repro.launch.train --processes 2 \
+        --clients 16 --rounds 32 --transport topk --ratio 0.1 --plane
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -85,7 +96,39 @@ def make_algorithm(name, reg, tau, eta, eta_g):
     raise ValueError(name)
 
 
+def main_multiprocess(argv):
+    """``--processes N``: the real multi-process runtime entry point.
+
+    The parent runs worker rank 0 inline (so its report and exceptions
+    surface directly); the server and workers 1..N-1 are re-exec'd
+    subprocesses (see :func:`repro.fed.runtime.run_pair`).
+    """
+    from repro.fed import runtime
+
+    ap = argparse.ArgumentParser(
+        description="multi-process federated training "
+                    "(repro.fed.runtime flags)")
+    ap.add_argument("--processes", type=int, required=True,
+                    help="number of worker processes (+1 server process)")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="(1 worker) also run single-process and assert "
+                         "the server trajectory matches bitwise")
+    runtime.add_runtime_args(ap)
+    ns = ap.parse_args(argv)
+    if ns.processes < 1:
+        ap.error("--processes must be >= 1")
+    ns.workers = ns.processes
+    run_argv = (["--role", "pair"]
+                + (["--check-parity"] if ns.check_parity else [])
+                + runtime._to_argv(runtime._from_ns(ns)))
+    return runtime.main(run_argv)
+
+
 def main(argv=None):
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if any(s == "--processes" or s.startswith("--processes=")
+           for s in argv):
+        return main_multiprocess(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_1_6b")
     ap.add_argument("--scale", default="smoke", choices=["smoke", "100m"])

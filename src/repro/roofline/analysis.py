@@ -229,3 +229,97 @@ def model_flops_for(cfg, shape, params_struct, tau: int = 1) -> float:
         tokens = shape.global_batch * shape.seq_len
         return 2.0 * active * tokens
     return 2.0 * active * shape.global_batch  # decode: one token per request
+
+
+# ---------------------------------------------------------------------------
+# wire term: the uplink bandwidth bound for the multi-process runtime
+# ---------------------------------------------------------------------------
+#
+# The collective term above models ICI traffic *inside* one XLA program.
+# The multi-process runtime (repro.fed.runtime) adds a fourth time term the
+# compiler never sees: the worker->server uplink crossing a real socket.
+# Per engine chunk the worker ships `rounds_per_chunk` server messages
+# (plus its committed server fields), and either
+#
+#     blocking:    t_chunk ~ compute_s + wire_s        (send on compute thread)
+#     overlapped:  t_chunk ~ max(compute_s, wire_s)    (send on sender thread)
+#
+# so overlap hides min(compute_s, wire_s) of the wire time.  The interesting
+# design point is the comm/compute *crossover*: the compression ratio r* at
+# which wire_s == compute_s.  Below r* the overlapped runtime is compute
+# bound (the wire is free); above it the wire is the roofline no matter how
+# the send is scheduled.  benchmarks/wire_bench.py checks this prediction
+# against measured localhost runs (throttled to a known bandwidth).
+
+WIRE_BW = 1e9        # bytes/s -- ~10GbE payload rate; override per deployment
+WIRE_LATENCY = 50e-6  # seconds per frame (syscall + ACK round-trip floor)
+
+# sparse wire encoding ships (index, value) pairs per surviving entry
+# (repro.comm.wire pack_plane), so r of the entries cost r*(1 + idx/val)
+# of the dense bytes -- clamped at 1.0 by the codec's dense fallback.
+SPARSE_INDEX_OVERHEAD = 1.0  # idx_itemsize / val_itemsize (i64 idx, f64 vals)
+
+
+@dataclasses.dataclass
+class WireModel:
+    """Analytic time model for one uplink frame over the runtime socket."""
+
+    bw: float = WIRE_BW
+    latency_s: float = WIRE_LATENCY
+
+    def seconds(self, nbytes: float) -> float:
+        return self.latency_s + float(nbytes) / self.bw
+
+
+def uplink_nbytes(dense_nbytes: float, ratio: float, *,
+                  encoding: str = "sparse",
+                  index_overhead: float = SPARSE_INDEX_OVERHEAD) -> float:
+    """Predicted payload bytes for one message at compression ``ratio``.
+
+    ``dense_nbytes`` is the raw message size (n_clients * d * itemsize for
+    a plane chunk row).  ``sparse`` models top-k/rand-k (index+value pairs,
+    dense fallback clamp); ``palette`` models the quantizer (codes shrink
+    with ratio = bits/bitwidth, plus the per-row table which we fold into
+    the clamp); ``dense`` ignores ratio.
+    """
+    if encoding == "dense":
+        return float(dense_nbytes)
+    if encoding == "sparse":
+        return float(dense_nbytes) * min(1.0, ratio * (1.0 + index_overhead))
+    if encoding == "palette":
+        return float(dense_nbytes) * min(1.0, ratio)
+    raise ValueError(f"unknown wire encoding {encoding!r}")
+
+
+def chunk_times(compute_s: float, wire_s: float) -> dict:
+    """Per-chunk wall-time predictions for the three runtime modes, plus
+    the fraction of the blocking-mode send overhead that overlap hides."""
+    blocking = compute_s + wire_s
+    overlapped = max(compute_s, wire_s)
+    hidden = ((blocking - overlapped) / wire_s) if wire_s > 0 else 1.0
+    return {"single": compute_s, "blocking": blocking,
+            "overlapped": overlapped, "hidden_fraction": hidden}
+
+
+def crossover_ratio(compute_s: float, dense_nbytes: float,
+                    model: Optional[WireModel] = None, *,
+                    encoding: str = "sparse",
+                    index_overhead: float = SPARSE_INDEX_OVERHEAD) -> float:
+    """The compression ratio r* where uplink wire time equals compute time.
+
+    For r < r* the overlapped runtime is compute bound; for r > r* it is
+    wire bound.  Returns +inf when even the dense message transfers faster
+    than the chunk computes (the wire never becomes the roofline).
+    """
+    model = model or WireModel()
+    budget_bytes = (compute_s - model.latency_s) * model.bw
+    if budget_bytes <= 0:
+        return 0.0
+    if budget_bytes >= uplink_nbytes(dense_nbytes, 1.0, encoding=encoding,
+                                     index_overhead=index_overhead):
+        return float("inf")
+    if encoding == "sparse":
+        return (budget_bytes / dense_nbytes) / (1.0 + index_overhead)
+    if encoding == "palette":
+        return budget_bytes / dense_nbytes
+    return float("inf")  # dense: ratio has no effect; handled by clamp above

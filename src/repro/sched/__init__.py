@@ -47,6 +47,7 @@ from repro.sched.aggregator import (AGE_HIST_BUCKETS, AsyncState, QueueState,
                                     make_async_round)
 from repro.sched.clock import (ClockModel, DeterministicClock, LogNormalClock,
                                StragglerClock, clock_is_stochastic, get_clock)
+from repro.sched.arrivals import Arrival, ArrivalLedger
 from repro.sched.cohort import (CohortSpec, PopulationStore, ResidentCohort,
                                 sched_client_axes)
 
@@ -55,4 +56,5 @@ __all__ = ["ClockModel", "DeterministicClock", "LogNormalClock",
            "Staleness", "as_staleness", "AsyncState", "QueueState",
            "init_async_state", "init_queue_state", "make_async_round",
            "AGE_HIST_BUCKETS", "CohortSpec", "PopulationStore",
-           "ResidentCohort", "sched_client_axes"]
+           "ResidentCohort", "sched_client_axes",
+           "Arrival", "ArrivalLedger"]

@@ -21,7 +21,7 @@ from repro.configs import registry
 from repro.configs.base import InputShape
 from repro.core.algorithm import DProxConfig, init_state, make_round_fn
 from repro.core.prox import L1
-from repro.fed.distributed import make_sharded_round_fn, shard_fed_state
+from repro.launch.sharding import make_sharded_round_fn, shard_fed_state
 from repro.launch import specs as sp
 from repro.launch.mesh import make_debug_mesh
 from repro.models import transformer as T

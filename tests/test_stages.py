@@ -488,8 +488,13 @@ def test_queue_trains_and_is_chunk_invariant():
 
 
 def test_prefetch_chunks_declared_donatable():
+    # donation only pays on accelerators (BENCH_exec measured the donate
+    # variant at 0.87x of plain prefetch on CPU), so the declaration is
+    # gated on the backend: donatable iff prefetch + minibatch + accelerator
     data, _, _, _ = _problem(seed=14)
-    assert ArraySupplier.from_dataset(data, 3, 4, prefetch=True).donate_chunks
+    on_accel = jax.default_backend() != "cpu"
+    assert (ArraySupplier.from_dataset(data, 3, 4, prefetch=True)
+            .donate_chunks == on_accel)
     assert not ArraySupplier.from_dataset(data, 3, 4).donate_chunks
     # full-batch mode serves broadcast VIEWS of the cache: never donatable
     assert not ArraySupplier.from_dataset(data, 3, None,
@@ -499,6 +504,7 @@ def test_prefetch_chunks_declared_donatable():
 def test_prefetch_donation_trajectory_identical():
     data, reg, grad_fn, params0 = _problem(seed=15)
     alg = _dprox(reg)
+    on_accel = jax.default_backend() != "cpu"
     states = []
     for prefetch in (False, True):
         sup = ArraySupplier.from_dataset(data, 3, 8, seed=9,
@@ -507,6 +513,6 @@ def test_prefetch_donation_trajectory_identical():
                           EngineConfig(chunk_rounds=4))
         state = eng.init(params0)
         state, _ = eng.run(state, sup, 10, seed=0)
-        assert eng._donate_batches == prefetch
+        assert eng._donate_batches == (prefetch and on_accel)
         states.append(state)
     _assert_states_equal(states[0], states[1])
