@@ -18,6 +18,31 @@ def emit(name: str, us_per_call: float, derived):
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
 
+def provenance() -> dict:
+    """Where/when/what a BENCH_*.json came from: git commit, hostname, jax
+    version, UTC timestamp.  Stamped into every benchmark JSON so the
+    bench trajectory is comparable across machines and commits."""
+    import datetime
+    import socket
+    import subprocess
+
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    return {
+        "git_commit": commit,
+        "hostname": socket.gethostname(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
 def logreg_problem(n_clients=30, m=100, d=20, alpha=50.0, beta=50.0, seed=0,
                    lam=0.003, x64=True):
     """The paper's sparse-logistic-regression setup (Section 4.1), with

@@ -57,7 +57,8 @@ import argparse
 import json
 import os
 
-from benchmarks.common import QUICK, Timer, emit, logreg_problem, make_engine
+from benchmarks.common import (QUICK, Timer, emit, logreg_problem,
+                               make_engine, provenance)
 
 ROWS: list[dict] = []
 
@@ -381,7 +382,7 @@ def main(argv=None) -> None:
     out = os.environ.get("REPRO_BENCH_JSON", "BENCH_exec.json")
     with open(out, "w") as f:
         json.dump({"bench": "exec", "quick": QUICK, "rounds": rounds,
-                   "rows": ROWS}, f, indent=2)
+                   "provenance": provenance(), "rows": ROWS}, f, indent=2)
         f.write("\n")
     print(f"wrote {out}", flush=True)
 

@@ -32,6 +32,15 @@ Per-round compute is measured as a DIFFERENCE of two single-process runs
 makes the hiding fraction robust: compile appears identically in all three
 shapes and drops out of both differences.
 
+The overlapped hiding run also records a merged span trace
+(``RuntimeArgs.trace``) and the per-chunk overlap attribution of
+:mod:`repro.obs.report` recomputes the hidden fraction from the spans
+(with the differencing runs' steady compute/round as the uncontended
+compute reference -- sender-thread fetch+pack dilates the chunk spans,
+and the reference charges that dilation to the wire); non-dry acceptance
+requires agreement with the end-to-end differencing measurement within
+10 percentage points.
+
 Emits CSV rows via benchmarks.common.emit AND ``BENCH_wire.json`` (path
 override: REPRO_BENCH_JSON).  ``--dry`` shrinks the problem, skips the JSON
 and the (timing-based) assertions -- the CI smoke leg that keeps the whole
@@ -44,7 +53,9 @@ import dataclasses
 import json
 import os
 
-from benchmarks.common import emit
+import tempfile
+
+from benchmarks.common import emit, provenance
 
 ROWS: list[dict] = []
 
@@ -84,14 +95,22 @@ def measure_compute(dry: bool):
     return t_single, per_round
 
 
-def bench_hiding(dry: bool, t_single: float, per_round: float) -> float:
-    """Dense uplink throttled to wire ~ compute; returns hidden fraction."""
+def bench_hiding(dry: bool, t_single: float, per_round: float):
+    """Dense uplink throttled to wire ~ compute; returns (hidden fraction
+    measured by end-to-end differencing, hidden fraction attributed from
+    the overlapped run's merged trace by repro.obs.report)."""
+    from repro.obs import report as obs_report
+    from repro.roofline.analysis import WireModel
+
     a = _args(dry)
     probe = _pair(_args(dry, mode="blocking"))  # unthrottled: byte count
     dense_bytes = probe["bytes_sent"]
     bw = dense_bytes / max(per_round * a.rounds, 1e-9)  # wire == compute
     t_block = _pair(_args(dry, mode="blocking", throttle_bw=bw))["wall_s"]
-    t_over = _pair(_args(dry, mode="overlapped", throttle_bw=bw))["wall_s"]
+    trace_path = os.path.join(
+        tempfile.gettempdir(), f"wire_bench_trace_{os.getpid()}.json")
+    t_over = _pair(_args(dry, mode="overlapped", throttle_bw=bw,
+                         trace=trace_path))["wall_s"]
 
     overhead = max(t_block - t_single, 1e-9)
     hidden = 1.0 - (t_over - t_single) / overhead
@@ -101,7 +120,28 @@ def bench_hiding(dry: bool, t_single: float, per_round: float) -> float:
     record("wire/overlapped_dense", t_over / a.rounds * 1e6,
            f"hidden={hidden:.1%}", bytes=dense_bytes, bw=bw,
            hidden_fraction=round(hidden, 4))
-    return hidden
+
+    # the same quantity, attributed per chunk from the spans the traced
+    # run exported (steady state drops the compile-carrying first chunk,
+    # the same cancellation the differencing above does)
+    with open(trace_path) as f:
+        doc = json.load(f)
+    # compute_ref: the differencing runs above already measured uncontended
+    # compute per round; the reference lets the report charge chunk-span
+    # dilation (sender-thread fetch+pack contention) to the wire
+    rep = obs_report.overlap_report(
+        doc, model=WireModel(bw=bw, latency_s=0.0),
+        compute_ref_s=per_round * a.chunk)
+    trace_hidden = rep["steady"].get("hidden_fraction_ref",
+                                     rep["steady"]["hidden_fraction"])
+    record("wire/trace_overlap", 0.0,
+           f"trace_hidden={trace_hidden if trace_hidden is None else round(trace_hidden, 4)},"
+           f"measured_hidden={hidden:.4f}",
+           trace_hidden=trace_hidden,
+           trace_hidden_raw=rep["steady"]["hidden_fraction"],
+           steady=rep["steady"], roofline=rep.get("roofline"))
+    os.remove(trace_path)
+    return hidden, trace_hidden
 
 
 def bench_crossover(dry: bool, per_round: float):
@@ -172,12 +212,14 @@ def main(argv=None) -> None:
     print(f"# compute: {per_round*1e3:.3f} ms/round steady "
           f"({t_single:.3f}s wall incl. compile)", flush=True)
 
-    hidden = bench_hiding(args.dry, t_single, per_round)
+    hidden, trace_hidden = bench_hiding(args.dry, t_single, per_round)
     predicted, measured = bench_crossover(args.dry, per_round)
     bench_quantize(args.dry)
 
     if args.dry:
-        print(f"dry run: hidden={hidden:.1%} predicted_r*={predicted:.3f} "
+        th = "n/a" if trace_hidden is None else f"{trace_hidden:.1%}"
+        print(f"dry run: hidden={hidden:.1%} trace_hidden={th} "
+              f"predicted_r*={predicted:.3f} "
               f"measured_r*={measured:.3f}; BENCH_wire.json not written",
               flush=True)
         return
@@ -185,6 +227,9 @@ def main(argv=None) -> None:
     assert hidden >= 0.5, (
         f"overlap hid only {hidden:.1%} of the blocking-send overhead "
         "(acceptance: >= 50% at dense ratio)")
+    assert trace_hidden is not None and abs(trace_hidden - hidden) <= 0.10, (
+        f"trace-attributed hidden fraction {trace_hidden} vs end-to-end "
+        f"measured {hidden:.4f} (acceptance: within 10 points)")
     ratio = predicted / measured if measured not in (0.0, float("inf")) \
         else float("inf")
     assert 0.5 <= ratio <= 2.0, (
@@ -195,8 +240,10 @@ def main(argv=None) -> None:
     with open(out, "w") as f:
         json.dump({"bench": "wire",
                    "hidden_fraction": round(hidden, 4),
+                   "trace_hidden_fraction": round(trace_hidden, 4),
                    "crossover": {"predicted": predicted,
                                  "measured": measured},
+                   "provenance": provenance(),
                    "rows": ROWS}, f, indent=2)
         f.write("\n")
     print(f"wrote {out}", flush=True)

@@ -250,3 +250,45 @@ print(f" multi-process runtime (top-k 25% over a real socket): "
       f"{rep['bytes_sent']} wire bytes in {rep['chunks']} frames,")
 print(f"    server replay drift {res['max_replay_drift']:.1e}, "
       f"vs single-process: {'BITWISE' if same else 'MISMATCH'}")
+
+# --- observability: the same pair, traced.  RuntimeArgs(trace=...) turns
+# on the per-process span tracer (repro.obs.trace): engine chunks, the
+# sender thread's ships, wire encode/send/recv/decode and server commits
+# all record spans; the worker estimates its clock offset to the server
+# from the HELLO/ACK handshake, ships its span buffer in the BYE frame,
+# and the server writes ONE merged Chrome trace-event JSON -- open it in
+# Perfetto (ui.perfetto.dev) to see compute and wire on one timeline.
+# metrics_jsonl= streams one line per commit + a final registry snapshot.
+# Tracing off (the default) is free: the no-op tracer does no clock reads,
+# and tests/test_obs.py pins a traced run BITWISE against an untraced one.
+import json
+import os
+import tempfile
+
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
+
+tdir = tempfile.mkdtemp(prefix="quickstart_obs_")
+ra = RuntimeArgs(clients=8, m=16, dim=24, tau=2, rounds=8, chunk=4,
+                 mode="overlapped", trace=os.path.join(tdir, "trace.json"),
+                 metrics_jsonl=os.path.join(tdir, "metrics.jsonl"))
+ready, box = threading.Event(), {}
+srv = threading.Thread(
+    target=lambda: box.update(server=run_server(
+        ra, ready_cb=lambda p: (box.update(port=p), ready.set()))),
+    daemon=True)
+srv.start()
+ready.wait(30)
+ra.port = box["port"]
+run_worker(ra, rank=0)
+srv.join(30)
+doc = json.load(open(ra.trace))
+n_spans = sum(1 for e in doc["traceEvents"] if e.get("ph") == "X")
+assert obs_trace.validate_chrome(doc) == []  # schema + span nesting
+steady = obs_report.overlap_report(doc)["steady"]
+snap = box["server"]["metrics"]
+print(f" traced runtime: {n_spans} spans -> {ra.trace} (open in Perfetto)")
+print(f"    steady chunks: compute {steady['compute_s']:.3f}s, wire "
+      f"{steady['wire_s']:.3f}s, wall {steady['wall_s']:.3f}s; server saw "
+      f"{snap['counters']['uplink/bytes']:.0f} uplink bytes over "
+      f"{snap['counters']['commits']:.0f} commits")

@@ -58,6 +58,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.obs import trace as _trace
+
 MAGIC = b"RPW1"
 VERSION = 1
 
@@ -285,25 +287,37 @@ def _recv_exact(sock, n: int) -> bytes:
 
 def send_frame(sock, ftype: int, tree) -> int:
     """Serialize + send one frame; returns bytes written."""
-    buf = encode_frame(ftype, tree)
-    sock.sendall(buf)
+    with _trace.span("wire/encode", "wire",
+                     ftype=FRAME_TYPES.get(ftype, ftype)) as sp:
+        buf = encode_frame(ftype, tree)
+        sp.set(nbytes=len(buf))
+    with _trace.span("wire/send", "wire",
+                     ftype=FRAME_TYPES.get(ftype, ftype), nbytes=len(buf)):
+        sock.sendall(buf)
     return len(buf)
 
 
 def recv_frame(sock) -> tuple[int, Any]:
     """Blocking receive of exactly one frame; returns (type, tree)."""
-    hdr = _recv_exact(sock, HEADER_BYTES)
-    magic, version, ftype, _res, crc, length = _HEADER.unpack(hdr)
-    if magic != MAGIC:
-        raise WireError(f"bad magic {magic!r}: not a repro wire frame")
-    if version != VERSION:
-        raise WireError(f"wire version {version}, this build speaks {VERSION}")
-    if length > MAX_PAYLOAD:
-        raise WireError(f"frame claims {length} payload bytes (> MAX_PAYLOAD)")
-    payload = _recv_exact(sock, length)
+    with _trace.span("wire/recv", "wire") as sp:
+        hdr = _recv_exact(sock, HEADER_BYTES)
+        magic, version, ftype, _res, crc, length = _HEADER.unpack(hdr)
+        if magic != MAGIC:
+            raise WireError(f"bad magic {magic!r}: not a repro wire frame")
+        if version != VERSION:
+            raise WireError(
+                f"wire version {version}, this build speaks {VERSION}")
+        if length > MAX_PAYLOAD:
+            raise WireError(
+                f"frame claims {length} payload bytes (> MAX_PAYLOAD)")
+        payload = _recv_exact(sock, length)
+        sp.set(ftype=FRAME_TYPES.get(ftype, ftype),
+               nbytes=HEADER_BYTES + length)
     if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
         raise WireError("frame checksum mismatch: payload corrupted in flight")
-    return ftype, decode(payload)
+    with _trace.span("wire/decode", "wire",
+                     ftype=FRAME_TYPES.get(ftype, ftype)):
+        return ftype, decode(payload)
 
 
 # ---------------------------------------------------------------------------

@@ -81,6 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import FedAlgorithm
+from repro.obs import trace as _trace
 from repro.exec.stages import (Asynchrony, Cohort, DownlinkComm, Placement,
                                StageStack, UplinkComm)
 from repro.exec.suppliers import BatchSupplier, as_supplier
@@ -919,17 +920,22 @@ class RoundEngine:
                     self.stack.placement.carry_shardings(self._extras,
                                                          self.n_clients))
         if self._chunked_call is None:
-            self._chunked_call = self._build_chunked_call(state)
+            # NB the jit wrapper builds here but XLA compiles lazily: the
+            # first exec/dispatch span carries trace + compile time
+            with _trace.span("exec/build", "exec"):
+                self._chunked_call = self._build_chunked_call(state)
         if self.stack.split:
-            (state, ex), ys = self._chunked_call((state, self._extras),
-                                                 batches, active)
+            with _trace.span("exec/dispatch", "exec"):
+                (state, ex), ys = self._chunked_call((state, self._extras),
+                                                     batches, active)
             self._extras = ex
             if self._uplink_sink is not None:
                 infos, self._uplink_tap = ys
             else:
                 infos = ys
             return state, infos
-        return self._chunked_call(state, batches, active)
+        with _trace.span("exec/dispatch", "exec"):
+            return self._chunked_call(state, batches, active)
 
     def _invoke_chunk(self, state, per_round_batches, active):
         """Run ``len(per_round_batches)`` rounds in one compiled call."""
@@ -947,7 +953,8 @@ class RoundEngine:
         batches = _stack_batches(per_round_batches)
         act = jnp.asarray(active) if self._use_active else None
         state, infos = self._invoke_stacked(state, batches, act)
-        return state, jax.device_get(infos)  # the chunk's ONE host sync
+        with _trace.span("exec/host_sync", "exec"):
+            return state, jax.device_get(infos)  # the chunk's ONE host sync
 
     # -- cohort residency (stack.cohort; see repro.sched.cohort) ----------
 
@@ -1020,10 +1027,12 @@ class RoundEngine:
                 rc.register(name, tree, axes)
             rc.current_ids = ids
             return state
-        for name, (tree, _axes) in entries.items():
-            rc.scatter(name, rc.current_ids, tree)
+        with _trace.span("exec/cohort_scatter", "exec"):
+            for name, (tree, _axes) in entries.items():
+                rc.scatter(name, rc.current_ids, tree)
         rc.current_ids = ids
-        gathered = {name: rc.gather(name, ids) for name in entries}
+        with _trace.span("exec/cohort_gather", "exec"):
+            gathered = {name: rc.gather(name, ids) for name in entries}
         if "alg" in gathered:
             state = state._replace(**gathered["alg"])
         if "comm" in gathered:
@@ -1040,8 +1049,9 @@ class RoundEngine:
         rc = self._cohort
         if rc is None or rc.current_ids is None:
             return
-        for name, (tree, _axes) in self._cohort_entries(state).items():
-            rc.scatter(name, rc.current_ids, tree)
+        with _trace.span("exec/cohort_flush", "exec"):
+            for name, (tree, _axes) in self._cohort_entries(state).items():
+                rc.scatter(name, rc.current_ids, tree)
 
     def _run_cohort_chunk(self, state, supplier, r0: int, c: int, rng,
                           use_stacked: bool):
@@ -1077,7 +1087,8 @@ class RoundEngine:
             self._extras = self._init_extras(state, batches)
         state = self._cohort_swap(state, r0)
         state, infos = self._invoke_stacked(state, batches, None)
-        return state, jax.device_get(infos)  # the chunk's ONE host sync
+        with _trace.span("exec/host_sync", "exec"):
+            return state, jax.device_get(infos)  # the chunk's ONE host sync
 
     # -- public API -------------------------------------------------------
 
@@ -1129,32 +1140,40 @@ class RoundEngine:
         done = 0
         while done < rounds:
             c = min(chunk, rounds - done)
-            if self._cohort is not None:
-                state, infos = self._run_cohort_chunk(
-                    state, supplier, start_round + done, c, rng, use_stacked)
-            elif use_stacked:
-                batches = supplier.sample_chunk(start_round + done, c, rng)
-                state, infos = self._invoke_stacked(state, batches, None)
-                # hand the chunk's uplink to the sink BEFORE the host sync:
-                # an overlapping sender starts fetching chunk k's bytes
-                # while this thread blocks on (and then dispatches) k+1
-                self._fire_uplink_sink(start_round + done, state)
-                infos = jax.device_get(infos)  # the chunk's ONE host sync
-            else:
-                # interleave batch and mask draws per round (not per chunk)
-                # so an rng-consuming supplier sees a chunk-size-invariant
-                # rng stream: the trajectory must not depend on chunk_rounds
-                per_round, masks = [], []
-                for i in range(c):
-                    per_round.append(
-                        supplier.sample_round(start_round + done + i, rng))
-                    if self._use_active:
-                        masks.append(sample_active_masks(
-                            self.n_clients, 1, self.config.participation,
-                            rng)[0])
-                active = np.stack(masks) if self._use_active else None
-                state, infos = self._invoke_chunk(state, per_round, active)
-                self._fire_uplink_sink(start_round + done, state)
+            chunk_span = _trace.span("exec/chunk", "exec",
+                                     start_round=start_round + done, rounds=c)
+            with chunk_span:
+                if self._cohort is not None:
+                    state, infos = self._run_cohort_chunk(
+                        state, supplier, start_round + done, c, rng,
+                        use_stacked)
+                elif use_stacked:
+                    batches = supplier.sample_chunk(start_round + done, c,
+                                                    rng)
+                    state, infos = self._invoke_stacked(state, batches, None)
+                    # hand the chunk's uplink to the sink BEFORE the host
+                    # sync: an overlapping sender starts fetching chunk k's
+                    # bytes while this thread blocks on (and dispatches) k+1
+                    self._fire_uplink_sink(start_round + done, state)
+                    with _trace.span("exec/host_sync", "exec"):
+                        infos = jax.device_get(infos)  # ONE host sync
+                else:
+                    # interleave batch and mask draws per round (not per
+                    # chunk) so an rng-consuming supplier sees a
+                    # chunk-size-invariant rng stream: the trajectory must
+                    # not depend on chunk_rounds
+                    per_round, masks = [], []
+                    for i in range(c):
+                        per_round.append(supplier.sample_round(
+                            start_round + done + i, rng))
+                        if self._use_active:
+                            masks.append(sample_active_masks(
+                                self.n_clients, 1,
+                                self.config.participation, rng)[0])
+                    active = np.stack(masks) if self._use_active else None
+                    state, infos = self._invoke_chunk(state, per_round,
+                                                      active)
+                    self._fire_uplink_sink(start_round + done, state)
             per_round_infos = [{} for _ in range(c)]
             for k, v in infos.items():
                 arr = np.asarray(v)

@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as _trace
+
 Batch = Any
 
 
@@ -242,16 +244,20 @@ class ArraySupplier(BatchSupplier):
                             client_ids)
 
     def _chunk(self, start_round, n_rounds, client_ids=None):
-        idx = np.stack([self._round_idx(start_round + i, client_ids)
-                        for i in range(n_rounds)])
-        chunk = self._gather(idx, client_ids)
-        if (self.prefetch and not self.device_cache
-                and jax.default_backend() != "cpu"):
-            # stage the host gather onto the accelerator from the staging
-            # thread: the H2D copy overlaps the current compiled call and
-            # the chunk arrives as donatable device buffers instead of
-            # transferring (and double-allocating) at the jit boundary
-            chunk = jax.device_put(chunk)
+        with _trace.span("supplier/stage", "supplier",
+                         start_round=int(start_round),
+                         rounds=int(n_rounds)):
+            idx = np.stack([self._round_idx(start_round + i, client_ids)
+                            for i in range(n_rounds)])
+            chunk = self._gather(idx, client_ids)
+            if (self.prefetch and not self.device_cache
+                    and jax.default_backend() != "cpu"):
+                # stage the host gather onto the accelerator from the
+                # staging thread: the H2D copy overlaps the current
+                # compiled call and the chunk arrives as donatable device
+                # buffers instead of transferring (and double-allocating)
+                # at the jit boundary
+                chunk = jax.device_put(chunk)
         return chunk
 
     def sample_chunk(self, start_round, n_rounds, rng=None, *,
@@ -273,7 +279,9 @@ class ArraySupplier(BatchSupplier):
                 max_workers=1, thread_name_prefix="supplier-prefetch")
         if (self._pending is not None
                 and self._pending[:2] == (start_round, n_rounds)):
-            chunk = self._pending[2].result()
+            with _trace.span("supplier/wait", "supplier",
+                             start_round=int(start_round)):
+                chunk = self._pending[2].result()
         else:
             # cold start, or the caller jumped (e.g. a remainder chunk):
             # fall back to a synchronous gather and re-prime

@@ -76,6 +76,8 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.comm import wire
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["RuntimeArgs", "run_local", "run_server", "run_worker",
            "run_pair", "shard_bounds", "add_runtime_args"]
@@ -125,6 +127,13 @@ class RuntimeArgs:
     throttle_bw: Optional[float] = None  # bytes/s pacing on the sender
     replay: bool = True       # server-side drift check (N == 1)
     timeout: float = 120.0
+    # observability (repro.obs): a trace path enables span recording in
+    # EVERY process; workers ship their buffers in the BYE frame and the
+    # server writes ONE merged Chrome trace-event JSON there.  The
+    # metrics path makes the server append one JSONL line per commit plus
+    # a final registry snapshot.
+    trace: Optional[str] = None
+    metrics_jsonl: Optional[str] = None
 
 
 def shard_bounds(n_total: int, n_workers: int) -> list:
@@ -253,10 +262,15 @@ class _UplinkSender:
         self.chunk = chunk
         self.throttle_bw = throttle_bw
         self.base_version = 0
-        self.bytes_sent = 0
-        self.chunks = 0
-        self.send_wait_s = 0.0   # time the COMPUTE thread spent blocked
-        self.sender_busy_s = 0.0  # time the wire path itself took
+        # the sender's numbers live in a metrics registry (one schema,
+        # snapshot-able); report() preserves the historical result keys
+        self.metrics = obs_metrics.MetricsRegistry()
+        self._m_bytes = self.metrics.counter("uplink/bytes")
+        self._m_chunks = self.metrics.counter("uplink/chunks")
+        # time the COMPUTE thread spent blocked handing off / sending
+        self._m_wait = self.metrics.counter("uplink/send_wait_s")
+        # time the wire path itself took (fetch + pack + send + ACK)
+        self._m_busy = self.metrics.counter("uplink/sender_busy_s")
         self._err: Optional[BaseException] = None
         self._q: Optional[queue.Queue] = None
         self._thread: Optional[threading.Thread] = None
@@ -272,12 +286,13 @@ class _UplinkSender:
     def sink(self, start_round: int, msgs, state) -> None:
         if self._err is not None:
             raise RuntimeError("uplink sender died") from self._err
-        t0 = time.perf_counter()
-        if self._q is None:
-            self._ship(start_round, msgs, state)
-        else:
-            self._q.put((start_round, msgs, state))
-        self.send_wait_s += time.perf_counter() - t0
+        with obs_trace.timed("uplink/wait", "uplink",
+                             start_round=int(start_round)) as tm:
+            if self._q is None:
+                self._ship(start_round, msgs, state)
+            else:
+                self._q.put((start_round, msgs, state))
+        self._m_wait.add(tm.seconds)
 
     # -- internals --------------------------------------------------------
 
@@ -298,36 +313,40 @@ class _UplinkSender:
         import jax
 
         t0 = time.perf_counter()
-        # host fetch happens HERE (on the sender thread when overlapped):
-        # np.asarray blocks until the chunk's computation delivers, then
-        # everything below is plain host bytes
-        if self.plane_spec is not None:
-            flat = np.asarray(msgs)  # (c, n, d_pad)
-            c = flat.shape[0]
-            packed = wire.pack_plane(flat, self.encoding)
-        else:
-            host = jax.tree_util.tree_map(np.asarray, msgs)
-            c = jax.tree_util.tree_leaves(host)[0].shape[0]
-            packed = wire.pack_message(host, self.encoding)
-        frame = {
-            "worker": self.rank,
-            "start_round": int(start_round),
-            "rounds": int(c),
-            "base_version": int(self.base_version),
-            "msgs": packed,
-            "committed": _server_fields(self.algorithm, state),
-        }
-        nb = wire.send_frame(self.sock, wire.T_CHUNK, frame)
-        if self.throttle_bw:
-            time.sleep(max(0.0, nb / self.throttle_bw
-                           - (time.perf_counter() - t0)))
-        ftype, ack = wire.recv_frame(self.sock)
-        if ftype != wire.T_ACK:
-            raise wire.WireError(f"expected ACK, got frame type {ftype}")
+        with obs_trace.span("uplink/ship", "uplink",
+                            start_round=int(start_round)) as sp:
+            # host fetch happens HERE (on the sender thread when
+            # overlapped): np.asarray blocks until the chunk's computation
+            # delivers, then everything below is plain host bytes
+            with obs_trace.span("uplink/fetch_pack", "uplink"):
+                if self.plane_spec is not None:
+                    flat = np.asarray(msgs)  # (c, n, d_pad)
+                    c = flat.shape[0]
+                    packed = wire.pack_plane(flat, self.encoding)
+                else:
+                    host = jax.tree_util.tree_map(np.asarray, msgs)
+                    c = jax.tree_util.tree_leaves(host)[0].shape[0]
+                    packed = wire.pack_message(host, self.encoding)
+            frame = {
+                "worker": self.rank,
+                "start_round": int(start_round),
+                "rounds": int(c),
+                "base_version": int(self.base_version),
+                "msgs": packed,
+                "committed": _server_fields(self.algorithm, state),
+            }
+            nb = wire.send_frame(self.sock, wire.T_CHUNK, frame)
+            sp.set(nbytes=nb, rounds=int(c))
+            if self.throttle_bw:
+                time.sleep(max(0.0, nb / self.throttle_bw
+                               - (time.perf_counter() - t0)))
+            ftype, ack = wire.recv_frame(self.sock)
+            if ftype != wire.T_ACK:
+                raise wire.WireError(f"expected ACK, got frame type {ftype}")
         self.base_version = ack["version"]
-        self.bytes_sent += nb
-        self.chunks += 1
-        self.sender_busy_s += time.perf_counter() - t0
+        self._m_bytes.add(nb)
+        self._m_chunks.add(1)
+        self._m_busy.add(time.perf_counter() - t0)
 
     def finish(self) -> None:
         """Flush the queue and surface any sender-thread failure."""
@@ -336,6 +355,23 @@ class _UplinkSender:
             self._thread.join()
         if self._err is not None:
             raise RuntimeError("uplink sender died") from self._err
+
+    # historical attribute surface, now registry-backed
+    @property
+    def bytes_sent(self) -> int:
+        return int(self._m_bytes.value)
+
+    @property
+    def chunks(self) -> int:
+        return int(self._m_chunks.value)
+
+    @property
+    def send_wait_s(self) -> float:
+        return self._m_wait.value
+
+    @property
+    def sender_busy_s(self) -> float:
+        return self._m_busy.value
 
     def report(self) -> dict:
         return {"mode": self.mode, "encoding": self.encoding,
@@ -382,8 +418,20 @@ def run_worker(a: RuntimeArgs, rank: int) -> dict:
     if encoding == "auto":
         encoding = _transport(a).wire_encoding
 
+    # install() is idempotent: in the in-process threaded topology the
+    # server may already own the tracer, in which case this worker shares
+    # it (one bundle; the merge dedupes by pid) and must NOT uninstall it
+    owns_tracer = a.trace and not isinstance(obs_trace.get(),
+                                             obs_trace.Tracer)
+    tracer = obs_trace.install(f"worker{rank}") if a.trace else None
     sock = _connect(a)
     try:
+        # the HELLO/ACK round trip doubles as the clock-offset estimate:
+        # the server stamps its own monotonic clock into the ACK, and
+        # (assuming symmetric latency) that stamp corresponds to the
+        # midpoint of our send/recv window -- every shipped span lands on
+        # the server timebase within half a round trip
+        t_send = obs_trace.now()
         wire.send_frame(sock, wire.T_HELLO, {
             "worker": rank, "lo": lo, "hi": hi, "n_total": a.clients,
             "rounds": a.rounds, "chunk": a.chunk, "mode": a.mode,
@@ -392,8 +440,12 @@ def run_worker(a: RuntimeArgs, rank: int) -> dict:
             "aux_spec": aux_spec,
         })
         ftype, hello_ack = wire.recv_frame(sock)
+        t_recv = obs_trace.now()
         if ftype != wire.T_ACK:
             raise wire.WireError(f"expected HELLO ACK, got type {ftype}")
+        if tracer is not None and "srv_now" in hello_ack:
+            tracer.offset = obs_trace.clock_offset(
+                t_send, t_recv, hello_ack["srv_now"])
 
         sender = _UplinkSender(sock, rank, alg, plane_spec, encoding,
                                a.mode, a.chunk, a.throttle_bw)
@@ -403,13 +455,16 @@ def run_worker(a: RuntimeArgs, rank: int) -> dict:
         sender.finish()
         wall = time.perf_counter() - t0
 
-        wire.send_frame(sock, wire.T_BYE, {"worker": rank,
-                                           "report": sender.report()})
+        wire.send_frame(sock, wire.T_BYE, {
+            "worker": rank, "report": sender.report(),
+            "trace": tracer.export_wire() if tracer is not None else None})
         ftype, result = wire.recv_frame(sock)
         if ftype != wire.T_RESULT:
             raise wire.WireError(f"expected RESULT, got type {ftype}")
     finally:
         sock.close()
+        if tracer is not None and owns_tracer:
+            obs_trace.uninstall()
     rep = sender.report()
     rep.update({"worker": rank, "lo": lo, "hi": hi, "wall_s": wall,
                 "rounds": a.rounds, "metrics": metrics,
@@ -444,6 +499,20 @@ class _ServerState:
         self.lock = threading.Lock()
         self._replay_step = None
         self._replay_state = state0 if (a.replay and a.workers == 1) else None
+        # the unified metrics surface: commit-path counters/histograms land
+        # here, one JSONL line per commit when a sink is attached
+        from repro.sched.aggregator import AGE_HIST_BUCKETS
+
+        self.metrics = obs_metrics.MetricsRegistry()
+        self.sink = (obs_metrics.JsonlSink(a.metrics_jsonl)
+                     if a.metrics_jsonl else None)
+        self._m_bytes = self.metrics.counter("uplink/bytes")
+        self._m_commits = self.metrics.counter("commits")
+        self._m_age = self.metrics.histogram("arrival/age",
+                                             buckets=AGE_HIST_BUCKETS)
+        self._m_weight = self.metrics.gauge("commit/weight")
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
 
     # -- replay (the aux-independence check, N == 1) ----------------------
 
@@ -489,17 +558,22 @@ class _ServerState:
     def commit(self, frame: dict, nbytes: int, spec, aux_spec) -> dict:
         """Apply one CHUNK frame; returns the ACK payload.  Caller holds
         no lock -- this takes it."""
-        with self.lock:
+        with self.lock, obs_trace.span(
+                "server/commit", "server", worker=frame["worker"],
+                start_round=frame["start_round"], nbytes=nbytes):
             arrival = self.ledger.record(
                 frame["worker"], frame["start_round"], frame["rounds"],
                 nbytes, frame["base_version"])
             committed = frame["committed"]
             n_w = self._shard_width(frame["worker"])
+            w = 1.0
             if self.args.workers == 1:
                 # single trajectory owner: install verbatim (bitwise)
                 if self._replay_state is not None:
-                    self._replay(frame["msgs"], spec, aux_spec,
-                                 frame["rounds"])
+                    with obs_trace.span("server/replay", "server",
+                                        rounds=frame["rounds"]):
+                        self._replay(frame["msgs"], spec, aux_spec,
+                                     frame["rounds"])
                     self.max_drift = max(self.max_drift,
                                          self.drift_vs(committed))
                 self.fields = dict(committed)
@@ -520,6 +594,20 @@ class _ServerState:
             self.snapshots[version] = dict(self.fields)
             self.rounds_done = max(self.rounds_done,
                                    frame["start_round"] + frame["rounds"])
+            t = obs_trace.now()
+            if self._t_first is None:
+                self._t_first = t
+            self._t_last = t
+            self._m_bytes.add(nbytes)
+            self._m_commits.add(1)
+            self._m_age.observe(arrival.age)
+            self._m_weight.set(w)
+            if self.sink is not None:
+                self.sink.write("commit", worker=frame["worker"],
+                                version=version, start_round=frame[
+                                    "start_round"],
+                                rounds=frame["rounds"], nbytes=nbytes,
+                                age=arrival.age, weight=w)
             return {"version": version, "age": arrival.age,
                     "t": arrival.t}
 
@@ -529,14 +617,19 @@ class _ServerState:
 
     def result(self) -> dict:
         with self.lock:
+            if self._t_first is not None and self._t_last > self._t_first:
+                self.metrics.gauge("round_throughput").set(
+                    self.rounds_done / (self._t_last - self._t_first))
             return {"fields": self.fields, "version": self.ledger.version,
                     "rounds_done": self.rounds_done,
                     "max_replay_drift": self.max_drift,
                     "ledger": self.ledger.summary(),
-                    "age_histogram": self.ledger.age_histogram()}
+                    "age_histogram": self.ledger.age_histogram(),
+                    "metrics": self.metrics.snapshot()}
 
 
-def _serve_conn(conn, srv: _ServerState, reports: dict) -> None:
+def _serve_conn(conn, srv: _ServerState, reports: dict,
+                traces: Optional[dict] = None) -> None:
     """One worker connection, driven to BYE.  Runs on its own thread; the
     commit path serializes on the server-state lock."""
     spec = None
@@ -548,12 +641,19 @@ def _serve_conn(conn, srv: _ServerState, reports: dict) -> None:
         if hello["spec"] is not None:
             spec = wire.spec_from_wire(hello["spec"])
         aux_spec = hello["aux_spec"]
-        wire.send_frame(conn, wire.T_ACK, {"version": srv.ledger.version})
+        # srv_now is the worker's clock-offset reference (see run_worker)
+        wire.send_frame(conn, wire.T_ACK, {"version": srv.ledger.version,
+                                           "srv_now": obs_trace.now()})
         while True:
-            buf = _recv_raw_frame(conn)
-            ftype, tree, _ = wire.decode_frame(buf)
+            with obs_trace.span("wire/recv", "wire") as sp:
+                buf = _recv_raw_frame(conn)
+                sp.set(nbytes=len(buf))
+            with obs_trace.span("wire/decode", "wire", nbytes=len(buf)):
+                ftype, tree, _ = wire.decode_frame(buf)
             if ftype == wire.T_BYE:
                 reports[tree["worker"]] = tree.get("report", {})
+                if traces is not None and tree.get("trace") is not None:
+                    traces[tree["worker"]] = tree["trace"]
                 break
             if ftype != wire.T_CHUNK:
                 raise wire.WireError(f"unexpected frame type {ftype}")
@@ -585,6 +685,9 @@ def _recv_raw_frame(sock) -> bytes:
 def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
     """The server process: accept ``a.workers`` connections, drive each to
     BYE, return the final result (also what each worker receives)."""
+    owns_tracer = a.trace and not isinstance(obs_trace.get(),
+                                             obs_trace.Tracer)
+    tracer = obs_trace.install("server") if a.trace else None
     alg, _, _, _ = _problem(a)
     srv = _ServerState(alg, a)
     lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -596,6 +699,7 @@ def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
     if ready_cb is not None:
         ready_cb(port)
     reports: dict = {}
+    traces: dict = {}
     threads = []
     try:
         for _ in range(a.workers):
@@ -603,7 +707,8 @@ def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             conn.settimeout(a.timeout)
             t = threading.Thread(target=_serve_conn,
-                                 args=(conn, srv, reports), daemon=True)
+                                 args=(conn, srv, reports, traces),
+                                 daemon=True)
             t.start()
             threads.append(t)
         for t in threads:
@@ -615,6 +720,20 @@ def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
     out = srv.result()
     out["worker_reports"] = reports
     out["port"] = port
+    if srv.sink is not None:
+        srv.sink.write_snapshot(srv.metrics, rounds_done=srv.rounds_done)
+        srv.sink.close()
+    if tracer is not None:
+        # the merge: server spans (offset 0 -- the reference clock) + every
+        # worker's shipped bundle, already offset onto this timebase.  The
+        # server bundle goes first so merge_wire's pid dedupe keeps the
+        # complete in-process bundle when a threaded worker shares it.
+        doc = obs_trace.to_chrome([tracer.export_wire()]
+                                  + [traces[w] for w in sorted(traces)])
+        obs_trace.write_chrome(doc, a.trace)
+        out["trace_path"] = a.trace
+        if owns_tracer:
+            obs_trace.uninstall()
     return out
 
 
@@ -699,6 +818,13 @@ def add_runtime_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--x32", action="store_true",
                     help="run in float32 (default float64)")
     ap.add_argument("--timeout", type=float, default=120.0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record spans in every process and write ONE "
+                    "merged Chrome trace-event JSON here (open in "
+                    "Perfetto)")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="OUT.jsonl",
+                    help="server appends one JSONL line per commit plus a "
+                    "final metrics snapshot")
 
 
 def _from_ns(ns: argparse.Namespace) -> RuntimeArgs:
@@ -709,7 +835,8 @@ def _from_ns(ns: argparse.Namespace) -> RuntimeArgs:
         rounds=ns.rounds, batch_size=ns.batch_size, host=ns.host,
         port=ns.port, workers=ns.workers, mode=ns.mode,
         encoding=ns.encoding, throttle_bw=ns.throttle_bw,
-        replay=not ns.no_replay, timeout=ns.timeout)
+        replay=not ns.no_replay, timeout=ns.timeout,
+        trace=ns.trace, metrics_jsonl=ns.metrics_jsonl)
 
 
 def _to_argv(a: RuntimeArgs) -> list:
@@ -726,6 +853,10 @@ def _to_argv(a: RuntimeArgs) -> list:
         argv += ["--batch-size", str(a.batch_size)]
     if a.throttle_bw is not None:
         argv += ["--throttle-bw", str(a.throttle_bw)]
+    if a.trace is not None:
+        argv += ["--trace", a.trace]
+    if a.metrics_jsonl is not None:
+        argv += ["--metrics-jsonl", a.metrics_jsonl]
     if a.plane:
         argv.append("--plane")
     if not a.replay:
@@ -782,6 +913,10 @@ def main(argv=None) -> int:
           f"wall={rep['wall_s']:.3f}s sent={rep['bytes_sent']}B "
           f"wait={rep['send_wait_s']:.3f}s "
           f"drift={res['max_replay_drift']:.3e}")
+    if a.trace:
+        print(f"trace: {a.trace} (merged Chrome trace-event JSON)")
+    if a.metrics_jsonl:
+        print(f"metrics: {a.metrics_jsonl}")
     if ns.check_parity:
         if a.workers != 1:
             print("parity check needs --workers 1", file=sys.stderr)

@@ -38,7 +38,6 @@ import argparse  # noqa: E402
 import dataclasses  # noqa: E402
 import json  # noqa: E402
 import pathlib  # noqa: E402
-import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
@@ -52,6 +51,7 @@ from repro.core.prox import L1  # noqa: E402
 from repro.launch import sharding as shd  # noqa: E402
 from repro.launch import specs as sp  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
 from repro.roofline import analysis as roof  # noqa: E402
 
@@ -304,19 +304,22 @@ def run_one(arch: str, shape_name: str, mesh_name: str, tau: int = DEFAULT_TAU,
     multi_pod = mesh_name == "multi"
     mesh = make_production_mesh(multi_pod=multi_pod)
 
-    t0 = time.time()
     kw = {"tau": tau} if shape.kind == "train" else {}
-    compiled = _compile(builders[shape.kind], cfg, shape, mesh, multi_pod, **kw)
-    t_compile = time.time() - t0
+    with obs_trace.timed("dryrun/compile", "dryrun", arch=arch,
+                         shape=shape_name, mesh=mesh_name) as tm_compile:
+        compiled = _compile(builders[shape.kind], cfg, shape, mesh,
+                            multi_pod, **kw)
+    t_compile = tm_compile.seconds
 
     # loop-corrected costs from unrolled probes
-    t0 = time.time()
-    if probes:
-        flops, byts, coll = probe_costs(cfg, shape, mesh, multi_pod, tau,
-                                        builders)
-    else:
-        flops, byts, coll = _costs(compiled)
-    t_probe = time.time() - t0
+    with obs_trace.timed("dryrun/probes", "dryrun", arch=arch,
+                         shape=shape_name) as tm_probe:
+        if probes:
+            flops, byts, coll = probe_costs(cfg, shape, mesh, multi_pod, tau,
+                                            builders)
+        else:
+            flops, byts, coll = _costs(compiled)
+    t_probe = tm_probe.seconds
 
     lcfg = cfg.long_context_variant() if shape.name == "long_500k" else cfg
     params_s, _ = abstract_model(lcfg)

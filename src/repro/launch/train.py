@@ -46,11 +46,13 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from repro.checkpoint import ckpt
 from repro.configs import registry
@@ -215,7 +217,20 @@ def main(argv=None):
                     help="cohort: resident working-set width (default: the "
                          "full population; cohort == population reproduces "
                          "the dense engine bitwise)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record engine/supplier spans and write a Chrome "
+                         "trace-event JSON here (open in Perfetto); with "
+                         "--processes N the merged multi-process trace "
+                         "lands at this path instead")
+    ap.add_argument("--metrics-jsonl", default=None, metavar="OUT.jsonl",
+                    help="append one JSONL line per round plus a final "
+                         "metrics-registry snapshot")
     args = ap.parse_args(argv)
+
+    tracer = obs_trace.install("train") if args.trace else None
+    mreg = obs_metrics.MetricsRegistry()
+    sink = (obs_metrics.JsonlSink(args.metrics_jsonl)
+            if args.metrics_jsonl else None)
 
     base = (registry.get_smoke(args.arch) if args.scale == "smoke"
             else registry.get(args.arch))
@@ -295,14 +310,18 @@ def main(argv=None):
             return inner.sample_round(r, rng,
                                       client_ids=ids % args.clients)
 
-    t0 = time.time()
+    t0 = obs_trace.now()
     last_loss = float("nan")
 
     def log_cb(ri, info):
         # fires per chunk (not per block), so logs stream every --chunk rounds
+        if sink is not None:
+            sink.write("round", round=int(ri),
+                       **{k: float(v) for k, v in info.items()
+                          if np.ndim(v) == 0})
         if ri % args.log_every == 0 or ri == args.rounds - 1:
             print(f"round {ri:5d}  loss {info.get('train_loss', np.nan):.4f}  "
-                  f"({(time.time()-t0)/(ri+1):.2f}s/round)", flush=True)
+                  f"({(obs_trace.now()-t0)/(ri+1):.2f}s/round)", flush=True)
 
     # checkpoint cadence only matters when checkpointing is on
     ckpt_every = (args.ckpt_every if args.ckpt and args.ckpt_every > 0
@@ -357,6 +376,24 @@ def main(argv=None):
     if engine.downlink_bytes_per_client_round is not None:
         print(f"downlink: {engine.downlink_bytes_per_client_round/1e6:.2f} "
               f"MB/client/round ({engine.downlink.transport.name})")
+    wall = obs_trace.now() - t0
+    if sink is not None:
+        mreg.gauge("round_throughput").set(args.rounds / max(wall, 1e-9))
+        mreg.counter("rounds").add(args.rounds)
+        if engine.uplink_bytes_per_client_round is not None:
+            mreg.counter("uplink/bytes").add(
+                engine.uplink_bytes_per_client_round * args.clients
+                * args.rounds)
+        sink.write_snapshot(mreg, rounds=int(args.rounds),
+                            final_loss=float(last_loss))
+        sink.close()
+        print(f"metrics -> {args.metrics_jsonl}")
+    if tracer is not None:
+        obs_trace.write_chrome(obs_trace.to_chrome([tracer.export_wire()]),
+                               args.trace)
+        obs_trace.uninstall()
+        print(f"trace -> {args.trace} ({tracer.n_spans} spans; open in "
+              "Perfetto)")
     return state
 
 

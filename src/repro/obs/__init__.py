@@ -1,0 +1,19 @@
+"""Observability: one tracing + metrics layer for every process.
+
+  * :mod:`repro.obs.trace` -- ring-buffer span tracer (no-op by default),
+    cross-process Chrome trace-event assembly, schema validator;
+  * :mod:`repro.obs.metrics` -- counter/gauge/histogram registry with one
+    snapshot schema and a JSONL sink;
+  * :mod:`repro.obs.report` -- overlap attribution (measured compute/wire
+    occupancy per chunk) diffed against the roofline wire model.
+
+stdlib + numpy only: safe to import from the wire codec, the server
+process, and every benchmark.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, JsonlSink,
+                               MetricsRegistry)
+from repro.obs.trace import (NULL_TRACER, Tracer, install, span, timed,
+                             uninstall)
+
+__all__ = ["Counter", "Gauge", "Histogram", "JsonlSink", "MetricsRegistry",
+           "NULL_TRACER", "Tracer", "install", "span", "timed", "uninstall"]
