@@ -1,17 +1,72 @@
-"""Ablation: the paper's (t+1)*eta local prox schedule (Section 2.2, item 4)
-vs a fixed eta_tilde prox parameter at every local step.
+"""Schedule ablations: the paper's prox schedule, and the uplink's
+staleness-adaptive compression-ratio schedule.
 
-The paper motivates the growing schedule by the fixed-point property
-(Algorithm 2): with a fixed parameter, a stationary point is NOT a fixed
-point of the round, leaving a schedule-induced residual.  We measure the
-achievable optimality floor of both variants under full gradients.
+* ``ablation/prox_schedule/*`` -- the paper's (t+1)*eta local prox
+  schedule (Section 2.2, item 4) vs a fixed eta_tilde prox parameter at
+  every local step.  The paper motivates the growing schedule by the
+  fixed-point property (Algorithm 2): with a fixed parameter, a
+  stationary point is NOT a fixed point of the round, leaving a
+  schedule-induced residual.  We measure the achievable optimality floor
+  of both variants under full gradients.
+
+* ``ablation/comp_schedule/*`` -- the per-commit compression-ratio
+  schedule (:mod:`repro.comm.schedule`) on the async straggler workload:
+  constant (bitwise the fixed-ratio transport) vs linear-in-age vs
+  bucketed.  Stale clients' reports are staleness-downweighted at commit
+  anyway, so compressing them harder spends the uplink where it still
+  carries weight; the derived column reports measured bytes/client/round
+  (summed ``uplink_bytes`` over the run) and the mean report age.  The
+  acceptance bar is the adaptive rows at fewer measured bytes within
+  1.05x of the constant row's round time.
 """
 from __future__ import annotations
 
 from benchmarks.common import QUICK, Timer, emit, logreg_problem
 
 
+def compression_schedule_rows(record=emit, *, rounds=None):
+    """The constant / linear-in-age / bucketed row family; also called by
+    exec_bench so BENCH_exec.json tracks the schedule trajectory."""
+    import numpy as np
+
+    from benchmarks.common import make_engine
+
+    from repro.comm import ScheduledTopK, as_schedule
+    from repro.core.algorithm import DProxConfig
+    from repro.exec import ArraySupplier
+    from repro.fed.simulator import DProxAlgorithm
+    from repro.sched import Staleness, StragglerClock
+
+    data, reg, grad_fn, full_g, params0, L = logreg_problem()
+    tau, eta_g = 10, 3.0
+    eta = (0.5 / L) / (eta_g * tau)
+    alg = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=eta, eta_g=eta_g))
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    R = rounds if rounds is not None else (128 if QUICK else 512)
+    chunk = 32
+    asyn = dict(clock=StragglerClock(slowdown=4.0),
+                buffer_size=data.n_clients // 2,
+                staleness=Staleness("poly", correct=True), queue_depth=2)
+    for kind in ("constant", "linear", "bucketed"):
+        tr = ScheduledTopK(schedule=as_schedule(kind, 0.1))
+        engine = make_engine(alg, grad_fn, data.n_clients,
+                             chunk_rounds=chunk, transport=tr, **asyn)
+        state = engine.init(params0)
+        state, _ = engine.run(state, sup, chunk, seed=1)  # warmup
+        best, metrics = float("inf"), {}
+        for _ in range(3):
+            with Timer() as t:
+                state, metrics = engine.run(state, sup, R, seed=2)
+            best = min(best, t.seconds / R * 1e6)
+        bytes_pcr = float(np.sum(metrics["uplink_bytes"])) / R \
+            / data.n_clients
+        age = float(np.mean(metrics["staleness_mean"]))
+        record(f"ablation/comp_schedule/{kind}", best,
+               f"{bytes_pcr:.1f}B/client/round,mean_age={age:.2f}")
+
+
 def main():
+    compression_schedule_rows()
     from repro.core.algorithm import DProxConfig
     from repro.data.synthetic import make_round_batches
     from repro.fed.simulator import DProxAlgorithm, run

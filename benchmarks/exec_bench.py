@@ -36,6 +36,19 @@ Experiments on the paper's sparse-logreg problem (tau=10):
     footprint is O(cohort x row) + O(population) for the slot map, NOT
     O(population x row) (derived column = store bytes vs the dense
     estimate; the smoke asserts the ratio).
+  * ``exec/sched_*``       -- the per-commit compression-ratio schedule
+    family (repro.comm.schedule) on the async straggler workload: constant
+    (bitwise the fixed-ratio transport) vs linear-in-age vs bucketed
+    (derived column = measured uplink bytes/client/round + mean report
+    age).  The acceptance bar is the adaptive rows at fewer measured bytes
+    within 1.05x of the constant row's time.
+  * ``exec/tuned_config`` / ``exec/default_config`` -- the closed-loop
+    autotuner (repro.tune): the winning measured EngineConfig timed
+    against the hand-picked default in the same process.  The search
+    persists this host's tuning record under experiments/tune, so
+    re-running the bench reuses it with zero measured trials.  The
+    acceptance bar is tuned time <= default at equal-or-fewer uplink
+    bytes.
   * ``exec/async_*``       -- the Asynchrony stage at equal work: zero-delay
     deterministic clock + full buffer (trajectory-identical to the bare
     engine, so the ratio isolates the buffered-aggregation overhead: clock
@@ -352,6 +365,53 @@ def bench_cohort(alg, grad_fn, data, params0, rounds, tau) -> None:
            f"dense_est={dense_est}B,touched={store.touched}/{population}")
 
 
+def bench_schedule(alg, grad_fn, data, params0, rounds, tau) -> None:
+    """The compression-ratio schedule family (constant / linear / bucketed)
+    on the async straggler workload -- the ablation_schedule rows, recorded
+    into BENCH_exec.json so the schedule trajectory is tracked per PR."""
+    from benchmarks.ablation_schedule import compression_schedule_rows
+
+    compression_schedule_rows(
+        lambda name, us, derived: record(
+            name.replace("ablation/comp_schedule/", "exec/sched_"), us,
+            derived),
+        rounds=rounds)
+
+
+def bench_tuned(alg, grad_fn, data, params0, rounds, tau, *,
+                budget=10) -> None:
+    """Closed-loop autotuning vs the hand-picked default.
+
+    Runs :func:`repro.tune.search.tune` on the bench problem (persisting
+    the host's tuning record under experiments/tune -- a second bench run
+    reuses it with zero measured trials), then times the winning
+    EngineConfig against the default TrialPoint in this process.  The
+    acceptance bar: the tuned row's round time matches or beats the
+    default at equal-or-fewer uplink bytes, with the tuner's objective
+    read from repro.obs snapshots.
+    """
+    from repro.exec import ArraySupplier, EngineConfig, RoundEngine
+    from repro.tune import TrialPoint, Workload, engine_config_kwargs, tune
+
+    workload = Workload()
+    rec = tune(workload, budget=budget, rounds=min(64, rounds), log=None)
+    win = TrialPoint.from_dict(rec["best"]["point"])
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    cases = [("default_config", TrialPoint()), ("tuned_config", win)]
+    for name, point in cases:
+        kw = engine_config_kwargs(point, workload)
+        engine = RoundEngine(alg, grad_fn, data.n_clients,
+                             EngineConfig(**kw))
+        state = engine.init(params0)
+        state, _ = engine.run(state, sup, point.chunk_rounds, seed=1)
+        best = _time_run(engine, state, sup, rounds)
+        bytes_ = engine.uplink_bytes_per_client_round
+        record(f"exec/{name}", best,
+               f"{point.describe()},{bytes_ if bytes_ is not None else 168}"
+               f"B/client,{rec['measured_trials']}trials"
+               f"{'(cached)' if rec.get('cached') else ''}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dry", action="store_true",
@@ -375,6 +435,9 @@ def main(argv=None) -> None:
     bench_plane(alg, grad_fn, data, params0, rounds, tau)
     bench_async(alg, grad_fn, data, params0, rounds, tau)
     bench_cohort(alg, grad_fn, data, params0, rounds, tau)
+    bench_schedule(alg, grad_fn, data, params0, rounds, tau)
+    bench_tuned(alg, grad_fn, data, params0, rounds, tau,
+                budget=3 if args.dry else 10)
 
     if args.dry:
         print("dry run: BENCH_exec.json not written", flush=True)

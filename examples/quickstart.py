@@ -292,3 +292,27 @@ print(f"    steady chunks: compute {steady['compute_s']:.3f}s, wire "
       f"{steady['wire_s']:.3f}s, wall {steady['wall_s']:.3f}s; server saw "
       f"{snap['counters']['uplink/bytes']:.0f} uplink bytes over "
       f"{snap['counters']['commits']:.0f} commits")
+
+# --- autotuning: with execution concerns composable, the best EngineConfig
+# is host- and workload-dependent, so repro.tune searches it with MEASURED
+# trials: each candidate runs for real and is scored from the obs
+# instruments (trace-span round time + uplink bytes + arrival-age
+# staleness -- no ad-hoc timers), explore -> halve -> hillclimb, with the
+# winner persisted to a per-host tuning record (experiments/tune/) keyed
+# by host x workload x space signature.  Run this twice: the second pass
+# answers from the record with ZERO measured trials.  A 3-trial budget
+# keeps the demo quick; `python -m repro.tune --budget 12` is the real
+# thing, and `repro.launch.train --autotune N` adopts the winner for an
+# LM training run.  On async workloads (Workload(clock="straggler")) the
+# space also covers the staleness-adaptive compression schedule
+# demonstrated by the exec/sched_* bench rows.
+from repro.tune import TrialPoint, Workload, tune
+
+record = tune(Workload(), budget=3, rounds=32, log=None)
+best = record["best"]
+point = TrialPoint.from_dict(best["point"])
+print(f" autotuned EngineConfig ({record['measured_trials']} measured "
+      f"trials{', cached record' if record.get('cached') else ''}):")
+print(f"    winner {point.describe()}: objective {best['objective']:.1f} "
+      f"({best['round_us']:.1f} us/round, "
+      f"{best['bytes_per_client_round']:.0f} B/client/round uplink)")

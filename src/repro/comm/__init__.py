@@ -27,13 +27,25 @@ that exchange a first-class, swappable layer:
     its compressed byte count over a real socket.  Each transport declares
     its natural wire form via ``Transport.wire_encoding``; the
     multi-process runtime (:mod:`repro.fed.runtime`) is built on these
-    frames.
+    frames;
+  * :mod:`repro.comm.schedule` makes the keep ratio a *policy* instead of
+    a constant: :class:`ScheduledTopK` maps each client's observed report
+    staleness (the async aggregator's ``last_age`` ledger, passed as
+    ``compress(..., ages=)``) through a :class:`RatioSchedule` --
+    ``constant`` (bitwise the fixed-ratio path), ``linear`` in the age, or
+    an explicit ``bucketed`` table -- so downweighted-stale clients uplink
+    at harder ratios.  Outside the asynchrony stage no age signal exists
+    and the schedule degrades to its base ratio; ``uplink_bytes`` stays
+    the age-0 upper bound while the realized per-commit bytes ride the
+    engine's metrics path (the ``uplink_bytes`` info key).
 """
 from repro.comm.transport import (GRANULARITIES, Dense, DownlinkCompressor,
                                   PlaneTransport, Quantize, RandK, TopK,
                                   Transport, broadcast_elements,
                                   get_transport, message_elements_per_client,
                                   uplink_message_spec)
+from repro.comm.schedule import (SCHEDULE_KINDS, RatioSchedule, ScheduledTopK,
+                                 as_schedule, scheduled_transport)
 from repro.comm.wire import (PLANE_ENCODINGS, WireError, decode, decode_frame,
                              encode, encode_frame, pack_message, pack_plane,
                              payload_nbytes, recv_frame, send_frame,
@@ -42,6 +54,8 @@ from repro.comm.wire import (PLANE_ENCODINGS, WireError, decode, decode_frame,
 
 __all__ = ["Transport", "Dense", "TopK", "RandK", "Quantize",
            "DownlinkCompressor", "PlaneTransport", "GRANULARITIES",
+           "RatioSchedule", "ScheduledTopK", "SCHEDULE_KINDS",
+           "as_schedule", "scheduled_transport",
            "get_transport", "message_elements_per_client",
            "uplink_message_spec", "broadcast_elements",
            "WireError", "PLANE_ENCODINGS", "encode", "decode",

@@ -1,0 +1,306 @@
+"""Staleness-adaptive compression: a per-commit uplink ratio policy.
+
+Fixed-ratio transports spend the same wire budget on every client every
+round.  Under buffered asynchrony that is wasteful in a specific, measurable
+way: the server *downweights* stale reports (``Staleness.weights`` scales an
+age-``a`` report by ``(1+a)**-alpha``), so a straggler's report moves the
+global model less per byte than a fresh one -- yet it ships at the same
+ratio.  The compressed proximal FCO line (PAPERS.md, arxiv 2603.07654)
+motivates closing that gap from the transport side: clients whose reports
+arrive stale should uplink at *harder* ratios, reclaiming bytes exactly
+where the aggregator discounts them.
+
+:class:`RatioSchedule` is the policy -- a map from a client's observed
+staleness (the realized age of its most recently *delivered* report, the
+``last_age`` ledger :mod:`repro.sched.aggregator` carries) to a top-k keep
+ratio:
+
+  * ``constant``  -- every age keeps the base ``ratio``.  Pinned **bitwise**
+    against the fixed-ratio :class:`~repro.comm.transport.TopK` path
+    (tests/test_tune.py): the keep count comes from the same ``_k_of``
+    rounding and the threshold select keeps the surviving coordinates
+    untouched, so a constant schedule is the fixed transport;
+  * ``linear``    -- ``ratio - slope * age``, clamped to ``[floor, ratio]``:
+    smooth hardening in the report age;
+  * ``bucketed``  -- an explicit per-age-bucket ratio table (last bucket =
+    overflow), each entry quantized through ``_k_of`` exactly like a fixed
+    transport at that ratio.
+
+:class:`ScheduledTopK` threads the policy through magnitude top-k with the
+usual error-feedback stream.  The age signal enters ``compress(...,
+ages=)`` -- the asynchrony stage passes its ``last_age`` ledger; every
+other call site (the inline UplinkComm stage, downlink, benches) omits it
+and gets the base ratio, so the schedule degrades to fixed compression
+outside the async regime by construction.  Because the schedule only ever
+*hardens* (``ratio(age) <= ratio(0)``), the base-ratio byte accounting of
+``uplink_bytes`` stays an upper bound; the per-commit realized bytes are
+emitted through the engine's metrics path (``uplink_bytes`` info key) for
+the tuner and the schedule ablation to read.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.transport import Transport, _global_dims, _k_of
+from repro.core import plane as pln
+from repro.utils import tree as tu
+
+SCHEDULE_KINDS = ("constant", "linear", "bucketed")
+
+
+@dataclass(frozen=True)
+class RatioSchedule:
+    """Per-client keep-ratio as a function of observed report age.
+
+    ratio   : the base (age-0) keep ratio; also the hard upper bound.
+    kind    : "constant" | "linear" | "bucketed".
+    slope   : (linear) ratio lost per round of age.
+    floor   : (linear) lower clamp on the ratio.
+    buckets : (bucketed) explicit ratio per age bucket; ``buckets[-1]`` is
+              the overflow bucket for ages beyond the table.
+    """
+
+    ratio: float = 0.1
+    kind: str = "constant"
+    slope: float = 0.0
+    floor: float = 0.02
+    buckets: Tuple[float, ...] = ()
+
+    def validate(self) -> None:
+        if self.kind not in SCHEDULE_KINDS:
+            raise ValueError(f"schedule kind must be one of {SCHEDULE_KINDS},"
+                             f" got {self.kind!r}")
+        if not 0.0 < self.ratio <= 1.0:
+            raise ValueError(f"base ratio must be in (0, 1], got {self.ratio}")
+        if self.kind == "linear":
+            if self.slope < 0:
+                raise ValueError(f"slope must be >= 0, got {self.slope}")
+            if not 0.0 < self.floor <= self.ratio:
+                raise ValueError(
+                    f"floor must be in (0, ratio={self.ratio}], got "
+                    f"{self.floor}")
+        if self.kind == "bucketed":
+            if not self.buckets:
+                raise ValueError("bucketed schedule needs a non-empty "
+                                 "buckets table")
+            for b in self.buckets:
+                if not 0.0 < b <= self.ratio:
+                    raise ValueError(
+                        f"bucket ratios must be in (0, ratio={self.ratio}] "
+                        f"(the schedule only hardens), got {b}")
+
+    @property
+    def is_constant(self) -> bool:
+        return (self.kind == "constant"
+                or (self.kind == "linear" and self.slope == 0.0))
+
+    def keep_counts(self, ages, d: int) -> jax.Array:
+        """Per-client kept coordinates for a flattened dimension ``d``.
+
+        Constant and bucketed schedules quantize each table ratio through
+        the same Python-side ``_k_of`` rounding as a fixed transport at
+        that ratio -- this is what makes the constant schedule *bitwise*
+        the fixed path (no float re-rounding on the traced side).
+        """
+        if self.is_constant:
+            return jnp.full(ages.shape, _k_of(self.ratio, d), jnp.int32)
+        if self.kind == "bucketed":
+            table = jnp.asarray([_k_of(r, d) for r in self.buckets],
+                                jnp.int32)
+            ix = jnp.clip(ages, 0, len(self.buckets) - 1)
+            return table[ix]
+        r = jnp.clip(self.ratio - self.slope * ages.astype(jnp.float32),
+                     self.floor, self.ratio)
+        return jnp.clip(jnp.round(r * d).astype(jnp.int32), 1, d)
+
+
+def as_schedule(policy, ratio: float = 0.1) -> RatioSchedule:
+    """Coerce None / a kind name / RatioSchedule to a validated policy."""
+    if policy is None:
+        policy = RatioSchedule(ratio=ratio)
+    elif isinstance(policy, str):
+        policy = RatioSchedule(ratio=ratio, kind=policy,
+                               slope=0.25 * ratio if policy == "linear"
+                               else 0.0,
+                               buckets=(ratio, 0.5 * ratio, 0.25 * ratio)
+                               if policy == "bucketed" else ())
+    if not isinstance(policy, RatioSchedule):
+        raise ValueError(f"ratio schedule must be None, a kind name or a "
+                         f"RatioSchedule, got {type(policy).__name__}")
+    policy.validate()
+    return policy
+
+
+def _rowwise_select(flat, k, plane: bool = False):
+    """Keep the ``k[i]`` largest-magnitude entries of row ``i``.
+
+    The k-th magnitude via a descending sort equals ``lax.top_k``'s k-th
+    value, and the survivors pass through ``where`` untouched -- so with a
+    uniform ``k`` this is bitwise the fixed TopK threshold select.  The
+    fused TPU kernel already takes a per-row threshold, so the plane path
+    reuses it unchanged (``plane=True`` mirrors the fixed transport's
+    kernel gating: tiled planes only).
+    """
+    mag = jnp.abs(flat)
+    order = -jnp.sort(-mag, axis=1)
+    kth = jnp.take_along_axis(order, (k - 1).astype(jnp.int32)[:, None],
+                              axis=1)
+    if plane:
+        from repro.kernels import ops as kops
+
+        if kops._on_tpu():
+            return kops.plane_threshold_select(flat, kth[:, 0])
+    return jnp.where(mag >= kth, flat, 0)
+
+
+@dataclass(frozen=True)
+class ScheduledTopK(Transport):
+    """Magnitude top-k whose keep ratio follows a :class:`RatioSchedule`.
+
+    ``compress(comm_state, msg, key, ages=None)``: ``ages`` is the
+    per-client staleness signal (int, rounds); ``None`` means age zero for
+    every client (the inline / synchronous path), which yields the base
+    ratio.  Error feedback is threaded exactly as in
+    :class:`~repro.comm.transport.TopK`: what the schedule drops lands in
+    the residual and returns at the client's next transmission, so the
+    telescoping identity holds at every ratio the schedule visits.
+    """
+
+    schedule: RatioSchedule = RatioSchedule()
+    error_feedback: bool = True
+    granularity: str = "leaf"
+    name: str = "topk_sched"
+    wire_encoding: str = "sparse"
+    scheduled: bool = True
+
+    def __post_init__(self):
+        from repro.comm.transport import _check_granularity
+
+        _check_granularity(self.granularity)
+        self.schedule.validate()
+
+    @property
+    def ratio(self) -> float:
+        """Base (age-0) keep ratio -- what fixed-path byte accounting sees."""
+        return self.schedule.ratio
+
+    # -- compression -------------------------------------------------------
+
+    def _ages_of(self, ages, n: int):
+        if ages is None:
+            return jnp.zeros((n,), jnp.int32)
+        return ages.astype(jnp.int32)
+
+    def compress(self, comm_state, msg, key, ages=None):
+        target = tu.tree_add(comm_state, msg) if self.error_feedback else msg
+        msg_hat = self.apply(target, key, ages=ages)
+        new_state = (tu.tree_sub(target, msg_hat)
+                     if self.error_feedback else ())
+        return msg_hat, new_state
+
+    def apply(self, msg, key, ages=None):
+        if self.granularity == "global":
+            spec = pln.SegmentSpec.from_tree(msg, batch_dims=1)
+            return pln.unflatten(
+                spec, self.apply_flat(pln.flatten(spec, msg), key, spec,
+                                      ages=ages))
+        return self.apply_leaf(msg, key, ages=ages)
+
+    def apply_leaf(self, msg, key, ages=None):
+        def one(x):
+            flat = x.reshape(x.shape[0], -1)
+            d = flat.shape[1]
+            k = self.schedule.keep_counts(self._ages_of(ages, flat.shape[0]),
+                                          d)
+            return _rowwise_select(flat, k).reshape(x.shape)
+
+        return jax.tree_util.tree_map(one, msg)
+
+    def apply_flat(self, flat, key, spec, ages=None):
+        # the k-th magnitude over the padded plane equals the k-th over the
+        # valid region (padding is zero and k <= d), same argument as the
+        # fixed TopK plane path
+        k = self.schedule.keep_counts(self._ages_of(ages, flat.shape[0]),
+                                      spec.d)
+        return _rowwise_select(flat, k, plane=True)
+
+    # -- flat-plane surface (EngineConfig(plane=True)) ---------------------
+
+    def apply_plane(self, flat, key, spec, ages=None):
+        if self.granularity == "global":
+            return self.apply_flat(flat, key, spec, ages=ages)
+        return pln.flatten(spec, self.apply_leaf(pln.unflatten(spec, flat),
+                                                 key, ages=ages))
+
+    def compress_plane(self, comm_state, flat, key, spec, ages=None):
+        target = comm_state + flat if self.error_feedback else flat
+        hat = self.apply_plane(target, key, spec, ages=ages)
+        new_state = (target - hat) if self.error_feedback else comm_state
+        return hat, new_state
+
+    # -- byte accounting ---------------------------------------------------
+
+    def uplink_bytes(self, msg_template) -> int:
+        """Base-ratio (age-0) bytes per client per round: the schedule only
+        hardens with age, so this is the per-round upper bound."""
+        from repro.comm.transport import _leaf_elements
+
+        if self.granularity == "global":
+            d, itemsize = _global_dims(msg_template)
+            return _k_of(self.ratio, d) * (itemsize + 4)
+        total = 0
+        for l in jax.tree_util.tree_leaves(msg_template):
+            d = _leaf_elements(l)
+            total += _k_of(self.ratio, d) * (jnp.dtype(l.dtype).itemsize + 4)
+        return total
+
+    def scheduled_bytes(self, msg_template, ages) -> jax.Array:
+        """Per-client realized wire bytes at the given ages (f32 vector) --
+        what the async step emits per commit so measured uplink traffic
+        reflects the schedule, not the static upper bound."""
+        from repro.comm.transport import _leaf_elements
+
+        ages = ages.astype(jnp.int32)
+        if self.granularity == "global":
+            d, itemsize = _global_dims(msg_template)
+            return (self.schedule.keep_counts(ages, d) * (itemsize + 4)
+                    ).astype(jnp.float32)
+        total = jnp.zeros(ages.shape, jnp.float32)
+        for l in jax.tree_util.tree_leaves(msg_template):
+            d = _leaf_elements(l)
+            per = jnp.dtype(l.dtype).itemsize + 4
+            total = total + (self.schedule.keep_counts(ages, d) * per
+                             ).astype(jnp.float32)
+        return total
+
+    def scheduled_bytes_flat(self, spec, ages) -> jax.Array:
+        """:meth:`scheduled_bytes` from a plane :class:`SegmentSpec` (the
+        flat-carry engine has no pytree template; segment sizes recover the
+        per-leaf accounting)."""
+        ages = ages.astype(jnp.int32)
+        itemsize = jnp.dtype(spec.dtype).itemsize
+        if self.granularity == "global":
+            return (self.schedule.keep_counts(ages, spec.d) * (itemsize + 4)
+                    ).astype(jnp.float32)
+        total = jnp.zeros(ages.shape, jnp.float32)
+        for d in spec.sizes:
+            total = total + (self.schedule.keep_counts(ages, d)
+                             * (itemsize + 4)).astype(jnp.float32)
+        return total
+
+
+def scheduled_transport(transport) -> Optional[ScheduledTopK]:
+    """The :class:`ScheduledTopK` behind a transport (unwrapping a
+    :class:`~repro.comm.transport.PlaneTransport`), or ``None``."""
+    inner = getattr(transport, "inner", transport)
+    return inner if isinstance(inner, ScheduledTopK) else None
+
+
+# by-name construction: get_transport("topk_sched", schedule=RatioSchedule(..))
+from repro.comm.transport import _TRANSPORTS  # noqa: E402
+
+_TRANSPORTS["topk_sched"] = ScheduledTopK

@@ -531,13 +531,29 @@ class PlaneTransport:
     def wire_encoding(self) -> str:
         return self.inner.wire_encoding
 
+    @property
+    def scheduled(self) -> bool:
+        """True when the wrapped transport follows a staleness-adaptive
+        :class:`repro.comm.schedule.RatioSchedule` (its ``compress`` takes
+        the per-client age signal)."""
+        return getattr(self.inner, "scheduled", False)
+
     def init_state(self, flat_template):
         if not self.inner.error_feedback:
             return ()
         return jnp.zeros(tuple(flat_template.shape), flat_template.dtype)
 
-    def compress(self, comm_state, flat, key):
+    def compress(self, comm_state, flat, key, ages=None):
+        if ages is not None:
+            return self.inner.compress_plane(comm_state, flat, key,
+                                             self.spec, ages=ages)
         return self.inner.compress_plane(comm_state, flat, key, self.spec)
+
+    def scheduled_bytes(self, msg_template, ages):
+        """Per-client realized bytes under the wrapped transport's ratio
+        schedule; the plane spec stands in for the pytree template (see
+        :meth:`repro.comm.schedule.ScheduledTopK.scheduled_bytes_flat`)."""
+        return self.inner.scheduled_bytes_flat(self.spec, ages)
 
     def select_clients(self, mask, new_state, old_state):
         """Per-client-row EF advance guard on the flat residual (see

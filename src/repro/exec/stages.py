@@ -112,7 +112,7 @@ class Placement:
             "pending_aux": 1 if queued else 0,
             "slot_filled": 1, "deliver_time": 1 if queued else 0,
             # per-client fields stay client-major in both layouts
-            "resid": 0, "need_refresh": 0, "last_synced": 0,
+            "resid": 0, "need_refresh": 0, "last_synced": 0, "last_age": 0,
             # scalars + the clock key replicate
             "vtime": None, "round_idx": None, "clock_key": None,
         }
@@ -134,6 +134,14 @@ class UplinkComm:
     ``transport=None`` resolves to the identity :class:`repro.comm.Dense`
     (the stage still splits the round into local/server halves, which is
     what the other communication-shaped stages build on).
+
+    A staleness-adaptive transport (:class:`repro.comm.ScheduledTopK`)
+    composes with the Asynchrony stage: the async step feeds the per-client
+    ``last_age`` ledger into ``compress(..., ages=)`` so downweighted-stale
+    clients uplink at harder ratios, and emits the realized per-commit
+    bytes as the ``uplink_bytes`` metric.  Without the Asynchrony stage no
+    age signal exists and the schedule runs at its base ratio (a constant
+    schedule is bitwise the fixed-ratio transport either way).
     """
 
     transport: Any = None

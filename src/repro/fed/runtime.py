@@ -113,6 +113,12 @@ class RuntimeArgs:
     # engine / comm
     transport: str = "dense"
     ratio: float = 0.1
+    # per-commit ratio schedule for topk (repro.comm.schedule); "constant"
+    # is bitwise the fixed-ratio transport.  The adaptive kinds only bite
+    # under the async stage's age ledger -- the runtime's engines are
+    # synchronous, so they run at the base ratio, but the flag keeps the
+    # wire path exercising the scheduled encoder
+    schedule: str = "constant"
     bits: int = 8
     plane: bool = False
     chunk: int = 4
@@ -177,8 +183,11 @@ def _problem(a: RuntimeArgs):
 
 
 def _transport(a: RuntimeArgs):
-    from repro.comm import get_transport
+    from repro.comm import as_schedule, get_transport
 
+    if a.transport == "topk" and a.schedule != "constant":
+        return get_transport("topk_sched",
+                             schedule=as_schedule(a.schedule, a.ratio))
     kw = {}
     if a.transport in ("topk", "randk"):
         kw["ratio"] = a.ratio
@@ -799,6 +808,10 @@ def add_runtime_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--transport", default="dense",
                     choices=["dense", "topk", "randk", "quantize"])
     ap.add_argument("--ratio", type=float, default=0.1)
+    ap.add_argument("--schedule", default="constant",
+                    choices=["constant", "linear", "bucketed"],
+                    help="per-commit topk ratio schedule "
+                         "(repro.comm.schedule; constant == fixed ratio)")
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--plane", action="store_true")
     ap.add_argument("--chunk", type=int, default=4)
@@ -831,7 +844,8 @@ def _from_ns(ns: argparse.Namespace) -> RuntimeArgs:
     return RuntimeArgs(
         clients=ns.clients, m=ns.m, dim=ns.dim, tau=ns.tau, eta=ns.eta,
         eta_g=ns.eta_g, lam=ns.lam, x64=not ns.x32, transport=ns.transport,
-        ratio=ns.ratio, bits=ns.bits, plane=ns.plane, chunk=ns.chunk,
+        ratio=ns.ratio, schedule=ns.schedule, bits=ns.bits,
+        plane=ns.plane, chunk=ns.chunk,
         rounds=ns.rounds, batch_size=ns.batch_size, host=ns.host,
         port=ns.port, workers=ns.workers, mode=ns.mode,
         encoding=ns.encoding, throttle_bw=ns.throttle_bw,
@@ -844,6 +858,7 @@ def _to_argv(a: RuntimeArgs) -> list:
             "--dim", str(a.dim), "--tau", str(a.tau), "--eta", str(a.eta),
             "--eta-g", str(a.eta_g), "--lam", str(a.lam),
             "--transport", a.transport, "--ratio", str(a.ratio),
+            "--schedule", a.schedule,
             "--bits", str(a.bits), "--chunk", str(a.chunk),
             "--rounds", str(a.rounds), "--host", a.host,
             "--port", str(a.port), "--workers", str(a.workers),

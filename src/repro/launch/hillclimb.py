@@ -1,165 +1,32 @@
-"""Performance hillclimbing on the three selected (arch x shape) pairs.
+"""DEPRECATED alias -- the roofline hillclimb harness lives in
+:mod:`repro.tune.pairs` now.
 
-Selection rationale (from the baseline roofline table, single-pod):
-  * stablelm-1.6b x train_4k   -- the pair most representative of the PAPER's
-    technique (plan-A federated round, 16 clients); baseline memory- and
-    collective-bound in near-equal measure (TP activation all-reduces dwarf
-    the one-vector FL uplink the algorithm is designed around).
-  * gemma2-9b x prefill_32k    -- serving-side; worst MEMORY picture
-    (S^2 logits; temp ~286 GB/dev vs 16 GB HBM: does not fit).
-  * deepseek-v3-671b x train_4k -- worst absolute roofline fraction; extreme
-    memory term + 252 GB/dev temp on a single pod.
+This module was the seed-era hypothesis -> measure -> keep-the-winner
+loop over the three selected (arch x shape) pairs.  That loop is the
+prototype of the closed-loop autotuner (:mod:`repro.tune`), so the
+harness moved there: :mod:`repro.tune.pairs` keeps the pair variants and
+fixes the seed harness's assumption of a pre-existing
+``experiments/dryrun`` baseline directory (the baseline is re-lowered on
+demand), and :func:`repro.tune.search.tune` generalizes the loop to a
+budgeted, cache-backed search over the whole ``EngineConfig`` space.
 
-Each iteration: hypothesis -> change -> re-lower -> re-analyse (probe-based,
-same methodology as the baseline) -> confirmed/refuted.  Results land in
-experiments/dryrun/*_<variant>.json and the comparison table in
-experiments/perf/<pair>.md; EXPERIMENTS.md section Perf narrates them.
+Importing from here keeps working (with a DeprecationWarning) so existing
+scripts don't break; new code should import from ``repro.tune.pairs``.
 
-    PYTHONPATH=src python -m repro.launch.hillclimb --pair stablelm
+    PYTHONPATH=src python -m repro.tune.pairs --pair stablelm
 """
-import os  # noqa: E402
+from __future__ import annotations
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+import warnings
 
-import argparse  # noqa: E402
-import json  # noqa: E402
-import pathlib  # noqa: E402
-from functools import partial  # noqa: E402
+from repro.tune.pairs import PAIRS, main, run_pair
 
-from repro.configs import registry  # noqa: E402
-from repro.launch import dryrun as dr  # noqa: E402
+__all__ = ["PAIRS", "run_pair", "main"]
 
-
-def _variants_stablelm():
-    cfg = registry.get("stablelm_1_6b")
-    return "stablelm_1_6b", "train_4k", [
-        # H1: the collective term is dominated by per-layer tensor-parallel
-        # activation all-reduces (b*s*d bf16, 2 fwd + 2 bwd, x tau x 24L
-        # ~ O(100s GB)), NOT by the algorithm's one-vector-per-round uplink
-        # (~0.4 GB).  Resharding the per-client batch over 'model' turns the
-        # inner step into batch-parallel: params are all-gathered once per
-        # layer (~3.2 GB/step) and grads reduced once -- napkin ~15-20x less
-        # collective traffic.
-        ("inner_dp", cfg, {"train": partial(dr.build_train, inner_dp=True)}),
-        # H2: the memory term is dominated by the S^2 fp32 attention logits
-        # (b16 x 2headshard x 4096^2 x 4B x multiple passes per layer/step).
-        # Blocked flash-style attention keeps only (512, 4096) tiles ->
-        # predict the bytes term drops ~2-4x and temp drops below HBM.
-        ("blocked", cfg.with_overrides(attn_impl="blocked"), None),
-        # H3: compose both.
-        ("inner_dp_blocked", cfg.with_overrides(attn_impl="blocked"),
-         {"train": partial(dr.build_train, inner_dp=True)}),
-    ]
-
-
-def _variants_gemma2():
-    cfg = registry.get("gemma2_9b")
-    return "gemma2_9b", "prefill_32k", [
-        # H1: prefill memory/temp are dominated by global-layer S^2 logits
-        # (2 x 32768^2 x 4B = 8.6 GB per head-shard per layer, and XLA keeps
-        # whole-layer intermediates).  Blocked attention -> (512, 32768)
-        # tiles; predict temp ~286 GB -> O(10 GB) (fits!) and bytes down
-        # severalfold.
-        ("blocked", cfg.with_overrides(attn_impl="blocked"), None),
-        # H2: smaller query blocks shrink live tiles further but add scan
-        # overhead; check 256 vs 512 (expect mild effect on bytes, none on
-        # flops).
-        ("blocked_bq256", cfg.with_overrides(attn_impl="blocked",
-                                             attn_block_q=256), None),
-        # H3 (REFUTED): slicing logits[:, -1:] after prefill -- the unembed
-        # produced NO collectives (output stays sharded) and XLA does not DCE
-        # an einsum through a slice, so nothing moved.  Lesson: slice the
-        # HIDDEN STATES before the unembed (T.prefill(last_only=True)), and
-        # the collective source must be elsewhere.
-        # H4 (REFUTED, diagnostic): scatter-free ring cache fill -- correct
-        # change but identical collectives; probing per-op revealed ONE
-        # 142 GB all-reduce (tied-embed logits contraction over the
-        # data-sharded d axis) + per-layer ARs of the FULL GLOBAL batch:
-        # the token-embedding gather from the (vocab x model, d x data)
-        # table forces GSPMD to replicate all downstream activations.
-        # H5 (CONFIRMED, 8.6x collective): replicate the embedding table ->
-        # the gather output inherits the tokens' batch sharding; per-layer
-        # ARs shrink 16x and the logits AR disappears.
-        ("blocked_replembed", cfg.with_overrides(attn_impl="blocked"),
-         {"prefill": partial(dr.build_prefill, replicate_embed=True)}),
-        # H6 (CONFIRMED): + slice hidden states before the unembed
-        # (serving-correct last-position logits): kills the (B, S, V) f32
-        # materialization (temp 1.09 TB -> 24 GB) and its compute.
-        ("blocked_replembed_lastonly", cfg.with_overrides(attn_impl="blocked"),
-         {"prefill": partial(dr.build_prefill, replicate_embed=True,
-                             last_only=True)}),
-    ]
-
-
-def _variants_deepseek():
-    cfg = registry.get("deepseek_v3_671b")
-    return "deepseek_v3_671b", "train_4k", [
-        # H1: temp 252 GB/dev is activation-dominated (micro=8 -> per-micro
-        # batch 32 x 4096 tokens alive through 58 MoE layers).  micro=32
-        # quarters the live activation set; flops unchanged (same math).
-        ("micro32", cfg, {"train": partial(dr.build_train, micro=32)}),
-        # H2: MLA train-path materializes S^2 logits per 128 heads; blocked
-        # attention removes them.  Predict bytes down ~2x on top of H1.
-        ("micro32_blocked", cfg.with_overrides(attn_impl="blocked"),
-         {"train": partial(dr.build_train, micro=32)}),
-    ]
-
-
-PAIRS = {
-    "stablelm": _variants_stablelm,
-    "gemma2": _variants_gemma2,
-    "deepseek": _variants_deepseek,
-}
-
-
-def run_pair(key: str, outdir="experiments/dryrun"):
-    arch, shape, variants = PAIRS[key]()
-    rows = []
-    base_path = pathlib.Path(outdir) / f"{arch}_{shape}_single.json"
-    base = json.loads(base_path.read_text())
-    rows.append(("baseline", base))
-    for note, cfg, builders in variants:
-        b = dict(dr.BUILDERS)
-        if builders:
-            b.update(builders)
-        status, rep = dr.run_one(arch, shape, "single", outdir=outdir,
-                                 builders=b, note=note, cfg_override=cfg)
-        assert status == "ok", (status, rep)
-        print("DONE", rep.summary(), flush=True)
-        rows.append((note, json.loads(
-            (pathlib.Path(outdir) / f"{arch}_{shape}_single_{note}.json")
-            .read_text())))
-    # write comparison table
-    perf = pathlib.Path("experiments/perf")
-    perf.mkdir(parents=True, exist_ok=True)
-    lines = [
-        f"# {arch} x {shape} (single pod)",
-        "",
-        "| variant | compute (s) | memory (s) | collective (s) | dominant "
-        "| temp GB/dev | useful |",
-        "|---|---|---|---|---|---|---|",
-    ]
-    for name, r in rows:
-        lines.append(
-            f"| {name} | {r['compute_s']:.4g} | {r['memory_s']:.4g} "
-            f"| {r['collective_s']:.4g} | {r['dominant']} "
-            f"| {r['memory_per_dev_gb'].get('temp', float('nan')):.2f} "
-            f"| {r['useful_ratio']:.1%} |")
-    (perf / f"{key}.md").write_text("\n".join(lines) + "\n")
-    print("\n".join(lines))
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--pair", default="all", choices=["all", *PAIRS])
-    args = ap.parse_args()
-    keys = list(PAIRS) if args.pair == "all" else [args.pair]
-    for k in keys:
-        run_pair(k)
-
+warnings.warn(
+    "repro.launch.hillclimb is deprecated; the roofline hillclimb harness "
+    "moved to repro.tune.pairs (and the measured EngineConfig search it "
+    "prototyped lives in repro.tune)", DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

@@ -156,6 +156,21 @@ def main(argv=None):
                     help="compress uplinks through this repro.comm transport")
     ap.add_argument("--compress-ratio", type=float, default=0.1,
                     help="kept-coordinate fraction for topk/randk")
+    ap.add_argument("--ratio-schedule", default="constant",
+                    choices=["constant", "linear", "bucketed"],
+                    help="staleness-adaptive per-commit ratio schedule for "
+                         "--transport topk (repro.comm.schedule): stale "
+                         "clients uplink at harder ratios under the async "
+                         "stage's age ledger; constant is bitwise the "
+                         "fixed-ratio transport")
+    ap.add_argument("--autotune", type=int, default=None, metavar="BUDGET",
+                    help="search engine knobs (chunk/transport/ratio/"
+                         "granularity/plane + async buffer/queue/staleness/"
+                         "schedule) with repro.tune before training and "
+                         "adopt the winner; measures the synthetic proxy "
+                         "workload, so only engine-level knobs transfer.  "
+                         "Reuses this host's persisted tuning record when "
+                         "one matches (zero measured trials)")
     ap.add_argument("--downlink", default=None,
                     choices=["dense", "topk", "randk", "quantize"],
                     help="compress the broadcast direction too "
@@ -249,19 +264,6 @@ def main(argv=None):
     reg = L1(lam=args.lam)
     alg = make_algorithm(args.algorithm, reg, args.tau, args.eta, args.eta_g)
     grad_fn = T.make_grad_fn(cfg)
-    transport = downlink = None
-    if args.transport is not None or args.downlink is not None:
-        from repro.comm import get_transport
-
-        def build(name):
-            kw = ({"ratio": args.compress_ratio}
-                  if name in ("topk", "randk") else {})
-            if name != "dense":
-                kw["granularity"] = args.granularity
-            return get_transport(name, **kw)
-
-        transport = build(args.transport) if args.transport else None
-        downlink = build(args.downlink) if args.downlink else None
     # any async flag activates the asynchrony stage; --async alone picks
     # the straggler clock (stages compose, so no either/or validation)
     run_async = (args.run_async or args.clock is not None
@@ -269,6 +271,50 @@ def main(argv=None):
                  or args.staleness is not None or args.staleness_correct
                  or args.queue_depth is not None or args.upload is not None
                  or args.edges is not None)
+    if args.autotune:
+        from repro.tune import TrialPoint, Workload, tune
+
+        record = tune(Workload(clock="straggler" if run_async else "none"),
+                      budget=args.autotune, log=print)
+        point = TrialPoint.from_dict(record["best"]["point"])
+        print(f"autotune: adopting {point.describe()} "
+              f"({record['measured_trials']} measured trials"
+              f"{', cached' if record.get('cached') else ''})")
+        args.chunk = point.chunk_rounds
+        args.plane = point.plane
+        args.transport = (None if point.transport == "dense"
+                          else point.transport)
+        args.compress_ratio = point.ratio
+        args.granularity = point.granularity
+        args.ratio_schedule = point.schedule
+        if run_async:
+            args.buffer_size = max(1, int(round(point.buffer_frac
+                                                * args.clients)))
+            args.queue_depth = point.queue_depth or None
+            args.staleness = point.staleness
+    transport = downlink = None
+    if args.transport is not None or args.downlink is not None:
+        from repro.comm import as_schedule, get_transport
+
+        def build(name, uplink=False):
+            # the schedule is an uplink policy (it reads the async age
+            # ledger); the broadcast direction has no age signal
+            if uplink and name == "topk" and args.ratio_schedule != \
+                    "constant":
+                return get_transport(
+                    "topk_sched",
+                    schedule=as_schedule(args.ratio_schedule,
+                                         args.compress_ratio),
+                    granularity=args.granularity)
+            kw = ({"ratio": args.compress_ratio}
+                  if name in ("topk", "randk") else {})
+            if name != "dense":
+                kw["granularity"] = args.granularity
+            return get_transport(name, **kw)
+
+        transport = (build(args.transport, uplink=True)
+                     if args.transport else None)
+        downlink = build(args.downlink) if args.downlink else None
     clock = staleness = None
     if run_async:
         from repro.sched import Staleness, get_clock

@@ -36,7 +36,8 @@ from __future__ import annotations
 import json
 from typing import Optional
 
-__all__ = ["spans_of", "overlap_report", "format_report"]
+__all__ = ["spans_of", "overlap_report", "hidden_fraction",
+           "format_report"]
 
 CHUNK_NAME = "exec/chunk"
 SHIP_NAME = "uplink/ship"
@@ -177,6 +178,18 @@ def overlap_report(doc: dict, *, model=None,
                 r.get("wire_model_s", 0.0) for r in steady_rows),
         }
     return out
+
+
+def hidden_fraction(doc: dict) -> float:
+    """Steady-state wire-hidden fraction of a merged trace doc, as one
+    float in [0, 1] (0.0 when the trace has no steady chunks or no wire).
+
+    The scalar the autotuner folds into its objective: of the bytes the
+    workers shipped, what fraction of the wire time hid behind compute.
+    """
+    steady = overlap_report(doc)["steady"]
+    h = steady.get("hidden_fraction")
+    return float(h) if h is not None else 0.0
 
 
 def format_report(rep: dict) -> str:

@@ -147,6 +147,10 @@ class AsyncState(NamedTuple):
     deliver_time: jax.Array  # (n_clients,) f32 virtual arrival times
     need_refresh: jax.Array  # (n_clients,) bool -- re-synced last commit
     last_synced: jax.Array   # (n_clients,) i32 ledger (-1 = never)
+    last_age: jax.Array      # (n_clients,) i32 realized age of each
+    #                          client's most recent delivery (0 = never /
+    #                          fresh) -- the causal staleness signal a
+    #                          scheduled transport compresses against
     vtime: jax.Array         # scalar f32 virtual wall-clock
     round_idx: jax.Array     # scalar i32 server commit counter
     clock_key: jax.Array     # PRNG key stream of the clock model
@@ -173,6 +177,7 @@ def init_async_state(msg_spec, aux_spec, n_clients: int,
         deliver_time=jnp.zeros((n_clients,), jnp.float32),
         need_refresh=jnp.ones((n_clients,), bool),
         last_synced=jnp.full((n_clients,), -1, jnp.int32),
+        last_age=jnp.zeros((n_clients,), jnp.int32),
         vtime=jnp.zeros((), jnp.float32),
         round_idx=jnp.full((), start_round, jnp.int32),
         clock_key=jax.random.PRNGKey(clock_seed),
@@ -206,6 +211,8 @@ class QueueState(NamedTuple):
     slot_filled: jax.Array   # (queue_depth, n_clients) bool
     deliver_time: jax.Array  # (queue_depth, n_clients) f32 (+inf = empty)
     last_synced: jax.Array   # (n_clients,) i32 ledger (-1 = never)
+    last_age: jax.Array      # (n_clients,) i32 realized age of each
+    #                          client's most recent delivery (0 = never)
     vtime: jax.Array         # scalar f32 virtual wall-clock
     round_idx: jax.Array     # scalar i32 server commit counter
     clock_key: jax.Array     # PRNG key stream of the clock model
@@ -242,6 +249,7 @@ def init_queue_state(msg_spec, aux_spec, n_clients: int, queue_depth: int,
         slot_filled=jnp.zeros((queue_depth, n_clients), bool),
         deliver_time=jnp.full((queue_depth, n_clients), jnp.inf, jnp.float32),
         last_synced=jnp.full((n_clients,), -1, jnp.int32),
+        last_age=jnp.zeros((n_clients,), jnp.int32),
         vtime=jnp.zeros((), jnp.float32),
         round_idx=jnp.full((), start_round, jnp.int32),
         clock_key=jax.random.PRNGKey(clock_seed),
@@ -367,6 +375,10 @@ def make_async_round(
             "state from the shadow")
     _validate_buffer(buffer_size, n_clients, edges)
     full_buffer = buffer_size == n_clients
+    # staleness-adaptive transport (repro.comm.schedule): compression takes
+    # the per-client last_age ledger, and the realized per-commit wire bytes
+    # ride the info dict so measured traffic reflects the schedule
+    tr_scheduled = getattr(transport, "scheduled", False)
     # deterministic transports/clocks ignore their key: skip the per-round
     # threefry splits (measurable on µs-scale rounds)
     tr_stochastic = getattr(transport, "stochastic", True)
@@ -437,11 +449,27 @@ def make_async_round(
                                          sub_dl)
         return dl_state
 
+    def compress(comm_state, msg, key, last_age):
+        if tr_scheduled:
+            return transport.compress(comm_state, msg, key, ages=last_age)
+        return transport.compress(comm_state, msg, key)
+
+    def wire_bytes(info, msg, last_age, sent):
+        """Realized uplink bytes of this commit's transmissions (scheduled
+        transports only: the fixed path's static accounting stays exact)."""
+        if not tr_scheduled:
+            return info
+        per = transport.scheduled_bytes(msg, last_age)
+        info = dict(info)
+        info["uplink_bytes"] = jnp.sum(
+            jnp.where(sent, per, 0.0)).astype(jnp.float32)
+        return info
+
     if queue_depth is not None:
         return _make_queued_step(
             local_fn, server_fn, transport, clock, buffer_size, n_clients,
             queue_depth, clk_stochastic, split_keys, visible, commit, ledger,
-            downlink, rebroadcast, edges)
+            downlink, rebroadcast, edges, compress, wire_bytes)
 
     def step(state, sched: AsyncState, comm_state, comm_key, batch,
              dl_state=None):
@@ -455,7 +483,7 @@ def make_async_round(
         st_v = visible(state, dl_state)
         comm_key, sub, sub_dl = split_keys(comm_key)
         msg_new, aux_new = local_fn(st_v, batch)
-        msg_hat, cs_new = transport.compress(comm_state, msg_new, sub)
+        msg_hat, cs_new = compress(comm_state, msg_new, sub, sched.last_age)
         if clk_stochastic:
             clock_key, ksub = jax.random.split(sched.clock_key)
         else:
@@ -523,10 +551,17 @@ def make_async_round(
             info["report_age_hist"] = jnp.zeros(
                 (AGE_HIST_BUCKETS,), jnp.float32).at[0].set(buffer_size)
             last_synced = jnp.broadcast_to(sched.round_idx, (n_clients,))
+            # every delivery is fresh: the age ledger stays identically
+            # zero with no ops on it (the zero-delay bitwise contract)
+            last_age = sched.last_age
         else:
             info = ledger(info, commit_time, delivered, age)
             last_synced = jnp.where(delivered, sched.round_idx,
                                     sched.last_synced)
+            last_age = jnp.where(delivered, age, sched.last_age)
+        info = wire_bytes(info, msg_new, sched.last_age,
+                          jnp.ones((n_clients,), bool) if full_buffer
+                          else refresh)
 
         sched = AsyncState(
             pending_msg=pending_msg,
@@ -535,6 +570,7 @@ def make_async_round(
             deliver_time=deliver_time,
             need_refresh=delivered,  # delivered clients re-sync now
             last_synced=last_synced,
+            last_age=last_age,
             vtime=commit_time,
             round_idx=sched.round_idx + 1,
             clock_key=clock_key,
@@ -550,7 +586,7 @@ def make_async_round(
 def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
                       n_clients, queue_depth, clk_stochastic, split_keys,
                       visible, commit, ledger, downlink, rebroadcast,
-                      edges=1):
+                      edges, compress, wire_bytes):
     """The multi-slot (:class:`QueueState`) async step; see
     :func:`make_async_round`.
 
@@ -577,7 +613,7 @@ def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
         slot = jnp.argmin(filled, axis=0)            # first free slot (ring)
         comm_key, sub, sub_dl = split_keys(comm_key)
         msg_new, aux_new = local_fn(st_v, batch)
-        msg_hat, cs_new = transport.compress(comm_state, msg_new, sub)
+        msg_hat, cs_new = compress(comm_state, msg_new, sub, sched.last_age)
         # only enqueueing clients actually transmitted: everyone else's
         # error-feedback residual must not advance (the transport's
         # generalized partial-participation guard)
@@ -636,6 +672,7 @@ def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
         deliver_time = jnp.where(pop, jnp.inf, deliver_time)
 
         info = ledger(info, commit_time, delivered, age)
+        info = wire_bytes(info, msg_new, sched.last_age, free)
         sched = QueueState(
             pending_msg=pending_msg,
             pending_aux=pending_aux,
@@ -644,6 +681,7 @@ def _make_queued_step(local_fn, server_fn, transport, clock, buffer_size,
             deliver_time=deliver_time,
             last_synced=jnp.where(delivered, sched.round_idx,
                                   sched.last_synced),
+            last_age=jnp.where(delivered, age, sched.last_age),
             vtime=commit_time,
             round_idx=sched.round_idx + 1,
             clock_key=clock_key,

@@ -270,7 +270,7 @@ def sched_client_axes(sched) -> Dict[str, Optional[int]]:
     axes: Dict[str, Optional[int]] = {
         "pending_msg": 1 if queued else 0,
         "pending_aux": 1 if queued else 0,
-        "resid": 0, "last_synced": 0,
+        "resid": 0, "last_synced": 0, "last_age": 0,
         "deliver_time": 1 if queued else 0,
         "slot_filled": 1, "need_refresh": 0,
         "vtime": None, "round_idx": None, "clock_key": None,

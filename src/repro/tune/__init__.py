@@ -1,0 +1,46 @@
+"""Closed-loop autotuning of the round engine.
+
+The stage algebra (:mod:`repro.exec`) made execution concerns orthogonal
+-- which means the *configuration* space (chunk size x transport x ratio x
+granularity x buffer size x queue depth x staleness x plane) is now large
+enough that the best ``EngineConfig`` is host- and workload-dependent:
+BENCH_exec rows disagree across machines about chunk32 vs chunk8 and
+per-leaf vs global top-k.  This package closes the loop:
+
+  * :mod:`~repro.tune.space`   -- the typed search space: canonical
+    :class:`TrialPoint` coordinates over a :class:`SearchSpace`, plus the
+    one mapping from a point to ``EngineConfig`` kwargs;
+  * :mod:`~repro.tune.runner`  -- measured trials scored from
+    :mod:`repro.obs` instruments (trace-span round time, measured uplink
+    bytes, arrival-age staleness, multi-process hidden fraction);
+  * :mod:`~repro.tune.search`  -- the budgeted explore -> halve ->
+    hillclimb search (the seed harness's hypothesis -> measure loop,
+    generalized), cache-first;
+  * :mod:`~repro.tune.records` -- persisted per-host tuning records
+    (JSON keyed by host x workload x space signature, provenance-stamped)
+    so a second invocation reuses measured trials instead of re-running
+    them;
+  * :mod:`~repro.tune.pairs`   -- the roofline hillclimb harness on the
+    model-scale (arch x shape) pairs (moved from
+    ``repro.launch.hillclimb``; imported lazily -- it mutates XLA_FLAGS).
+
+CLI::
+
+    PYTHONPATH=src python -m repro.tune --budget 12
+    PYTHONPATH=src python -m repro.tune --budget 3 --dry
+    PYTHONPATH=src python -m repro.tune --validate experiments/tune/*.json
+"""
+from repro.tune.records import (SCHEMA, host_signature, load_record,
+                                record_key, record_path, save_record,
+                                validate_record)
+from repro.tune.runner import TrialResult, TrialRunner
+from repro.tune.search import tune
+from repro.tune.space import (SearchSpace, TrialPoint, Workload,
+                              engine_config_kwargs)
+
+__all__ = [
+    "Workload", "TrialPoint", "SearchSpace", "engine_config_kwargs",
+    "TrialRunner", "TrialResult", "tune",
+    "SCHEMA", "host_signature", "record_key", "record_path",
+    "save_record", "load_record", "validate_record",
+]

@@ -1,0 +1,187 @@
+"""Roofline hillclimbing on the selected (arch x shape) pairs.
+
+The model-scale cousin of :func:`repro.tune.search.tune`: the same
+hypothesis -> measure -> keep-the-winner loop, but the measurement is a
+probe-based roofline re-analysis (:mod:`repro.launch.dryrun`) instead of a
+wall-clock trial.  This module absorbs the seed-era
+``repro.launch.hillclimb`` (which now forwards here with a
+DeprecationWarning).
+
+Selection rationale (from the baseline roofline table, single-pod):
+  * stablelm-1.6b x train_4k   -- the pair most representative of the
+    PAPER's technique (plan-A federated round, 16 clients); baseline
+    memory- and collective-bound in near-equal measure (TP activation
+    all-reduces dwarf the one-vector FL uplink the algorithm is designed
+    around).
+  * gemma2-9b x prefill_32k    -- serving-side; worst MEMORY picture
+    (S^2 logits; temp ~286 GB/dev vs 16 GB HBM: does not fit).
+  * deepseek-v3-671b x train_4k -- worst absolute roofline fraction;
+    extreme memory term + 252 GB/dev temp on a single pod.
+
+Each iteration: hypothesis -> change -> re-lower -> re-analyse
+(probe-based, same methodology as the baseline) -> confirmed/refuted.
+Variant reports land in ``<outdir>/*_<variant>.json`` (default
+``experiments/perf/dryrun``; the baseline is re-lowered there first when
+absent, so a fresh checkout works) and the comparison table in
+``experiments/perf/<pair>.md``; EXPERIMENTS.md section Perf narrates them.
+
+    PYTHONPATH=src python -m repro.tune.pairs --pair stablelm
+"""
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+from functools import partial  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.launch import dryrun as dr  # noqa: E402
+
+DEFAULT_OUTDIR = "experiments/perf/dryrun"
+
+
+def _variants_stablelm():
+    cfg = registry.get("stablelm_1_6b")
+    return "stablelm_1_6b", "train_4k", [
+        # H1: the collective term is dominated by per-layer tensor-parallel
+        # activation all-reduces (b*s*d bf16, 2 fwd + 2 bwd, x tau x 24L
+        # ~ O(100s GB)), NOT by the algorithm's one-vector-per-round uplink
+        # (~0.4 GB).  Resharding the per-client batch over 'model' turns the
+        # inner step into batch-parallel: params are all-gathered once per
+        # layer (~3.2 GB/step) and grads reduced once -- napkin ~15-20x less
+        # collective traffic.
+        ("inner_dp", cfg, {"train": partial(dr.build_train, inner_dp=True)}),
+        # H2: the memory term is dominated by the S^2 fp32 attention logits
+        # (b16 x 2headshard x 4096^2 x 4B x multiple passes per layer/step).
+        # Blocked flash-style attention keeps only (512, 4096) tiles ->
+        # predict the bytes term drops ~2-4x and temp drops below HBM.
+        ("blocked", cfg.with_overrides(attn_impl="blocked"), None),
+        # H3: compose both.
+        ("inner_dp_blocked", cfg.with_overrides(attn_impl="blocked"),
+         {"train": partial(dr.build_train, inner_dp=True)}),
+    ]
+
+
+def _variants_gemma2():
+    cfg = registry.get("gemma2_9b")
+    return "gemma2_9b", "prefill_32k", [
+        # H1: prefill memory/temp are dominated by global-layer S^2 logits
+        # (2 x 32768^2 x 4B = 8.6 GB per head-shard per layer, and XLA keeps
+        # whole-layer intermediates).  Blocked attention -> (512, 32768)
+        # tiles; predict temp ~286 GB -> O(10 GB) (fits!) and bytes down
+        # severalfold.
+        ("blocked", cfg.with_overrides(attn_impl="blocked"), None),
+        # H2: smaller query blocks shrink live tiles further but add scan
+        # overhead; check 256 vs 512 (expect mild effect on bytes, none on
+        # flops).
+        ("blocked_bq256", cfg.with_overrides(attn_impl="blocked",
+                                             attn_block_q=256), None),
+        # H3 (REFUTED): slicing logits[:, -1:] after prefill -- the unembed
+        # produced NO collectives (output stays sharded) and XLA does not DCE
+        # an einsum through a slice, so nothing moved.  Lesson: slice the
+        # HIDDEN STATES before the unembed (T.prefill(last_only=True)), and
+        # the collective source must be elsewhere.
+        # H4 (REFUTED, diagnostic): scatter-free ring cache fill -- correct
+        # change but identical collectives; probing per-op revealed ONE
+        # 142 GB all-reduce (tied-embed logits contraction over the
+        # data-sharded d axis) + per-layer ARs of the FULL GLOBAL batch:
+        # the token-embedding gather from the (vocab x model, d x data)
+        # table forces GSPMD to replicate all downstream activations.
+        # H5 (CONFIRMED, 8.6x collective): replicate the embedding table ->
+        # the gather output inherits the tokens' batch sharding; per-layer
+        # ARs shrink 16x and the logits AR disappears.
+        ("blocked_replembed", cfg.with_overrides(attn_impl="blocked"),
+         {"prefill": partial(dr.build_prefill, replicate_embed=True)}),
+        # H6 (CONFIRMED): + slice hidden states before the unembed
+        # (serving-correct last-position logits): kills the (B, S, V) f32
+        # materialization (temp 1.09 TB -> 24 GB) and its compute.
+        ("blocked_replembed_lastonly", cfg.with_overrides(attn_impl="blocked"),
+         {"prefill": partial(dr.build_prefill, replicate_embed=True,
+                             last_only=True)}),
+    ]
+
+
+def _variants_deepseek():
+    cfg = registry.get("deepseek_v3_671b")
+    return "deepseek_v3_671b", "train_4k", [
+        # H1: temp 252 GB/dev is activation-dominated (micro=8 -> per-micro
+        # batch 32 x 4096 tokens alive through 58 MoE layers).  micro=32
+        # quarters the live activation set; flops unchanged (same math).
+        ("micro32", cfg, {"train": partial(dr.build_train, micro=32)}),
+        # H2: MLA train-path materializes S^2 logits per 128 heads; blocked
+        # attention removes them.  Predict bytes down ~2x on top of H1.
+        ("micro32_blocked", cfg.with_overrides(attn_impl="blocked"),
+         {"train": partial(dr.build_train, micro=32)}),
+    ]
+
+
+PAIRS = {
+    "stablelm": _variants_stablelm,
+    "gemma2": _variants_gemma2,
+    "deepseek": _variants_deepseek,
+}
+
+
+def _ensure_baseline(arch, shape, outdir) -> dict:
+    """Load the pair's single-pod baseline report, re-lowering it first
+    when absent (the seed harness assumed a pre-existing dryrun directory
+    and crashed on fresh checkouts)."""
+    base_path = pathlib.Path(outdir) / f"{arch}_{shape}_single.json"
+    if not base_path.exists():
+        status, rep = dr.run_one(arch, shape, "single", outdir=outdir)
+        assert status == "ok", (status, rep)
+        print("BASELINE", rep.summary(), flush=True)
+    return json.loads(base_path.read_text())
+
+
+def run_pair(key: str, outdir: str = DEFAULT_OUTDIR):
+    arch, shape, variants = PAIRS[key]()
+    rows = [("baseline", _ensure_baseline(arch, shape, outdir))]
+    for note, cfg, builders in variants:
+        b = dict(dr.BUILDERS)
+        if builders:
+            b.update(builders)
+        status, rep = dr.run_one(arch, shape, "single", outdir=outdir,
+                                 builders=b, note=note, cfg_override=cfg)
+        assert status == "ok", (status, rep)
+        print("DONE", rep.summary(), flush=True)
+        rows.append((note, json.loads(
+            (pathlib.Path(outdir) / f"{arch}_{shape}_single_{note}.json")
+            .read_text())))
+    # write comparison table
+    perf = pathlib.Path("experiments/perf")
+    perf.mkdir(parents=True, exist_ok=True)
+    lines = [
+        f"# {arch} x {shape} (single pod)",
+        "",
+        "| variant | compute (s) | memory (s) | collective (s) | dominant "
+        "| temp GB/dev | useful |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name, r in rows:
+        lines.append(
+            f"| {name} | {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | {r['dominant']} "
+            f"| {r['memory_per_dev_gb'].get('temp', float('nan')):.2f} "
+            f"| {r['useful_ratio']:.1%} |")
+    (perf / f"{key}.md").write_text("\n".join(lines) + "\n")
+    print("\n".join(lines))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all", choices=["all", *PAIRS])
+    ap.add_argument("--outdir", default=DEFAULT_OUTDIR)
+    args = ap.parse_args()
+    keys = list(PAIRS) if args.pair == "all" else [args.pair]
+    for k in keys:
+        run_pair(k, outdir=args.outdir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,336 @@
+"""The closed-loop autotuner (repro.tune) + the staleness-adaptive
+compression schedule (repro.comm.schedule).
+
+Pins the contracts the tuner is only useful under:
+
+  * tuning records round-trip through the per-host cache -- hostile
+    signature content never escapes into the filename, provenance is
+    stamped, corrupt/mismatched records never silently hit;
+  * the search is deterministic in its seed: same (seed, budget, space,
+    workload) -> the same measured-trial sequence, bit for bit;
+  * a second invocation against a persisted record executes ZERO measured
+    trials (the whole point of persisting them);
+  * a CONSTANT ratio schedule is bitwise the fixed-ratio transport for
+    the inline/topk/async/queued stage combinations -- the adaptive
+    schedule is strictly opt-in;
+  * the adaptive schedule spends fewer measured uplink bytes than
+    constant on a straggler workload (the bytes it exists to save).
+"""
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import logreg_problem, make_engine
+
+from repro.comm import (RatioSchedule, ScheduledTopK, TopK, as_schedule,
+                        scheduled_transport)
+from repro.core.algorithm import DProxConfig
+from repro.exec import ArraySupplier
+from repro.fed.simulator import DProxAlgorithm
+from repro.sched import Staleness, StragglerClock
+from repro.tune import (SCHEMA, SearchSpace, TrialPoint, TrialRunner,
+                        Workload, engine_config_kwargs, load_record,
+                        record_key, record_path, save_record, tune,
+                        validate_record)
+from repro.tune.records import host_signature
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+class FakeRunner(TrialRunner):
+    """Analytic runner: deterministic objective, counts measured trials."""
+
+    def __init__(self, workload, rounds=16):
+        super().__init__(workload, rounds=rounds)
+        self.sequence = []
+
+    def measure(self, point):
+        from repro.obs.metrics import MetricsRegistry
+
+        self.measured_trials += 1
+        self.sequence.append((point.key(), self.rounds))
+        registry = MetricsRegistry()
+        registry.gauge("tune/round_us").set(
+            100.0 + 50.0 / point.chunk_rounds
+            + (5.0 if point.transport != "dense" else 0.0))
+        registry.gauge("tune/bytes_per_client_round").set(
+            168.0 * (point.ratio if point.transport != "dense" else 1.0))
+        registry.gauge("tune/staleness_mean").set(0.0)
+        return self.score(point, registry.snapshot())
+
+
+def _problem_engines(kw_a, kw_b, rounds=8, chunk=4):
+    """Run the same problem under two engine configs; return final states
+    and metrics."""
+    data, reg, grad_fn, full_g, params0, L = logreg_problem(
+        n_clients=8, m=24, d=12, alpha=5, beta=5, lam=0.01)
+    tau = 3
+    alg = DProxAlgorithm(reg, DProxConfig(tau=tau, eta=0.02, eta_g=2.0))
+    sup = ArraySupplier.from_dataset(data, tau, 4, seed=3)
+    out = []
+    for kw in (kw_a, kw_b):
+        eng = make_engine(alg, grad_fn, data.n_clients, chunk_rounds=chunk,
+                          **kw)
+        state = eng.init(params0)
+        state, metrics = eng.run(state, sup, rounds, seed=0)
+        out.append((state, metrics))
+    return out
+
+
+def _assert_states_bitwise(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# records: save/load round-trip
+# ---------------------------------------------------------------------------
+
+
+def _record(host, wsig, ssig, **over):
+    key = record_key(host, wsig, ssig)
+    rec = {
+        "key": key, "host": host, "workload": wsig, "space": ssig,
+        "budget": 4, "rounds": 16, "seed": 0,
+        "best": {"point": TrialPoint().to_dict(), "objective": 123.4,
+                 "round_us": 110.0, "bytes_per_client_round": 168.0,
+                 "staleness_mean": 0.0, "rounds": 16},
+        "trials": [{"point": TrialPoint().to_dict(), "objective": 123.4,
+                    "round_us": 110.0, "bytes_per_client_round": 168.0}],
+    }
+    rec.update(over)
+    return rec
+
+
+def test_record_roundtrip_hostile_keys(tmp_path):
+    # hostile signature content: path separators, dots, spaces, unicode --
+    # none of it may reach the filesystem name, all of it must round-trip
+    host = {"hostname": "../../etc/passwd", "backend": "cpu",
+            "device_kind": "weird/device é", "jax_version": "0.9",
+            "x64": True}
+    wsig = {"kind": "logreg", "note": "a b/c\\d.json"}
+    ssig = {"ratio": [0.1, 0.25]}
+    rec = _record(host, wsig, ssig)
+    path = save_record(rec, str(tmp_path))
+    assert os.path.dirname(path) == str(tmp_path)
+    base = os.path.basename(path)
+    assert base == f"tune_{rec['key'][:16]}.json"  # hash only, no raw sig
+    loaded = load_record(rec["key"], str(tmp_path), host=host,
+                         workload_sig=wsig, space_sig=ssig)
+    assert loaded is not None
+    assert loaded["schema"] == SCHEMA
+    assert loaded["host"] == host
+    assert loaded["best"]["objective"] == pytest.approx(123.4)
+    # provenance was stamped on save with the bench fields
+    for field in ("git_commit", "hostname", "jax_version", "backend",
+                  "timestamp_utc"):
+        assert field in loaded["provenance"]
+    assert validate_record(loaded) == []
+
+
+def test_record_load_rejects_mismatch_and_corruption(tmp_path):
+    host = host_signature()
+    wsig = Workload().signature()
+    ssig = SearchSpace().signature()
+    rec = _record(host, wsig, ssig)
+    save_record(rec, str(tmp_path))
+    key = rec["key"]
+    # signature mismatch: a different workload never hits this record
+    other = Workload(n_clients=99).signature()
+    assert load_record(key, str(tmp_path), workload_sig=other) is None
+    # content edit breaks the key <-> signature binding
+    path = record_path(key, str(tmp_path))
+    edited = json.load(open(path))
+    edited["workload"] = {"kind": "tampered"}
+    json.dump(edited, open(path, "w"))
+    assert load_record(key, str(tmp_path)) is None
+    # truncated JSON is a miss, not a crash
+    with open(path, "w") as f:
+        f.write('{"schema": "repro.tune.record/v1", "key"')
+    assert load_record(key, str(tmp_path)) is None
+
+
+def test_validate_record_reports_problems():
+    rec = _record(host_signature(), Workload().signature(),
+                  SearchSpace().signature())
+    rec["schema"] = SCHEMA
+    rec["provenance"] = {"git_commit": None, "hostname": "h",
+                         "jax_version": "0.9", "backend": "cpu",
+                         "timestamp_utc": "2026-01-01T00:00:00+00:00"}
+    assert validate_record(rec) == []
+    assert any("schema" in e for e in validate_record({**rec,
+                                                       "schema": "v0"}))
+    bad = dict(rec)
+    del bad["trials"]
+    assert any("trials" in e for e in validate_record(bad))
+    assert any("key" in e for e in validate_record({**rec,
+                                                    "key": "0" * 64}))
+
+
+# ---------------------------------------------------------------------------
+# search: determinism + cache skip
+# ---------------------------------------------------------------------------
+
+
+def test_search_deterministic_in_seed(tmp_path):
+    w = Workload()
+    runs = []
+    for _ in range(2):
+        runner = FakeRunner(w)
+        tune(w, budget=8, seed=7, runner=runner,
+             cache_dir=str(tmp_path / "a"), force=True, save=False)
+        runs.append(runner.sequence)
+    assert runs[0] == runs[1]  # same seed -> identical trial sequence
+    other = FakeRunner(w)
+    tune(w, budget=8, seed=8, runner=other, cache_dir=str(tmp_path / "a"),
+         force=True, save=False)
+    assert other.sequence != runs[0]  # the seed actually steers proposals
+
+
+def test_cache_hit_executes_zero_trials(tmp_path):
+    w = Workload()
+    first = FakeRunner(w)
+    rec1 = tune(w, budget=6, seed=0, runner=first,
+                cache_dir=str(tmp_path))
+    assert first.measured_trials == 6
+    assert rec1["measured_trials"] == 6 and not rec1["cached"]
+    second = FakeRunner(w)
+    rec2 = tune(w, budget=6, seed=0, runner=second,
+                cache_dir=str(tmp_path))
+    assert second.measured_trials == 0  # the persisted record answered
+    assert rec2["cached"] and rec2["measured_trials"] == 0
+    assert rec2["best"]["point"] == rec1["best"]["point"]
+    # force re-measures
+    third = FakeRunner(w)
+    rec3 = tune(w, budget=6, seed=0, runner=third, cache_dir=str(tmp_path),
+                force=True)
+    assert third.measured_trials == 6 and not rec3["cached"]
+
+
+def test_search_canonical_points_only():
+    w = Workload()  # synchronous: async axes must stay pinned
+    space = SearchSpace()
+    runner = FakeRunner(w)
+    tune(w, budget=10, seed=3, runner=runner, save=False, force=True)
+    for key, _ in runner.sequence:
+        p = TrialPoint.from_dict(json.loads(key))
+        assert space.canonical(p, w) == p
+        assert p.buffer_frac == 1.0 and p.queue_depth == 0
+        if p.transport == "dense":
+            assert p.ratio == 1.0 and p.schedule == "constant"
+        else:
+            assert p.ratio in space.ratio
+
+
+def test_engine_config_kwargs_builds_every_axis():
+    w = Workload(clock="straggler")
+    p = TrialPoint(chunk_rounds=8, transport="topk", ratio=0.25,
+                   granularity="global", plane=True, buffer_frac=0.5,
+                   queue_depth=2, staleness="poly", schedule="linear")
+    kw = engine_config_kwargs(p, w)
+    assert kw["chunk_rounds"] == 8 and kw["plane"]
+    assert isinstance(scheduled_transport(kw["transport"]), ScheduledTopK)
+    assert kw["buffer_size"] == w.n_clients // 2
+    assert kw["queue_depth"] == 2
+    assert isinstance(kw["clock"], StragglerClock)
+
+
+# ---------------------------------------------------------------------------
+# constant schedule == fixed ratio, bitwise, across stage combos
+# ---------------------------------------------------------------------------
+
+_CONST = RatioSchedule(ratio=0.25, kind="constant")
+_ASYNC = dict(clock=StragglerClock(slowdown=3.0), buffer_size=4,
+              staleness=Staleness("poly"))
+
+
+@pytest.mark.parametrize("combo", [
+    "inline", "inline_global", "async", "async_queue", "async_plane",
+])
+def test_constant_schedule_bitwise_fixed_ratio(combo):
+    gran = "global" if combo == "inline_global" else "leaf"
+    fixed = {"transport": TopK(ratio=0.25, granularity=gran)}
+    sched = {"transport": ScheduledTopK(schedule=_CONST, granularity=gran)}
+    if combo.startswith("async"):
+        fixed.update(_ASYNC)
+        sched.update(_ASYNC)
+    if combo == "async_queue":
+        fixed["queue_depth"] = sched["queue_depth"] = 2
+    if combo == "async_plane":
+        fixed["plane"] = sched["plane"] = True
+    (s_fixed, m_fixed), (s_sched, m_sched) = _problem_engines(fixed, sched)
+    _assert_states_bitwise(s_fixed, s_sched)
+    np.testing.assert_array_equal(m_fixed["train_loss"],
+                                  m_sched["train_loss"])
+
+
+def test_adaptive_schedule_saves_measured_bytes():
+    """The schedule's reason to exist: on a straggler workload the
+    linear-in-age ratios uplink fewer measured bytes than constant."""
+    const = {"transport": ScheduledTopK(schedule=_CONST), **_ASYNC,
+             "queue_depth": 2}
+    linear = {"transport": ScheduledTopK(
+        schedule=as_schedule("linear", 0.25)), **_ASYNC, "queue_depth": 2}
+    (_, m_const), (_, m_lin) = _problem_engines(const, linear, rounds=16)
+    b_const = float(np.sum(m_const["uplink_bytes"]))
+    b_lin = float(np.sum(m_lin["uplink_bytes"]))
+    assert b_const > 0 and b_lin > 0
+    assert b_lin < b_const  # stale clients compressed harder
+    # ages actually flowed: the workload produced non-zero staleness
+    assert float(np.mean(m_lin["staleness_mean"])) > 0
+
+
+def test_uplink_bytes_metric_only_for_scheduled_transports():
+    fixed = {"transport": TopK(ratio=0.25), **_ASYNC}
+    sched = {"transport": ScheduledTopK(schedule=_CONST), **_ASYNC}
+    (_, m_fixed), (_, m_sched) = _problem_engines(fixed, sched)
+    assert "uplink_bytes" not in m_fixed
+    assert "uplink_bytes" in m_sched
+
+
+# ---------------------------------------------------------------------------
+# measured runner (one real trial: objective comes from obs instruments)
+# ---------------------------------------------------------------------------
+
+
+def test_trial_runner_scores_from_obs_snapshot():
+    runner = TrialRunner(Workload(n_clients=6, m_per_client=20, dim=10),
+                         rounds=8, reps=1)
+    res = runner.measure(TrialPoint(chunk_rounds=4))
+    assert runner.measured_trials == 1
+    assert res.round_us > 0
+    # dense logreg message: d+1 float64 coordinates
+    assert res.bytes_per_client_round == pytest.approx(8 * 11)
+    g = res.snapshot["gauges"]
+    assert g["tune/round_us"] == pytest.approx(res.round_us)
+    assert res.objective == pytest.approx(
+        res.round_us + runner.bytes_weight * res.bytes_per_client_round)
+
+
+def test_deprecated_hillclimb_alias_forwards():
+    import importlib
+    import warnings
+
+    import repro.launch.hillclimb  # may be cached from a prior import
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        mod = importlib.reload(repro.launch.hillclimb)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    from repro.tune import pairs
+
+    assert mod.run_pair is pairs.run_pair
+    assert set(mod.PAIRS) == {"stablelm", "gemma2", "deepseek"}
