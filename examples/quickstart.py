@@ -316,3 +316,27 @@ print(f" autotuned EngineConfig ({record['measured_trials']} measured "
 print(f"    winner {point.describe()}: objective {best['objective']:.1f} "
       f"({best['round_us']:.1f} us/round, "
       f"{best['bytes_per_client_round']:.0f} B/client/round uplink)")
+
+# --- the live serving plane: training commits become servable snapshots.
+# RoundEngine.set_snapshot_sink fires per committed chunk, DEVICE-RESIDENT,
+# before the engine's host sync; SnapshotStore.publish atomically swaps in
+# an immutable, monotonically-versioned plane that readers pick up without
+# ever blocking the trainer (or seeing a torn state).  For an LM the same
+# store feeds a ServingEngine that hot-swaps between decode segments --
+# see examples/serve_decode.py for serve-while-train, and
+# `python -m repro.fed.runtime --role pair --replicas 1` for replicas fed
+# delta-compressed (XOR bit-pattern) snapshot frames over the wire.
+from repro.serving import SnapshotStore
+
+store = SnapshotStore()
+engine = RoundEngine(ours, grad_fn, 30, EngineConfig(chunk_rounds=16))
+engine.set_snapshot_sink(store.engine_sink(select=engine.global_params))
+state = engine.init(params0)
+state, _ = engine.run(state, supplier, 100, seed=0)
+snap = store.latest()
+drift = float(np.abs(np.asarray(snap.value["w"])
+                     - np.asarray(engine.global_params(state)["w"])).max())
+print(f" serving snapshots: v{snap.version} (round {snap.round}) published "
+      f"during training, {snap.age():.2f}s old,")
+print(f"    vs final global model: max |diff| = {drift:.1e} "
+      "<- the latest commit IS the served plane")

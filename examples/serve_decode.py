@@ -1,11 +1,22 @@
-"""Example: serve a federated-trained LM with batched requests.
+"""Example: serve a federated LM live, while it trains.
 
-Trains a reduced stablelm-family model federatedly for a few rounds (so the
-served weights really come out of Algorithm 1's post-proximal global model),
-then runs batched prefill+decode through the serving engine.
+The serving plane in one file:
+
+  1. a training thread runs Algorithm 1 rounds and publishes the
+     post-proximal global model into a :class:`SnapshotStore` after every
+     commit (atomic hot-swap: readers never block, never see a torn
+     plane);
+  2. a :class:`ServingEngine` subscribed to the store answers a stream of
+     requests through the continuous-batching scan decode, adopting newer
+     planes between decode segments -- each result records the snapshot
+     version it was served from;
+  3. when training finishes, the same engine keeps serving the final
+     plane statically.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
+import threading
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,36 +27,59 @@ from repro.core.algorithm import DProxConfig, global_params, init_state, \
 from repro.core.prox import L1
 from repro.data.synthetic import token_stream_heterogeneous
 from repro.models import transformer as T
-from repro.serving.engine import ServingEngine
+from repro.serving import Request, ServingEngine, SnapshotStore
 
 cfg = registry.get_smoke("stablelm_1_6b").with_overrides(
     param_dtype=jnp.float32)
 params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
 
-# --- brief federated training (4 clients, heterogeneous bigram corpora)
+# --- the snapshot plane: training publishes, serving subscribes
+store = SnapshotStore()
+
 n_clients, tau, seq = 4, 2, 64
 streams = token_stream_heterogeneous(n_clients, seq, 32, vocab=cfg.vocab,
                                      seed=0)
 fcfg = DProxConfig(tau=tau, eta=5e-2, eta_g=2.0)
 reg = L1(lam=1e-7)
 round_fn = jax.jit(make_round_fn(fcfg, reg, T.make_grad_fn(cfg)))
-state = init_state(params, n_clients)
-rng = np.random.default_rng(0)
-for r in range(10):
-    idx = rng.integers(0, streams.shape[1], size=(n_clients, tau, 4))
-    toks = streams[np.arange(n_clients)[:, None, None], idx]
-    batches = {"tokens": jnp.asarray(toks, jnp.int32)}
-    state, info = round_fn(state, batches)
-    if r % 3 == 0:
-        print(f"fed round {r}: loss {float(info['train_loss']):.3f}")
 
-served_params = global_params(reg, fcfg, state)
 
-# --- batched serving
-engine = ServingEngine(cfg, served_params, max_len=seq + 16)
+def train(rounds: int = 10) -> None:
+    """Federated rounds on heterogeneous bigram corpora; every round's
+    global model is published as the next snapshot version."""
+    state = init_state(params, n_clients)
+    rng = np.random.default_rng(0)
+    for r in range(rounds):
+        idx = rng.integers(0, streams.shape[1], size=(n_clients, tau, 4))
+        toks = streams[np.arange(n_clients)[:, None, None], idx]
+        state, info = round_fn(state, {"tokens": jnp.asarray(toks,
+                                                             jnp.int32)})
+        store.publish(global_params(reg, fcfg, state), round=r + 1)
+        if r % 3 == 0:
+            print(f"fed round {r}: loss {float(info['train_loss']):.3f} "
+                  f"-> published snapshot v{store.version}")
+
+
+trainer = threading.Thread(target=train, daemon=True)
+trainer.start()
+
+# --- serve WHILE training: the engine blocks only for the first plane,
+# then hot-swaps between decode segments as newer versions land
+engine = ServingEngine(cfg, params=None, snapshots=store, max_len=seq + 32)
+requests = [Request(id=i, prompt=streams[i % n_clients, 0, : 8 + 4 * i],
+                    max_new_tokens=8) for i in range(6)]
+results = engine.serve(requests, slots=2, segment=4)
+print("served during training (greedy continuations):")
+for r in results:
+    print(f"  req {r.id}: {r.tokens.tolist()}  [snapshot v"
+          f"{r.snapshot_version}]")
+
+trainer.join()
+
+# --- training done: the store holds the final plane, serving continues
 prompts = streams[:, 0, : seq // 2]  # one prompt per client distribution
-res = engine.generate(prompts, max_new_tokens=8, temperature=0.0)
-print("prompt tails + greedy continuations:")
+res = engine.generate(prompts, max_new_tokens=8)
+print(f"post-training (snapshot v{engine.snapshot_version}):")
 for i in range(prompts.shape[0]):
     print(f"  client {i}: ...{prompts[i, -6:].tolist()} -> "
           f"{res.tokens[i].tolist()}")

@@ -74,9 +74,11 @@ T_ACK = 3     # server -> worker: receipt (commit version, arrival time)
 T_MODEL = 4   # server -> worker: global server-role fields
 T_BYE = 5     # either direction: orderly shutdown
 T_RESULT = 6  # server: final result artifact (also the on-disk format)
+T_SNAP = 7    # server -> replica: one serving-snapshot delta or keyframe
 
 FRAME_TYPES = {T_HELLO: "hello", T_CHUNK: "chunk", T_ACK: "ack",
-               T_MODEL: "model", T_BYE: "bye", T_RESULT: "result"}
+               T_MODEL: "model", T_BYE: "bye", T_RESULT: "result",
+               T_SNAP: "snap"}
 
 # refuse absurd lengths before allocating: a foreign protocol's first 8
 # bytes interpreted as a length must not OOM the receiver

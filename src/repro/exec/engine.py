@@ -83,7 +83,7 @@ import numpy as np
 from repro.core.baselines import FedAlgorithm
 from repro.obs import trace as _trace
 from repro.exec.stages import (Asynchrony, Cohort, DownlinkComm, Placement,
-                               StageStack, UplinkComm)
+                               StageStack, UplinkComm, sink_blockers)
 from repro.exec.suppliers import BatchSupplier, as_supplier
 
 Batch = Any
@@ -538,6 +538,7 @@ class RoundEngine:
         self._donate_batches = False  # staged prefetch chunks (see run())
         self._uplink_sink = None  # per-chunk uplink hand-off (runtime)
         self._uplink_tap = None  # device-resident msgs of the last chunk
+        self._snapshot_sink = None  # per-chunk committed-state publication
 
     def _setup_async(self) -> None:
         """Resolve and validate clock/staleness/buffer/queue.  The async
@@ -872,17 +873,9 @@ class RoundEngine:
                     "uplink sink needs the split (local/server) engine "
                     "path; a fused or protocol round_fn never materializes "
                     "the uplink message")
-            blockers = []
-            if self.stack.asynchrony is not None:
-                blockers.append("asynchrony")
-            if self._cohort is not None:
-                blockers.append("cohort")
-            if self._use_active:
-                blockers.append("participation")
-            if self.stack.placement is not None:
-                blockers.append("placement")
-            if not self.config.jit:
-                blockers.append("jit=False")
+            blockers = sink_blockers(self.stack,
+                                     participation=self._use_active,
+                                     jit=self.config.jit, kind="uplink")
             if blockers:
                 raise ValueError(
                     "uplink sink is unsupported with stage(s): "
@@ -899,6 +892,42 @@ class RoundEngine:
         tap, self._uplink_tap = self._uplink_tap, None
         if tap is not None:
             self._uplink_sink(start_round, tap, state)
+
+    def set_snapshot_sink(self, sink) -> None:
+        """Register a per-chunk serving-snapshot publication hook: after
+        each committed chunk, ``sink(end_round, state)`` receives the round
+        index just completed and the committed post-chunk state, still
+        DEVICE-RESIDENT (fired before the engine's per-chunk host sync
+        where the execution path allows, so publication overlaps the
+        infos fetch).  ``repro.serving.SnapshotStore.engine_sink`` builds
+        the standard sink: publish an atomically-swapped, versioned plane
+        inference reads pick up between decode segments.
+
+        Unlike the uplink sink -- which must tap message traffic inside
+        the compiled scan -- this only reads state the engine holds at
+        every chunk boundary, so it composes with every stage combination
+        (async, cohort, participation, placement, eager) except the
+        protocol form (see :func:`repro.exec.stages.sink_blockers`).  The
+        sink must not mutate ``state``; snapshots published from it share
+        the engine's buffers.  Pass ``None`` to remove.
+        """
+        if sink is not None:
+            blockers = sink_blockers(self.stack,
+                                     participation=self._use_active,
+                                     jit=self.config.jit, kind="snapshot")
+            if blockers:
+                raise ValueError(
+                    "snapshot sink is unsupported with stage(s): "
+                    f"{', '.join(blockers)}; the protocol form bypasses "
+                    "the engine's chunk structure")
+        self._snapshot_sink = sink
+
+    def _fire_snapshot_sink(self, end_round: int, state) -> None:
+        if self._snapshot_sink is None:
+            return
+        with _trace.span("exec/snapshot_publish", "exec",
+                         end_round=int(end_round)):
+            self._snapshot_sink(end_round, state)
 
     def _set_donate_batches(self, donate: bool) -> None:
         """Flip batch donation, invalidating the compiled call when the
@@ -1147,6 +1176,7 @@ class RoundEngine:
                     state, infos = self._run_cohort_chunk(
                         state, supplier, start_round + done, c, rng,
                         use_stacked)
+                    self._fire_snapshot_sink(start_round + done + c, state)
                 elif use_stacked:
                     batches = supplier.sample_chunk(start_round + done, c,
                                                     rng)
@@ -1155,6 +1185,9 @@ class RoundEngine:
                     # sync: an overlapping sender starts fetching chunk k's
                     # bytes while this thread blocks on (and dispatches) k+1
                     self._fire_uplink_sink(start_round + done, state)
+                    # snapshot publication is device-resident too: readers
+                    # pick up the swapped plane while this thread syncs
+                    self._fire_snapshot_sink(start_round + done + c, state)
                     with _trace.span("exec/host_sync", "exec"):
                         infos = jax.device_get(infos)  # ONE host sync
                 else:
@@ -1174,6 +1207,7 @@ class RoundEngine:
                     state, infos = self._invoke_chunk(state, per_round,
                                                       active)
                     self._fire_uplink_sink(start_round + done, state)
+                    self._fire_snapshot_sink(start_round + done + c, state)
             per_round_infos = [{} for _ in range(c)]
             for k, v in infos.items():
                 arr = np.asarray(v)

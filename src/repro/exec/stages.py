@@ -276,3 +276,36 @@ class StageStack:
                                       self.downlink, self.asynchrony,
                                       self.cohort)
                      if s is not None)
+
+
+def sink_blockers(stack: StageStack, *, participation: bool, jit: bool,
+                  kind: str) -> Tuple[str, ...]:
+    """Stage names that make a per-chunk engine sink of ``kind``
+    unsupported (empty tuple = the sink composes with this stack).
+
+    ``"uplink"`` taps the compressed uplink messages INSIDE the compiled
+    scan, so anything that re-routes the uplink off the scan's straight
+    line blocks it: asynchrony (report buffers), cohort residency,
+    partial participation, placement, and the eager path.
+
+    ``"snapshot"`` only reads the committed post-chunk state the engine
+    already holds at every chunk boundary, so it composes with every
+    stage -- async, cohort, participation, placement, eager -- except the
+    protocol form, which bypasses the engine's chunk structure entirely.
+    """
+    if kind == "snapshot":
+        return ("protocol",) if stack.protocol else ()
+    if kind != "uplink":
+        raise ValueError(f"unknown sink kind {kind!r}")
+    blockers = []
+    if stack.asynchrony is not None:
+        blockers.append("asynchrony")
+    if stack.cohort is not None:
+        blockers.append("cohort")
+    if participation:
+        blockers.append("participation")
+    if stack.placement is not None:
+        blockers.append("placement")
+    if not jit:
+        blockers.append("jit=False")
+    return tuple(blockers)

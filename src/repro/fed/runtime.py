@@ -80,7 +80,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 __all__ = ["RuntimeArgs", "run_local", "run_server", "run_worker",
-           "run_pair", "shard_bounds", "add_runtime_args"]
+           "run_replica", "run_pair", "shard_bounds", "add_runtime_args"]
 
 
 # ---------------------------------------------------------------------------
@@ -132,6 +132,12 @@ class RuntimeArgs:
     encoding: str = "auto"    # auto | dense | sparse | palette
     throttle_bw: Optional[float] = None  # bytes/s pacing on the sender
     replay: bool = True       # server-side drift check (N == 1)
+    # serving replicas: read-only processes fed every committed server
+    # plane as T_SNAP frames (XOR-bit deltas against a per-connection
+    # shadow, dense keyframe every keyframe_every versions); each replica
+    # proves bitwise reconstruction against the server's final fields
+    replicas: int = 0
+    keyframe_every: int = 8
     timeout: float = 120.0
     # observability (repro.obs): a trace path enables span recording in
     # EVERY process; workers ship their buffers in the BYE frame and the
@@ -506,6 +512,14 @@ class _ServerState:
         self.rounds_done = 0
         self.max_drift = 0.0
         self.lock = threading.Lock()
+        # the serving plane: every commit publishes its fields snapshot
+        # (store versions track ledger versions one-to-one); replica
+        # connections block on wait_for and stream deltas off it
+        from repro.serving import SnapshotStore
+
+        self.store = SnapshotStore()
+        self.workers_left = a.workers
+        self.finished = threading.Event()
         self._replay_step = None
         self._replay_state = state0 if (a.replay and a.workers == 1) else None
         # the unified metrics surface: commit-path counters/histograms land
@@ -603,6 +617,8 @@ class _ServerState:
             self.snapshots[version] = dict(self.fields)
             self.rounds_done = max(self.rounds_done,
                                    frame["start_round"] + frame["rounds"])
+            self.store.publish(self.snapshots[version],
+                               round=self.rounds_done)
             t = obs_trace.now()
             if self._t_first is None:
                 self._t_first = t
@@ -639,14 +655,17 @@ class _ServerState:
 
 def _serve_conn(conn, srv: _ServerState, reports: dict,
                 traces: Optional[dict] = None) -> None:
-    """One worker connection, driven to BYE.  Runs on its own thread; the
-    commit path serializes on the server-state lock."""
+    """One worker OR replica connection, dispatched on its HELLO.  Runs on
+    its own thread; the commit path serializes on the server-state lock."""
     spec = None
     aux_spec = None
     try:
         ftype, hello = wire.recv_frame(conn)
         if ftype != wire.T_HELLO:
             raise wire.WireError(f"expected HELLO, got type {ftype}")
+        if hello.get("replica") is not None:
+            _serve_replica(conn, srv, hello, reports)
+            return
         if hello["spec"] is not None:
             spec = wire.spec_from_wire(hello["spec"])
         aux_spec = hello["aux_spec"]
@@ -663,6 +682,10 @@ def _serve_conn(conn, srv: _ServerState, reports: dict,
                 reports[tree["worker"]] = tree.get("report", {})
                 if traces is not None and tree.get("trace") is not None:
                     traces[tree["worker"]] = tree["trace"]
+                with srv.lock:
+                    srv.workers_left -= 1
+                    if srv.workers_left <= 0:
+                        srv.finished.set()
                 break
             if ftype != wire.T_CHUNK:
                 raise wire.WireError(f"unexpected frame type {ftype}")
@@ -679,6 +702,84 @@ def _serve_conn(conn, srv: _ServerState, reports: dict,
         conn.close()
 
 
+def _serve_replica(conn, srv: _ServerState, hello: dict,
+                   reports: dict) -> None:
+    """One replica connection: stream every committed serving snapshot as
+    a T_SNAP frame (delta against this connection's shadow, keyframe per
+    the cadence), then the final RESULT the replica proves itself against.
+
+    A late joiner is fine: the first frame any publisher emits is a dense
+    keyframe, and a delta's base is whatever was last shipped on THIS
+    connection -- versions skipped while encoding lag behind commits are
+    bridged by a single delta, never a gap.
+    """
+    from repro.serving import DeltaPublisher
+
+    a = srv.args
+    enc = a.encoding if a.encoding in wire.PLANE_ENCODINGS else "sparse"
+    pub = DeltaPublisher(keyframe_every=a.keyframe_every, encoding=enc)
+    rank = hello["replica"]
+    wire.send_frame(conn, wire.T_ACK, {"version": srv.ledger.version,
+                                       "srv_now": obs_trace.now()})
+    sent = 0
+    nbytes = 0
+    next_v = 1
+    while True:
+        snap = srv.store.wait_for(next_v, timeout=0.05)
+        if snap is None:
+            if srv.finished.is_set() and srv.store.version < next_v:
+                break
+            continue
+        frame = pub.encode(snap)
+        with obs_trace.span("serve/snap_send", "serve",
+                            version=snap.version, kind=frame["kind"]) as sp:
+            nb = wire.send_frame(conn, wire.T_SNAP, frame)
+            sp.set(nbytes=nb)
+        nbytes += nb
+        sent += 1
+        next_v = snap.version + 1
+    reports[f"replica{rank}"] = {"frames": sent, "bytes_sent": nbytes,
+                                 "last_version": next_v - 1}
+    wire.send_frame(conn, wire.T_RESULT, srv.result())
+
+
+def run_replica(a: RuntimeArgs, rank: int = 0) -> dict:
+    """One replica process: subscribe to the server's snapshot feed, apply
+    every T_SNAP frame (keyframe or XOR delta, digest-checked), and verify
+    the final reconstructed plane bitwise against the server's RESULT."""
+    from repro.serving import DeltaReplica
+
+    sock = _connect(a)
+    rep = DeltaReplica()
+    nbytes = 0
+    keyframes = 0
+    try:
+        wire.send_frame(sock, wire.T_HELLO,
+                        {"replica": rank, "n_total": a.clients})
+        ftype, _ack = wire.recv_frame(sock)
+        if ftype != wire.T_ACK:
+            raise wire.WireError(f"expected HELLO ACK, got type {ftype}")
+        while True:
+            buf = _recv_raw_frame(sock)
+            ftype, tree, _ = wire.decode_frame(buf)
+            if ftype == wire.T_RESULT:
+                result = tree
+                break
+            if ftype != wire.T_SNAP:
+                raise wire.WireError(f"unexpected frame type {ftype}")
+            nbytes += len(buf)
+            keyframes += int(tree["kind"] == "key")
+            rep.apply(tree)
+    finally:
+        sock.close()
+    ok = rep.plane is not None and _fields_bitwise(rep.plane,
+                                                   result["fields"])
+    return {"replica": rank, "ok": ok, "applied": rep.applied,
+            "skipped": rep.skipped, "version": rep.version,
+            "keyframes": keyframes, "bytes_received": nbytes,
+            "server_result": result}
+
+
 def _recv_raw_frame(sock) -> bytes:
     """Receive one frame's raw bytes (header + payload) so the server can
     account exact wire bytes before decoding."""
@@ -692,8 +793,10 @@ def _recv_raw_frame(sock) -> bytes:
 
 
 def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
-    """The server process: accept ``a.workers`` connections, drive each to
-    BYE, return the final result (also what each worker receives)."""
+    """The server process: accept ``a.workers + a.replicas`` connections
+    (each dispatched on its HELLO), drive workers to BYE and replicas to
+    the end of the snapshot stream, return the final result (also what
+    each worker and replica receives)."""
     owns_tracer = a.trace and not isinstance(obs_trace.get(),
                                              obs_trace.Tracer)
     tracer = obs_trace.install("server") if a.trace else None
@@ -702,7 +805,7 @@ def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
     lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
     lsock.bind((a.host, a.port))
-    lsock.listen(a.workers)
+    lsock.listen(a.workers + a.replicas)
     lsock.settimeout(a.timeout)
     port = lsock.getsockname()[1]
     if ready_cb is not None:
@@ -711,7 +814,7 @@ def run_server(a: RuntimeArgs, *, ready_cb=None) -> dict:
     traces: dict = {}
     threads = []
     try:
-        for _ in range(a.workers):
+        for _ in range(a.workers + a.replicas):
             conn, _addr = lsock.accept()
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             conn.settimeout(a.timeout)
@@ -778,6 +881,7 @@ def run_pair(a: RuntimeArgs) -> dict:
     procs = [_spawn(a, "server")]
     try:
         procs += [_spawn(a, "worker", rank=w) for w in range(1, a.workers)]
+        procs += [_spawn(a, "replica", rank=r) for r in range(a.replicas)]
         rep = run_worker(a, rank=0)
         for p in procs:
             rc = p.wait(timeout=a.timeout)
@@ -828,6 +932,11 @@ def add_runtime_args(ap: argparse.ArgumentParser) -> None:
                     help="pace the sender to this bandwidth (bytes/s)")
     ap.add_argument("--no-replay", action="store_true",
                     help="skip the server-side replay drift check")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serving replicas fed delta-compressed snapshot "
+                    "frames (each verifies bitwise reconstruction)")
+    ap.add_argument("--keyframe-every", type=int, default=8,
+                    help="dense keyframe cadence on the replica feed")
     ap.add_argument("--x32", action="store_true",
                     help="run in float32 (default float64)")
     ap.add_argument("--timeout", type=float, default=120.0)
@@ -849,7 +958,8 @@ def _from_ns(ns: argparse.Namespace) -> RuntimeArgs:
         rounds=ns.rounds, batch_size=ns.batch_size, host=ns.host,
         port=ns.port, workers=ns.workers, mode=ns.mode,
         encoding=ns.encoding, throttle_bw=ns.throttle_bw,
-        replay=not ns.no_replay, timeout=ns.timeout,
+        replay=not ns.no_replay, replicas=ns.replicas,
+        keyframe_every=ns.keyframe_every, timeout=ns.timeout,
         trace=ns.trace, metrics_jsonl=ns.metrics_jsonl)
 
 
@@ -863,6 +973,8 @@ def _to_argv(a: RuntimeArgs) -> list:
             "--rounds", str(a.rounds), "--host", a.host,
             "--port", str(a.port), "--workers", str(a.workers),
             "--mode", a.mode, "--encoding", a.encoding,
+            "--replicas", str(a.replicas),
+            "--keyframe-every", str(a.keyframe_every),
             "--timeout", str(a.timeout)]
     if a.batch_size is not None:
         argv += ["--batch-size", str(a.batch_size)]
@@ -895,7 +1007,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="multi-process federated runtime (see module docstring)")
     ap.add_argument("--role", default="pair",
-                    choices=["local", "server", "worker", "pair"])
+                    choices=["local", "server", "worker", "replica",
+                             "pair"])
     ap.add_argument("--rank", type=int, default=0)
     ap.add_argument("--check-parity", action="store_true",
                     help="(pair, workers=1) also run single-process and "
@@ -921,6 +1034,13 @@ def main(argv=None) -> int:
         print(f"worker[{ns.rank}]: wall={rep['wall_s']:.3f}s "
               f"sent={rep['bytes_sent']}B wait={rep['send_wait_s']:.3f}s")
         return 0
+    if ns.role == "replica":
+        rep = run_replica(a, rank=ns.rank)
+        print(f"replica[{ns.rank}]: applied={rep['applied']} "
+              f"keyframes={rep['keyframes']} recv={rep['bytes_received']}B "
+              f"v{rep['version']} "
+              f"reconstruction={'BITWISE' if rep['ok'] else 'MISMATCH'}")
+        return 0 if rep["ok"] else 1
     # pair
     rep = run_pair(a)
     res = rep["server_result"]

@@ -240,6 +240,11 @@ def main(argv=None):
     ap.add_argument("--metrics-jsonl", default=None, metavar="OUT.jsonl",
                     help="append one JSONL line per round plus a final "
                          "metrics-registry snapshot")
+    ap.add_argument("--publish-snapshots", action="store_true",
+                    help="publish the committed global model into a "
+                         "repro.serving.SnapshotStore after every chunk "
+                         "(the live-serving plane: a ServingEngine in the "
+                         "same process hot-swaps between decode segments)")
     args = ap.parse_args(argv)
 
     tracer = obs_trace.install("train") if args.trace else None
@@ -335,6 +340,13 @@ def main(argv=None):
                      queue_depth=args.queue_depth, plane=args.plane,
                      edges=args.edges, population=args.population,
                      cohort=args.cohort))
+    snapshots = None
+    if args.publish_snapshots:
+        from repro.serving import SnapshotStore
+
+        snapshots = SnapshotStore()
+        engine.set_snapshot_sink(
+            snapshots.engine_sink(select=engine.global_params))
     state = engine.init(params)
     rng = np.random.default_rng(args.seed)
 
@@ -402,6 +414,11 @@ def main(argv=None):
 
     print(f"done: final loss {last_loss:.4f}, "
           f"global-model sparsity {float(sparsity(final)):.3f}")
+    if snapshots is not None:
+        snap = snapshots.latest()
+        print(f"snapshots: {snapshots.version} published, latest "
+              f"v{snap.version} (round {snap.round}, "
+              f"{snap.age():.2f}s old)")
     if engine.population_store is not None:
         st_ = engine.population_store
         print(f"cohort: {engine.n_clients}/{population} clients resident, "

@@ -283,7 +283,9 @@ def attention_decode(p, cfg: AttnCfg, x, cache, cache_len):
 
     Returns (out (B,1,d), new_cache).  The cache buffer length T is either the
     max sequence (linear) or the sliding window (ring); ``cache_len`` is the
-    number of tokens already written (the new token's position).
+    number of tokens already written (the new token's position) -- a scalar
+    shared by the whole batch, or a ``(B,)`` vector of per-slot lengths (the
+    continuous-batching case: each batch row decodes at its own position).
     """
     if cfg.kind == "mla":
         return _mla_decode(p, cfg, x, cache, cache_len)
@@ -298,16 +300,22 @@ def attention_decode(p, cfg: AttnCfg, x, cache, cache_len):
     # write at the (possibly ring) slot
     k_buf = _write_slot(cache["k"], k_new, slot)
     v_buf = _write_slot(cache["v"], v_new, slot)
-    # valid positions: absolute kv index of each buffer slot
+    # valid positions: absolute kv index of each buffer slot.  With a
+    # vector cache_len the comparisons broadcast (B,1) against (T,) into a
+    # per-row (B,T) mask; the scalar case keeps its original (T,) shapes.
     idx = jnp.arange(T)
+    cl = cache_len[..., None] if jnp.ndim(cache_len) else cache_len
     if cfg.window is not None and T == cfg.window:
         # ring buffer: slot j holds absolute position p where p % T == j and
         # p <= cache_len; valid iff cache_len - T < p_abs <= cache_len
-        p_abs = cache_len - ((cache_len - idx) % T)
-        valid = (p_abs >= 0) & (p_abs >= cache_len - T + 1)
+        p_abs = cl - ((cl - idx) % T)
+        valid = (p_abs >= 0) & (p_abs >= cl - T + 1)
     else:
-        valid = idx <= cache_len
-    mask = valid[None, None, None, None, :]  # (1,1,1,1,T) -> bkrst broadcast
+        valid = idx <= cl
+    if jnp.ndim(cache_len):
+        mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
+    else:
+        mask = valid[None, None, None, None, :]  # (1,1,1,1,T)
     scale = 1.0 / math.sqrt(cfg.head_dim)
     out = _sdpa_masked_flat(q, k_buf, v_buf, mask, scale, cfg.logit_softcap)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
@@ -315,10 +323,16 @@ def attention_decode(p, cfg: AttnCfg, x, cache, cache_len):
 
 
 def _write_slot(buf, new, slot):
-    """buf: (B,T,...); new: (B,1,...); write new at index ``slot`` along axis 1."""
+    """buf: (B,T,...); new: (B,1,...); write new at index ``slot`` along
+    axis 1.  ``slot`` is a scalar (whole batch writes one column) or a
+    ``(B,)`` vector (each row writes its own column)."""
     T = buf.shape[1]
-    onehot = (jnp.arange(T) == slot).astype(buf.dtype)  # (T,)
-    onehot = onehot.reshape((1, T) + (1,) * (buf.ndim - 2))
+    if jnp.ndim(slot):
+        onehot = (jnp.arange(T)[None, :] == slot[:, None]).astype(buf.dtype)
+        onehot = onehot.reshape(onehot.shape + (1,) * (buf.ndim - 2))
+    else:
+        onehot = (jnp.arange(T) == slot).astype(buf.dtype)  # (T,)
+        onehot = onehot.reshape((1, T) + (1,) * (buf.ndim - 2))
     return buf * (1 - onehot) + new.astype(buf.dtype) * onehot
 
 
@@ -360,8 +374,12 @@ def _mla_decode(p, cfg: AttnCfg, x, cache, cache_len):
     logits = logits * scale
     if cfg.logit_softcap is not None:
         logits = softcap(logits, cfg.logit_softcap)
-    valid = jnp.arange(T) <= cache_len
-    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    if jnp.ndim(cache_len):  # per-slot lengths: (B,T) mask over (B,H,S,T)
+        valid = jnp.arange(T)[None, :] <= cache_len[:, None]
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    else:
+        valid = jnp.arange(T) <= cache_len
+        logits = jnp.where(valid[None, None, None, :], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(ckv.dtype)
     out_lat = jnp.einsum("bhst,btr->bshr", probs, ckv)  # (B,1,H,r)
     out = jnp.einsum("bshr,rhk->bshk", out_lat, p["w_uv"])  # (B,1,H,v)

@@ -154,6 +154,29 @@ class Histogram:
     def mean(self) -> float:
         return self.sum / self.n if self.n else 0.0
 
+    def quantile(self, q: float) -> float:
+        """Conservative q-quantile from the bucket counts: the UPPER bound
+        of the bin holding the q-th observation (so a reported p99 latency
+        is never optimistic).  Overflow bins return their lower edge --
+        the histogram cannot bound them from above.  0.0 with no data."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"histogram {self.name}: quantile {q} not in [0,1]")
+        with self._lock:
+            counts = self.counts.copy()
+            n = self.n
+        if n == 0:
+            return 0.0
+        rank = q * n
+        cum = np.cumsum(counts)
+        i = int(np.searchsorted(cum, rank, side="left"))
+        i = min(i, len(counts) - 1)
+        if self.buckets is not None:
+            # integer buckets: bin i covers [i, i+1); last bin is overflow
+            return float(i + 1 if i < self.buckets - 1 else i)
+        # edge bins: bin 0 = (-inf, e0], bin i = (e_{i-1}, e_i],
+        # final bin = (e_last, inf) -> bounded only from below
+        return float(self.edges[min(i, len(self.edges) - 1)])
+
     def snapshot(self) -> dict:
         return {"counts": [int(x) for x in self.counts],
                 "n": int(self.n), "sum": float(self.sum),

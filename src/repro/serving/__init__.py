@@ -1,0 +1,26 @@
+"""Live serving plane: snapshot hot-swap, delta publication, fast decode.
+
+The deployable artifact of Algorithm 1 is the server's post-proximal
+global model.  This package turns training commits into serving traffic:
+
+  * :mod:`repro.serving.snapshot` -- the atomically-swapped, versioned
+    :class:`ServingSnapshot` plane a :class:`repro.exec.RoundEngine`
+    publishes into via ``set_snapshot_sink``;
+  * :mod:`repro.serving.delta` -- bitwise XOR-delta publication to
+    replicas (``DownlinkCompressor``-style shadow state over the
+    :mod:`repro.comm.wire` frame encodings, periodic dense keyframes);
+  * :mod:`repro.serving.engine` -- the batched decode engine: jitted
+    ``lax.scan`` segments, continuous-batching request admission,
+    per-slot cache lengths.
+"""
+from repro.serving.delta import (DeltaPublisher, DeltaReplica, SnapshotGap,
+                                 apply_delta, tree_digest, xor_delta)
+from repro.serving.engine import GenerationResult, Request, RequestResult, \
+    ServingEngine
+from repro.serving.snapshot import ServingSnapshot, SnapshotStore
+
+__all__ = [
+    "ServingSnapshot", "SnapshotStore", "ServingEngine", "GenerationResult",
+    "Request", "RequestResult", "DeltaPublisher", "DeltaReplica",
+    "SnapshotGap", "xor_delta", "apply_delta", "tree_digest",
+]

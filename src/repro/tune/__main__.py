@@ -14,7 +14,7 @@ import sys
 from repro.tune.records import validate_record
 from repro.tune.runner import TrialRunner
 from repro.tune.search import tune
-from repro.tune.space import TrialPoint, Workload
+from repro.tune.space import SearchSpace, TrialPoint, Workload
 
 
 class _SurrogateRunner(TrialRunner):
@@ -92,14 +92,20 @@ def main(argv=None) -> int:
 
     workload = Workload(clock="straggler" if args.async_ else "none")
     runner = None
+    space = None
     if args.dry:
         runner = _SurrogateRunner(workload, rounds=args.rounds)
     elif args.processes:
         runner = TrialRunner(workload, rounds=args.rounds,
                              processes=args.processes)
+        # widen the space: worker count and wire mode become live axes,
+        # so the search itself decides whether the wire pays for overlap
+        space = SearchSpace(workers=(0, args.processes),
+                            wire_mode=("blocking", "overlapped"))
     # --dry never touches the record cache: the surrogate's objective is
     # not comparable to measured records, so it neither hits nor saves
-    record = tune(workload, budget=args.budget, rounds=args.rounds,
+    record = tune(workload, space=space, budget=args.budget,
+                  rounds=args.rounds,
                   seed=args.seed, runner=runner, cache_dir=args.cache_dir,
                   force=args.force or args.dry, save=not args.dry,
                   log=print)

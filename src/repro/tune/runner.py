@@ -90,7 +90,21 @@ class TrialRunner:
     def _setup(self):
         if self._problem is not None:
             return self._problem
-        from benchmarks.common import logreg_problem
+        try:
+            from benchmarks.common import logreg_problem
+        except ModuleNotFoundError:
+            # benchmarks/ lives at the repo root, next to src/: importable
+            # when cwd is the root (python -m ...), not when only src/ is
+            # on the path (e.g. the examples).  Resolve it relative to the
+            # installed package.
+            import os
+            import sys
+
+            root = os.path.dirname(os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__)))))
+            if os.path.isdir(os.path.join(root, "benchmarks")):
+                sys.path.insert(0, root)
+            from benchmarks.common import logreg_problem
 
         from repro.core.algorithm import DProxConfig
         from repro.exec import ArraySupplier
@@ -122,7 +136,7 @@ class TrialRunner:
     # -- measurement ------------------------------------------------------
 
     def measure(self, point: TrialPoint) -> TrialResult:
-        if self.processes:
+        if point.workers or self.processes:
             return self._measure_processes(point)
         engine, params0, sup = self._engine(point)
         state = engine.init(params0)
@@ -177,6 +191,7 @@ class TrialRunner:
         transport = point.transport if point.transport in ("dense",
                                                            "topk") \
             else "dense"
+        workers = point.workers or self.processes
         with tempfile.TemporaryDirectory() as td:
             trace_path = os.path.join(td, "trace.json")
             a = RuntimeArgs(clients=w.n_clients, m=w.m_per_client,
@@ -185,7 +200,8 @@ class TrialRunner:
                             tau=w.tau, transport=transport,
                             ratio=point.ratio, plane=point.plane,
                             chunk=point.chunk_rounds, rounds=self.rounds,
-                            workers=self.processes, trace=trace_path)
+                            workers=workers, mode=point.wire_mode,
+                            trace=trace_path)
             rep = run_pair(a)
             with open(trace_path) as f:
                 doc = json.load(f)

@@ -23,6 +23,7 @@ from typing import Optional, Tuple
 
 TRANSPORTS = ("dense", "topk", "randk", "quantize")
 SCHEDULES = ("constant", "linear", "bucketed")
+WIRE_MODES = ("blocking", "overlapped")
 
 
 @dataclass(frozen=True)
@@ -59,7 +60,10 @@ class TrialPoint:
     ``buffer_frac`` is the FedBuff buffer as a fraction of the cohort
     (1.0 = wait for everyone); ``queue_depth=0`` keeps the one-slot
     buffer.  Both, plus ``staleness``/``schedule``, are live only on async
-    workloads.
+    workloads.  ``workers=0`` measures in-process; ``workers>0`` runs the
+    trial through the multi-process runtime (:mod:`repro.fed.runtime`,
+    real bytes on a socket) with ``wire_mode`` choosing blocking vs
+    overlapped uplink -- live only then (in-process trials have no wire).
     """
 
     chunk_rounds: int = 16
@@ -71,6 +75,8 @@ class TrialPoint:
     queue_depth: int = 0
     staleness: str = "uniform"
     schedule: str = "constant"
+    workers: int = 0
+    wire_mode: str = "overlapped"
 
     def key(self) -> str:
         """Canonical JSON identity (dict-stable, hash-free)."""
@@ -97,6 +103,8 @@ class TrialPoint:
             bits.append(self.staleness)
         if self.schedule != "constant":
             bits.append(f"sched:{self.schedule}")
+        if self.workers:
+            bits.append(f"proc{self.workers}/{self.wire_mode}")
         return "+".join(bits)
 
 
@@ -115,6 +123,12 @@ class SearchSpace:
     queue_depth: Tuple[int, ...] = (0, 2)
     staleness: Tuple[str, ...] = ("uniform", "poly")
     schedule: Tuple[str, ...] = ("constant", "linear", "bucketed")
+    # multi-process axes: singleton defaults keep the historical space
+    # (and its cached record signatures' shape) in-process-only; widen to
+    # e.g. workers=(0, 2) + wire_mode=("blocking", "overlapped") to let
+    # the search trade wire overlap against compute
+    workers: Tuple[int, ...] = (0,)
+    wire_mode: Tuple[str, ...] = ("overlapped",)
 
     def validate(self) -> None:
         for t in self.transport:
@@ -128,9 +142,24 @@ class SearchSpace:
         for r in self.ratio:
             if not 0.0 < r <= 1.0:
                 raise ValueError(f"ratio {r} outside (0, 1]")
+        for m in self.wire_mode:
+            if m not in WIRE_MODES:
+                raise ValueError(f"unknown wire mode {m!r} in space "
+                                 f"(valid: {WIRE_MODES})")
+        for w in self.workers:
+            if w < 0:
+                raise ValueError(f"workers {w} must be >= 0")
 
     def signature(self) -> dict:
-        return asdict(self)
+        """The cache-key identity of this space.  Axes still at their
+        inert singleton defaults (``workers=(0,)``, the in-process-only
+        space) are omitted, so records written before an axis existed
+        keep cache-hitting the space that cannot exercise it."""
+        sig = asdict(self)
+        if tuple(sig["workers"]) == (0,):
+            del sig["workers"]
+            del sig["wire_mode"]
+        return sig
 
     # -- canonicalization --------------------------------------------------
 
@@ -155,6 +184,17 @@ class SearchSpace:
             # full buffer + one slot = the zero-delay regime: staleness and
             # the schedule never see a non-zero age
             p = replace(p, staleness="uniform", schedule="constant")
+        if p.workers == 0:
+            # no wire, no wire mode
+            p = replace(p, wire_mode="overlapped")
+        else:
+            # the multi-process runtime runs synchronous engines over
+            # dense/topk leaf-granular transports; pin what it cannot vary
+            if p.transport not in ("dense", "topk"):
+                p = replace(p, transport="dense", ratio=1.0)
+            p = replace(p, granularity="leaf", buffer_frac=1.0,
+                        queue_depth=0, staleness="uniform",
+                        schedule="constant")
         return p
 
     def default_point(self, workload: Workload) -> TrialPoint:
@@ -179,6 +219,8 @@ class SearchSpace:
             queue_depth=pick(self.queue_depth),
             staleness=pick(self.staleness),
             schedule=pick(self.schedule),
+            workers=pick(self.workers),
+            wire_mode=pick(self.wire_mode),
         ), workload)
 
     def neighbors(self, p: TrialPoint, rng, workload: Workload,
@@ -195,6 +237,8 @@ class SearchSpace:
             "queue_depth": self.queue_depth,
             "staleness": self.staleness,
             "schedule": self.schedule,
+            "workers": self.workers,
+            "wire_mode": self.wire_mode,
         }
         names = sorted(axes)
         for _ in range(tries):
